@@ -1,0 +1,81 @@
+"""Fig. 4 — Beam Search vs Brute-Force vs Random-Fit: latency and planner
+processing time vs number of devices (MobileNet-V2, ESP-NOW).
+
+Brute force explores C(L-1, N-1) configurations — the paper reports
+~7857 s at N=6; we run it exactly up to N=5 and cap the candidate count
+beyond that (the exact optimum is still certified by the O(L^2 N) DP)."""
+
+from __future__ import annotations
+
+import math
+
+from repro.core.planner import plan_split
+from repro.core.profiles import paper_cost_model
+
+DEVICES = (2, 3, 4, 5, 6)
+BRUTE_EXACT_UPTO = 5
+BRUTE_CAP = 400_000
+
+
+def run() -> list[dict]:
+    m = paper_cost_model("mobilenet_v2", "esp_now")
+    rows = []
+    for n in DEVICES:
+        beam = plan_split(m, n, solver="beam", beam_width=8)
+        # Random-Fit averaged over 16 draws (a single draw is seed noise;
+        # the paper's >6x figure corresponds to an unlucky draw shipping
+        # early-layer activations)
+        rand_lats = [plan_split(m, n, solver="random_fit", seed=s).total_latency_s
+                     for s in range(16)]
+        finite = [x for x in rand_lats if not math.isinf(x)]
+        rand_mean = sum(finite) / len(finite) if finite else float("inf")
+        rand_worst = max(finite) if finite else float("inf")
+
+        class _R:  # lightweight record matching the plan interface used below
+            total_latency_s = rand_mean
+
+        rand = _R()
+        dp = plan_split(m, n, solver="optimal_dp")
+        kwargs = {} if n <= BRUTE_EXACT_UPTO else {"max_candidates": BRUTE_CAP}
+        brute = plan_split(m, n, solver="brute_force", **kwargs)
+        L = m.profile.num_layers
+        rows.append({
+            "devices": n,
+            "beam_s": round(beam.total_latency_s, 3),
+            "brute_s": round(brute.total_latency_s, 3),
+            "random_s": (None if math.isinf(rand.total_latency_s)
+                         else round(rand.total_latency_s, 3)),
+            "random_worst_s": (None if math.isinf(rand_worst)
+                               else round(rand_worst, 3)),
+            "optimal_s": round(dp.total_latency_s, 3),
+            "beam_ms": round(beam.planner_time_s * 1e3, 1),
+            "brute_ms": round(brute.planner_time_s * 1e3, 1),
+            "dp_ms": round(dp.planner_time_s * 1e3, 1),
+            "brute_candidates": math.comb(L - 1, n - 1),
+            "brute_exact": n <= BRUTE_EXACT_UPTO,
+        })
+    return rows
+
+
+def main():
+    print("\n=== Fig. 4: beam vs brute-force vs random-fit (MobileNetV2, ESP-NOW) ===")
+    for r in run():
+        rnd = r["random_s"] if r["random_s"] is not None else "inf"
+        note = "" if r["brute_exact"] else f" (capped; C={r['brute_candidates']:.2e})"
+        print(f"N={r['devices']}: beam {r['beam_s']}s/{r['beam_ms']}ms  "
+              f"brute {r['brute_s']}s/{r['brute_ms']}ms{note}  "
+              f"random {rnd}s  optimal(DP) {r['optimal_s']}s/{r['dp_ms']}ms")
+    rows = run()
+    r5 = next(r for r in rows if r["devices"] == 5)
+    print(f"claim 'beam near-optimal at N=5': gap "
+          f"{100 * (r5['beam_s'] / r5['optimal_s'] - 1):.1f}% vs optimum; "
+          f"planner {r5['beam_ms']:.0f} ms (paper ~60-100 ms)")
+    r6 = next(r for r in rows if r["devices"] == 6)
+    if r6["random_s"]:
+        print(f"claim 'beam >> random at N=6': mean random/beam = "
+              f"{r6['random_s'] / r6['beam_s']:.2f}x, worst draw = "
+              f"{r6['random_worst_s'] / r6['beam_s']:.2f}x (paper reports >6x)")
+
+
+if __name__ == "__main__":
+    main()

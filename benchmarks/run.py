@@ -1,0 +1,61 @@
+"""Benchmark orchestrator: one section per paper table/figure + the
+roofline and beyond-paper planner benchmarks.
+
+Emits ``name,us_per_call,derived`` CSV lines at the end (one per
+benchmark row) in addition to the human-readable sections."""
+
+from __future__ import annotations
+
+import time
+
+
+def main() -> None:
+    from benchmarks import (
+        fig3_heuristics,
+        fig4_beam_vs_brute,
+        planner_tpu,
+        roofline,
+        table2_transmission,
+        table3_processing,
+        table4_rtt,
+    )
+
+    csv_lines = ["name,us_per_call,derived"]
+
+    def timed(name, mod, derive):
+        t0 = time.perf_counter()
+        rows = mod.run()
+        us = (time.perf_counter() - t0) * 1e6 / max(1, len(rows))
+        mod.main()
+        for i, r in enumerate(rows):
+            csv_lines.append(f"{name}[{i}],{us:.1f},{derive(r)}")
+        return rows
+
+    timed("table2_transmission", table2_transmission,
+          lambda r: f"{r['protocol']}/{r['split']}={r['model_ms']}ms"
+                    f"/pk{r['model_packets']}")
+    timed("table3_processing", table3_processing,
+          lambda r: f"dev{r['device']}_infer={r['inference_ms']}ms")
+    timed("table4_rtt", table4_rtt,
+          lambda r: f"{r['protocol']}_rtt={r['rtt_s']}s_err{r['rtt_err_pct']}%")
+    timed("fig3_heuristics", fig3_heuristics,
+          lambda r: f"{r['model']}/{r['solver']}/N{r['devices']}="
+                    f"{r['latency_s']}s")
+    timed("fig4_beam_vs_brute", fig4_beam_vs_brute,
+          lambda r: f"N{r['devices']}_beam={r['beam_s']}s_brute={r['brute_s']}s")
+    timed("planner_tpu", planner_tpu,
+          lambda r: f"{r['arch']}/{r['link']}_gain={r['gain_vs_uniform_pct']}%")
+    try:
+        timed("roofline", roofline,
+              lambda r: f"{r['arch']}/{r['shape']}_dom={r['dominant']}"
+                        f"_frac={r['roofline_frac']:.2f}")
+    except Exception as e:  # dry-run artifacts may not exist yet
+        print(f"[roofline] skipped: {e}")
+
+    print("\n=== CSV ===")
+    for line in csv_lines:
+        print(line)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Table II — internode transmission time per (protocol x split point).
+
+Reproduces packet counts exactly from activation byte sizes and MTUs, and
+Eq. 7 latencies from the calibrated link profiles. Paper values are
+printed side-by-side with relative error."""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core.profiles import PROTOCOLS, TABLE2_CHUNKS
+
+SPLITS = {
+    "block_2_expand": 56 * 56 * 48,
+    "block_15_project_BN": 7 * 7 * 56,
+    "block_16_project_BN": 7 * 7 * 112,
+}
+
+# (latency_ms, n_packets) from the paper, keyed (protocol, chunk, split)
+PAPER = {
+    ("udp", 1472, "block_2_expand"): (145.1, 103),
+    ("udp", 1460, "block_2_expand"): (83.9, 104),
+    ("udp", 1200, "block_2_expand"): (98.3, 126),
+    ("udp", 1472, "block_15_project_BN"): (2.26, 2),
+    ("udp", 1460, "block_15_project_BN"): (1.4, 2),
+    ("udp", 1200, "block_15_project_BN"): (2.2, 3),
+    ("udp", 1472, "block_16_project_BN"): (5.2, 4),
+    ("udp", 1460, "block_16_project_BN"): (3.2, 4),
+    ("udp", 1200, "block_16_project_BN"): (3.7, 5),
+    ("tcp", 1472, "block_2_expand"): (558.7, 103),
+    ("tcp", 1460, "block_2_expand"): (563.3, 104),
+    ("tcp", 1200, "block_2_expand"): (393.9, 126),
+    ("tcp", 1472, "block_15_project_BN"): (8.6, 2),
+    ("tcp", 1460, "block_15_project_BN"): (8.5, 2),
+    ("tcp", 1200, "block_15_project_BN"): (8.8, 3),
+    ("tcp", 1472, "block_16_project_BN"): (19.2, 4),
+    ("tcp", 1460, "block_16_project_BN"): (19.3, 4),
+    ("tcp", 1200, "block_16_project_BN"): (15.719, 5),
+    ("esp_now", 250, "block_2_expand"): (1897.0, 603),
+    ("esp_now", 250, "block_15_project_BN"): (34.6, 11),
+    ("esp_now", 250, "block_16_project_BN"): (69.2, 22),
+    ("ble", 512, "block_2_expand"): (7305.94, 603),
+    ("ble", 512, "block_15_project_BN"): (148.9, 11),
+    ("ble", 512, "block_16_project_BN"): (272.9, 11),
+}
+
+
+def run() -> list[dict]:
+    rows = []
+    for proto, chunks in TABLE2_CHUNKS.items():
+        base = PROTOCOLS[proto]
+        for chunk in chunks:
+            link = replace(base, mtu_bytes=chunk)
+            for split, nbytes in SPLITS.items():
+                got_ms = link.transmission_latency_s(nbytes) * 1e3
+                got_pk = link.packets(nbytes)
+                paper_ms, paper_pk = PAPER.get((proto, chunk, split), (None, None))
+                rows.append({
+                    "protocol": proto, "chunk": chunk, "split": split,
+                    "bytes": nbytes, "model_ms": round(got_ms, 2),
+                    "model_packets": got_pk,
+                    "paper_ms": paper_ms, "paper_packets": paper_pk,
+                    "packets_exact": got_pk == paper_pk if paper_pk else None,
+                })
+    return rows
+
+
+def main():
+    print("\n=== Table II: transmission latency / packets per split ===")
+    print(f"{'proto':8s} {'chunk':>5s} {'split':22s} {'model':>10s} {'paper':>10s} "
+          f"{'pk(model/paper)':>16s}")
+    for r in run():
+        pk = f"{r['model_packets']}/{r['paper_packets']}"
+        paper = f"{r['paper_ms']:.1f}ms" if r["paper_ms"] else "-"
+        print(f"{r['protocol']:8s} {r['chunk']:5d} {r['split']:22s} "
+              f"{r['model_ms']:9.1f}ms {paper:>10s} {pk:>16s}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Table III — device-local processing breakdown at the paper's two-device
+split (block_16_project_BN), from the calibrated ESP32 profile."""
+
+from __future__ import annotations
+
+from repro.core.latency import rtt_breakdown
+from repro.core.profiles import ESP32, mobilenet_cost_profile, paper_cost_model
+
+PAPER = {
+    "model_load_ms": (0.0001, 0.01),
+    "input_load_ms": (9.8, 0.0001),
+    "tensor_alloc_ms": (43.0, 10.0),
+    "inference_ms": (3053.75, 437.0),
+    "buffering_ms": (0.02, None),
+}
+
+
+def run() -> list[dict]:
+    prof = mobilenet_cost_profile()
+    idx = next(i for i, lc in enumerate(prof.layers)
+               if lc.name == "block_16_project_BN") + 1
+    L = prof.num_layers
+    segs = [(1, idx), (idx + 1, L)]
+    rows = []
+    for dev_i, (a, b) in enumerate(segs, start=1):
+        infer = prof.segment_infer_s(a, b)
+        pbytes = prof.segment_param_bytes(a, b)
+        wbytes = prof.segment_work_bytes(a, b)
+        act = prof.boundary_act_bytes(b)
+        alloc = ESP32.t_tensor_alloc_s + wbytes * ESP32.tensor_alloc_s_per_byte
+        buf = ESP32.t_buffer_s + (act * ESP32.buffer_s_per_byte if b < L else 0.0)
+        rows.append({
+            "device": dev_i,
+            "model_load_ms": round(ESP32.t_model_load_s * 1e3, 4),
+            "input_load_ms": round(ESP32.t_input_load_s * 1e3, 2) if dev_i == 1 else 0.0,
+            "tensor_alloc_ms": round(alloc * 1e3, 2),
+            "inference_ms": round(infer * 1e3, 2),
+            "buffering_ms": round(buf * 1e3, 3) if b < L else None,
+            "segment_param_kb": round(pbytes / 1e3, 1),
+            "paper_inference_ms": PAPER["inference_ms"][dev_i - 1],
+        })
+    return rows
+
+
+def main():
+    print("\n=== Table III: processing-time breakdown (block_16_project_BN split) ===")
+    for r in run():
+        print(f"device {r['device']}: load {r['model_load_ms']}ms  "
+              f"input {r['input_load_ms']}ms  alloc {r['tensor_alloc_ms']}ms  "
+              f"infer {r['inference_ms']}ms (paper {r['paper_inference_ms']}ms)  "
+              f"buffer {r['buffering_ms']}ms  params {r['segment_param_kb']}kB")
+
+
+if __name__ == "__main__":
+    main()

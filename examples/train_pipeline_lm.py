@@ -1,0 +1,96 @@
+"""End-to-end training driver: a ~100M-param LM trained for a few hundred
+steps with the fault-tolerant runtime, on a learnable synthetic stream.
+
+Demonstrates the full substrate: config -> data pipeline -> microbatched
+train step -> checkpointing (with one simulated crash + exact resume) ->
+beam-search pipeline planning for the same model on a TPU cost profile.
+
+Run: PYTHONPATH=src python examples/train_pipeline_lm.py [--steps 300]
+"""
+
+import argparse
+import tempfile
+
+import numpy as np
+
+from repro.checkpoint.store import CheckpointStore
+from repro.core.planner import plan_pipeline
+from repro.core.profiles import DCN, ICI
+from repro.data.pipeline import MarkovLMData
+from repro.models.config import ModelConfig
+from repro.models.graph import arch_layer_graph
+from repro.runtime.train_loop import Trainer, TrainLoopConfig
+
+# ~100M params: 12L x d512 (embeddings dominate at vocab 8192)
+CFG = ModelConfig(
+    name="lm-100m", family="dense", n_layers=12, d_model=512, n_heads=8,
+    n_kv_heads=8, d_ff=2048, vocab=8192, head_dim=64, dtype="float32",
+    remat=False, kv_chunk=128, q_chunk=128, pad_vocab_to=0,
+)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--vocab", type=int, default=CFG.vocab,
+                    help="shrink for quick CPU demos (learning needs "
+                         "tokens ~ vocab x branch x 10)")
+    args = ap.parse_args()
+
+    import dataclasses
+
+    cfg = dataclasses.replace(CFG, vocab=args.vocab)
+    print(f"model: {cfg.name} ~{cfg.n_params / 1e6:.0f}M params (vocab {cfg.vocab})")
+    data = MarkovLMData(cfg, global_batch=args.batch, seq_len=args.seq, branch=4)
+
+    from repro.optim import AdamWConfig
+
+    opt_cfg = AdamWConfig(lr=1e-3)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = CheckpointStore(tmp, keep=2)
+        loop = TrainLoopConfig(total_steps=args.steps,
+                               ckpt_every=max(5, args.steps // 6), log_every=25)
+
+        # phase 1: train, then simulate a node failure at 60% progress
+        crash_at = int(args.steps * 0.6)
+
+        class Crash(RuntimeError):
+            pass
+
+        def failure(step):
+            if step == crash_at:
+                print(f"!! injected node failure at step {step}")
+                raise Crash()
+
+        t = Trainer(cfg, data, store, loop, opt_cfg=opt_cfg, failure_hook=failure)
+        try:
+            t.run()
+        except Crash:
+            pass
+        print(f"restarting from checkpoint step {store.latest_step()}")
+
+        # phase 2: resume to completion — the loop restores and continues
+        t2 = Trainer(cfg, data, store, loop, opt_cfg=opt_cfg)
+        hist = t2.run()
+        losses = [r.loss for r in t2.history]
+        print(f"resumed at step {hist[0].step}; finished {hist[-1].step + 1} steps")
+        first = np.mean(losses[:10])
+        last = np.mean(losses[-10:])
+        print(f"loss: {first:.3f} -> {last:.3f} "
+              f"({'LEARNING' if last < first - 0.05 else 'no progress?!'})")
+        stragglers = [r.step for r in hist if r.straggler]
+        if stragglers:
+            print(f"straggler steps flagged: {stragglers[:5]}...")
+
+    # phase 3: how would the paper's planner pipeline THIS model on TPU?
+    g = arch_layer_graph(cfg, batch=256, seq=4096)
+    for link in (ICI, DCN):
+        plan = plan_pipeline(g, n_stages=4, chips_per_stage=4, link=link)
+        print(f"beam PP plan over {link.name}: splits={plan.splits} "
+              f"bottleneck={plan.objective_cost_s * 1e3:.2f} ms/stage")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Core: the paper's contribution — split-latency model, solvers, planner.
+
+Public API:
+  latency    — Eq. 4-8 cost model (LinkProfile / DeviceProfile / SplitCostModel)
+  solvers    — beam / greedy / first_fit / random_fit / brute_force / optimal_dp
+  planner    — plan_split (IoT), plan_pipeline (TPU PP), compare_solvers
+  profiles   — paper-calibrated ESP32 + protocol tables; TPU v5e constants
+  executor   — run_split / run_unsplit segment execution with wire simulation
+  quantization — int8 PTQ + activation wire format
+"""
+
+from repro.core.latency import (  # noqa: F401
+    DeviceProfile,
+    LayerCost,
+    LinkProfile,
+    ModelCostProfile,
+    RTTBreakdown,
+    SplitCostModel,
+    rtt_breakdown,
+)
+from repro.core.planner import (  # noqa: F401
+    SegmentPlan,
+    SplitPlan,
+    compare_solvers,
+    plan_pipeline,
+    plan_split,
+    tpu_cost_profile,
+    uniform_split,
+)
+from repro.core.solvers import (  # noqa: F401
+    SOLVERS,
+    SolverResult,
+    beam_search,
+    brute_force,
+    first_fit_search,
+    greedy_search,
+    optimal_dp,
+    random_fit,
+    total_cost,
+)

@@ -1,0 +1,167 @@
+"""Adaptive split management — the paper's stated future work, built.
+
+  "Future work will build a dynamic, adaptive framework that selects
+   protocols, activation chunk sizes, and split points at runtime based
+   on network conditions, and device resources."  (Sec. VI)
+
+Three pieces:
+
+* :class:`LinkEstimator` — online EWMA estimation of per-packet time and
+  loss from observed hop latencies (the runtime's view of "network
+  conditions"); exposes a re-fitted :class:`LinkProfile`.
+
+* :func:`optimize_chunk_size` — per-protocol activation chunk-size
+  selection: Eq. 7 is piecewise in ceil(L/chunk), so the best chunk for a
+  given split plan is NOT always the MTU when per-packet overhead is
+  amortized differently across the plan's cut sizes (the Table II
+  1460-vs-1200 inversion).
+
+* :class:`AdaptiveSplitManager` — holds the current plan; every
+  ``observe()`` feeds hop measurements to the estimator; when the
+  estimated end-to-end latency of the current plan drifts more than
+  ``replan_threshold`` from the best achievable plan (re-solved with Beam
+  Search over protocols x chunk sizes), it re-plans. Hysteresis prevents
+  plan thrash; every decision is recorded for audit.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Sequence
+
+from repro.core.latency import LinkProfile, SplitCostModel
+from repro.core.planner import SplitPlan, plan_split
+
+
+class LinkEstimator:
+    """EWMA estimate of a link's effective per-packet time and loss."""
+
+    def __init__(self, base: LinkProfile, alpha: float = 0.2):
+        self.base = base
+        self.alpha = alpha
+        self._packet_time_s = base.packet_time_s()
+        self._loss = base.loss_p
+        self.n_obs = 0
+
+    def observe_hop(self, nbytes: int, latency_s: float, retries: int = 0):
+        """One observed transfer: ``nbytes`` took ``latency_s`` with
+        ``retries`` retransmissions."""
+        k = max(1, self.base.packets(nbytes))
+        per_packet = latency_s / k
+        self._packet_time_s = (1 - self.alpha) * self._packet_time_s \
+            + self.alpha * per_packet
+        obs_loss = retries / (k + retries) if retries else 0.0
+        self._loss = (1 - self.alpha) * self._loss + self.alpha * obs_loss
+        self.n_obs += 1
+
+    def current_profile(self) -> LinkProfile:
+        """The base profile re-fitted to the observed per-packet time.
+        The serialization term keeps the base rate; the residual moves
+        into the ack/overhead term (and the loss estimate)."""
+        serial = self.base.mtu_bytes / (
+            self.base.rate_bytes_per_s * (1.0 - max(self._loss, 0.0)))
+        t_ack = max(0.0, self._packet_time_s - serial - self.base.t_prop_s)
+        return replace(self.base, t_ack_s=t_ack, loss_p=min(self._loss, 0.9))
+
+
+def optimize_chunk_size(
+    link: LinkProfile,
+    cut_bytes: Sequence[int],
+    chunk_candidates: Sequence[int] | None = None,
+) -> tuple[int, float]:
+    """Best activation chunk size for a set of cut sizes (Eq. 7 summed
+    over the plan's hops). Candidates default to divisors-of-MTU-ish
+    steps below the protocol MTU."""
+    if chunk_candidates is None:
+        mtu = link.mtu_bytes
+        chunk_candidates = sorted({mtu, mtu * 3 // 4, mtu // 2, 1200, 250}
+                                  & set(range(1, mtu + 1))
+                                  | {mtu})
+        chunk_candidates = [c for c in chunk_candidates if 0 < c <= mtu]
+    best = (link.mtu_bytes, float("inf"))
+    for chunk in chunk_candidates:
+        trial = replace(link, mtu_bytes=chunk)
+        total = sum(trial.transmission_latency_s(b) for b in cut_bytes)
+        if total < best[1]:
+            best = (chunk, total)
+    return best
+
+
+@dataclass
+class PlanDecision:
+    step: int
+    protocol: str
+    chunk_bytes: int
+    splits: tuple[int, ...]
+    predicted_latency_s: float
+    reason: str
+
+
+@dataclass
+class AdaptiveSplitManager:
+    """Runtime re-planning over (protocol x chunk size x split points)."""
+
+    cost_model: SplitCostModel  # device/profile side (protocol swapped in)
+    protocols: dict[str, LinkProfile]
+    n_devices: int
+    replan_threshold: float = 0.10  # re-plan when >10% better is available
+    solver: str = "beam"
+    history: list[PlanDecision] = field(default_factory=list)
+
+    def __post_init__(self):
+        self.estimators = {name: LinkEstimator(link)
+                           for name, link in self.protocols.items()}
+        self._step = 0
+        self.current: PlanDecision | None = None
+        self._replan("initial")
+
+    # -- runtime feedback ------------------------------------------------------
+    def observe(self, protocol: str, nbytes: int, latency_s: float,
+                retries: int = 0):
+        """Feed one observed hop; may trigger a re-plan."""
+        self._step += 1
+        self.estimators[protocol].observe_hop(nbytes, latency_s, retries)
+        best_name, best_plan, best_chunk, best_lat = self._best_available()
+        if self.current is None:
+            self._adopt(best_name, best_plan, best_chunk, best_lat, "initial")
+            return
+        cur_lat = self._current_latency_under_estimates()
+        if best_lat < cur_lat * (1 - self.replan_threshold):
+            self._adopt(best_name, best_plan, best_chunk, best_lat,
+                        f"estimated {cur_lat:.3f}s -> {best_lat:.3f}s available")
+
+    # -- internals ---------------------------------------------------------------
+    def _model_for(self, link: LinkProfile) -> SplitCostModel:
+        return replace(self.cost_model, link=link)
+
+    def _best_available(self):
+        best = (None, None, 0, float("inf"))
+        for name, est in self.estimators.items():
+            link = est.current_profile()
+            plan = plan_split(self._model_for(link), self.n_devices,
+                              solver=self.solver)
+            if not plan.splits and self.n_devices > 1:
+                continue
+            cuts = [seg.tx_bytes for seg in plan.segments[:-1]]
+            chunk, _ = optimize_chunk_size(link, cuts)
+            tuned = replace(link, mtu_bytes=chunk)
+            lat = self._model_for(tuned).end_to_end_s(plan.splits)
+            if lat < best[3]:
+                best = (name, plan, chunk, lat)
+        return best
+
+    def _current_latency_under_estimates(self) -> float:
+        cur = self.current
+        link = self.estimators[cur.protocol].current_profile()
+        tuned = replace(link, mtu_bytes=cur.chunk_bytes)
+        return self._model_for(tuned).end_to_end_s(cur.splits)
+
+    def _adopt(self, name, plan: SplitPlan, chunk: int, lat: float, reason: str):
+        self.current = PlanDecision(self._step, name, chunk, plan.splits,
+                                    lat, reason)
+        self.history.append(self.current)
+
+    def _replan(self, reason: str):
+        name, plan, chunk, lat = self._best_available()
+        if name is not None:
+            self._adopt(name, plan, chunk, lat, reason)

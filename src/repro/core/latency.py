@@ -1,0 +1,334 @@
+"""Split-inference latency model — Eqs. (4)-(8) of Jenhani et al. 2025.
+
+The model decomposes end-to-end split-inference latency into
+
+  T_inference(s; r) = T_d(s) + T_tr(s, r)                          (Eq. 8)
+
+where ``s = (s_1, ..., s_{N-1})`` are the split points partitioning an
+L-layer model across N devices,
+
+  T_d(s)  = sum_i  T_load_i + T_ta_i + T_infer_i + T_iab_i         (Eq. 4-5)
+  T_tr(s) = sum_i  K_{s_i} * ( MTU / (r (1-p)) + T_prop + T_ack )  (Eq. 6-7)
+  K_{s_i} = ceil( L_{s_i} / MTU )        (packets for activation bytes)
+
+All times are in **seconds**, all sizes in **bytes**.
+
+The same model is reused for the TPU adaptation: a "device" becomes a
+pipeline stage (a slice of a pod) and a "link" becomes an interconnect
+tier (ICI intra-pod / DCN inter-pod); see ``profiles.py``.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field, replace
+from typing import Callable, Sequence
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Profiles
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class LinkProfile:
+    """A (wireless or interconnect) link, per Table I / Eq. 7.
+
+    ``rate_bytes_per_s`` is the serialization rate ``r``; ``loss_p`` the
+    packet-loss probability ``p``; ``t_prop_s``/``t_ack_s`` per-packet
+    propagation and acknowledgment overheads. ``t_setup_s`` is the one-time
+    protocol/session setup and ``t_feedback_s`` the prediction-return delay
+    (both enter the RTT, Table IV, not the per-hop Eq. 7)."""
+
+    name: str
+    mtu_bytes: int
+    rate_bytes_per_s: float
+    loss_p: float = 0.0
+    t_prop_s: float = 0.0
+    t_ack_s: float = 0.0
+    t_setup_s: float = 0.0
+    t_feedback_s: float = 0.0
+    max_devices: int | None = None
+
+    def packets(self, nbytes: int) -> int:
+        """K = ceil(L / MTU) — number of MTU-limited packets (Eq. 7)."""
+        if nbytes <= 0:
+            return 0
+        return math.ceil(nbytes / self.mtu_bytes)
+
+    def packet_time_s(self) -> float:
+        """Expected per-packet time: MTU/(r(1-p)) + T_prop + T_ack."""
+        return (
+            self.mtu_bytes / (self.rate_bytes_per_s * (1.0 - self.loss_p))
+            + self.t_prop_s
+            + self.t_ack_s
+        )
+
+    def transmission_latency_s(self, nbytes: int) -> float:
+        """Eq. 7: expected time to move ``nbytes`` across this link."""
+        return self.packets(nbytes) * self.packet_time_s()
+
+
+@dataclass(frozen=True)
+class DeviceProfile:
+    """A compute device (IoT node or TPU stage), per Eq. 4 and Table III.
+
+    Device-local latency for a segment holding ``param_bytes`` of weights
+    and producing ``act_bytes`` of activations:
+
+      T_load  = t_model_load_s + param_bytes * model_load_s_per_byte
+      T_ta    = t_tensor_alloc_s + work_bytes * tensor_alloc_s_per_byte
+      T_infer = sum over segment layers of per-layer inference time
+                (from the ``ModelCostProfile``) * compute_scale
+      T_iab   = t_buffer_s + act_bytes * buffer_s_per_byte
+
+    ``mem_limit_bytes``: hard feasibility budget (SRAM+PSRAM on ESP32-S3,
+    HBM per chip-group on TPU). Segments exceeding it cost +inf — this is
+    what produces the ResNet50 infeasibility fluctuations in Fig. 3."""
+
+    name: str
+    compute_scale: float = 1.0
+    t_model_load_s: float = 0.0
+    model_load_s_per_byte: float = 0.0
+    t_input_load_s: float = 0.0
+    t_tensor_alloc_s: float = 0.0
+    tensor_alloc_s_per_byte: float = 0.0
+    t_buffer_s: float = 0.0
+    buffer_s_per_byte: float = 0.0
+    mem_limit_bytes: float | None = None
+
+    def local_latency_s(
+        self,
+        infer_s: float,
+        param_bytes: int,
+        act_bytes: int,
+        work_bytes: int,
+        is_first: bool = False,
+    ) -> float:
+        """Eq. 4 for one device; +inf if the segment does not fit."""
+        if self.mem_limit_bytes is not None and param_bytes + work_bytes > self.mem_limit_bytes:
+            return INF
+        t = self.t_model_load_s + param_bytes * self.model_load_s_per_byte
+        t += self.t_tensor_alloc_s + work_bytes * self.tensor_alloc_s_per_byte
+        t += infer_s * self.compute_scale
+        t += self.t_buffer_s + act_bytes * self.buffer_s_per_byte
+        if is_first:
+            t += self.t_input_load_s
+        return t
+
+
+@dataclass(frozen=True)
+class LayerCost:
+    """Static per-layer cost record (one node of the sequential chain Eq. 1)."""
+
+    name: str
+    t_infer_s: float  # inference time on the reference device (compute_scale=1)
+    act_bytes: int  # bytes of the layer's output activation (the tensor crossing a cut here)
+    param_bytes: int  # weight bytes attributable to this layer
+    work_bytes: int = 0  # peak working-set bytes while executing this layer
+    flops: float = 0.0  # arithmetic work (used by analytic/TPU profiles)
+
+
+@dataclass(frozen=True)
+class ModelCostProfile:
+    """The per-layer cost table the planner consumes (the paper's 'measured
+    per-layer inference and transmission costs')."""
+
+    name: str
+    layers: tuple[LayerCost, ...]
+    input_bytes: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "layers", tuple(self.layers))
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.layers)
+
+    # -- prefix sums for O(1) segment queries ------------------------------
+    def _prefix(self, key: Callable[[LayerCost], float]) -> list[float]:
+        cache_name = f"_prefix_{id(key)}"
+        out = [0.0]
+        for lc in self.layers:
+            out.append(out[-1] + key(lc))
+        return out
+
+    def segment_infer_s(self, a: int, b: int) -> float:
+        """Sum of per-layer inference times for layers [a, b] (1-indexed inclusive)."""
+        return sum(lc.t_infer_s for lc in self.layers[a - 1 : b])
+
+    def segment_param_bytes(self, a: int, b: int) -> int:
+        return sum(lc.param_bytes for lc in self.layers[a - 1 : b])
+
+    def segment_work_bytes(self, a: int, b: int) -> int:
+        seg = self.layers[a - 1 : b]
+        return max((lc.work_bytes for lc in seg), default=0)
+
+    def segment_flops(self, a: int, b: int) -> float:
+        return sum(lc.flops for lc in self.layers[a - 1 : b])
+
+    def boundary_act_bytes(self, b: int) -> int:
+        """Bytes crossing a cut after layer ``b`` (1-indexed); 0 at b=0/L."""
+        if b <= 0:
+            return self.input_bytes
+        if b >= self.num_layers:
+            return 0
+        return self.layers[b - 1].act_bytes
+
+
+# ---------------------------------------------------------------------------
+# Segment and end-to-end cost (Eq. 8 and CostSegment of Alg. 1-3)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SplitCostModel:
+    """Binds a ``ModelCostProfile`` to device and link profiles and exposes
+    ``CostSegment(a, b, k)`` (Alg. 1-3) and the end-to-end objective (Eq. 8).
+
+    ``objective``:
+      * ``"sum"``        — paper-faithful Eq. 5: total latency is the sum of
+                           all device-local and transmission latencies
+                           (single request traversing the chain).
+      * ``"bottleneck"`` — steady-state pipeline throughput: the slowest
+                           stage (compute+transmit) bounds the system; used
+                           by the TPU pipeline planner.
+    """
+
+    profile: ModelCostProfile
+    devices: Sequence[DeviceProfile]
+    link: LinkProfile
+    objective: str = "sum"
+    include_setup: bool = False  # add per-hop link setup into segment costs
+
+    def __post_init__(self):
+        if self.objective not in ("sum", "bottleneck"):
+            raise ValueError(f"unknown objective {self.objective!r}")
+
+    def device(self, k: int) -> DeviceProfile:
+        """Device executing segment k (1-indexed). A single profile may be
+        broadcast over any N."""
+        if len(self.devices) == 1:
+            return self.devices[0]
+        return self.devices[k - 1]
+
+    # -- CostSegment(a, b, k): layers [a..b] on device k --------------------
+    def segment_cost_s(self, a: int, b: int, k: int, *, n_devices: int | None = None) -> float:
+        """Latency contribution of assigning layers [a, b] to device k,
+        'including both local inference and transmission costs' (Sec. IV-B).
+
+        Transmission is charged for the activation leaving layer ``b``
+        unless ``b == L`` (the prediction return is the link feedback delay,
+        charged once in ``end_to_end_s``)."""
+        prof = self.profile
+        L = prof.num_layers
+        if not (1 <= a <= b <= L):
+            return INF
+        dev = self.device(k)
+        local = dev.local_latency_s(
+            infer_s=prof.segment_infer_s(a, b),
+            param_bytes=prof.segment_param_bytes(a, b),
+            act_bytes=prof.boundary_act_bytes(b),
+            work_bytes=prof.segment_work_bytes(a, b),
+            is_first=(k == 1),
+        )
+        if local == INF:
+            return INF
+        tx = 0.0
+        if b < L:
+            tx = self.link.transmission_latency_s(prof.boundary_act_bytes(b))
+            if self.include_setup:
+                tx += self.link.t_setup_s
+        return local + tx
+
+    # -- Eq. 8 over a full configuration ------------------------------------
+    def end_to_end_s(self, splits: Sequence[int], *, with_overheads: bool = True) -> float:
+        """T_inference(s; r) for split points ``splits = (s_1..s_{N-1})``.
+
+        ``with_overheads`` adds the one-time protocol setup and the
+        prediction feedback delay (the Table-IV RTT decomposition)."""
+        L = self.profile.num_layers
+        bounds = [0, *splits, L]
+        n = len(bounds) - 1
+        for i in range(n):
+            if not bounds[i] < bounds[i + 1]:
+                return INF
+        seg_costs = [
+            self.segment_cost_s(bounds[i] + 1, bounds[i + 1], i + 1, n_devices=n)
+            for i in range(n)
+        ]
+        if any(c == INF for c in seg_costs):
+            return INF
+        if self.objective == "bottleneck":
+            total = max(seg_costs)
+        else:
+            total = sum(seg_costs)
+        if with_overheads:
+            total += self.link.t_setup_s + self.link.t_feedback_s
+        return total
+
+    def cost_segment_fn(self) -> Callable[[int, int, int], float]:
+        """The ``CostSegment`` callable consumed by the solvers."""
+        return self.segment_cost_s
+
+
+# ---------------------------------------------------------------------------
+# RTT decomposition (Table III / IV reproduction)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RTTBreakdown:
+    setup_s: float
+    device_s: tuple[float, ...]
+    transmission_s: tuple[float, ...]
+    feedback_s: float
+
+    @property
+    def rtt_s(self) -> float:
+        return self.setup_s + sum(self.device_s) + sum(self.transmission_s) + self.feedback_s
+
+
+def rtt_breakdown(model: SplitCostModel, splits: Sequence[int]) -> RTTBreakdown:
+    """Full RTT decomposition for a split configuration (Tables III-IV)."""
+    prof = model.profile
+    L = prof.num_layers
+    bounds = [0, *splits, L]
+    n = len(bounds) - 1
+    dev_times, tx_times = [], []
+    for i in range(n):
+        a, b, k = bounds[i] + 1, bounds[i + 1], i + 1
+        dev = model.device(k)
+        dev_times.append(
+            dev.local_latency_s(
+                infer_s=prof.segment_infer_s(a, b),
+                param_bytes=prof.segment_param_bytes(a, b),
+                act_bytes=prof.boundary_act_bytes(b),
+                work_bytes=prof.segment_work_bytes(a, b),
+                is_first=(k == 1),
+            )
+        )
+        if b < L:
+            tx_times.append(model.link.transmission_latency_s(prof.boundary_act_bytes(b)))
+    return RTTBreakdown(
+        setup_s=model.link.t_setup_s,
+        device_s=tuple(dev_times),
+        transmission_s=tuple(tx_times),
+        feedback_s=model.link.t_feedback_s,
+    )
+
+
+def scale_profile(profile: ModelCostProfile, infer_total_s: float) -> ModelCostProfile:
+    """Rescale per-layer inference times so they sum to ``infer_total_s``
+    (used to calibrate analytic FLOP-proportional tables to a measured
+    end-to-end inference time, Table III)."""
+    cur = sum(lc.t_infer_s for lc in profile.layers)
+    if cur <= 0:
+        raise ValueError("profile has no inference time to scale")
+    f = infer_total_s / cur
+    return replace(
+        profile,
+        layers=tuple(replace(lc, t_infer_s=lc.t_infer_s * f) for lc in profile.layers),
+    )

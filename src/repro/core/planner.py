@@ -1,0 +1,207 @@
+"""Split-point planner: model graph -> cost model -> solved split plan.
+
+Two entry points:
+
+* :func:`plan_split` — the paper's IoT scenario: an L-layer model, N
+  devices, one wireless protocol; minimizes Eq. 8 with the chosen solver.
+
+* :func:`plan_pipeline` — the TPU adaptation: partition a transformer
+  block-chain into pipeline stages across pods/chip-groups, with
+  inter-stage activation traffic costed on an interconnect tier (ICI/DCN)
+  via the *same* Eq. 7 packetized-link model. Objective defaults to
+  ``bottleneck`` (steady-state pipeline throughput).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Sequence
+
+from repro.core import solvers as S
+from repro.core.latency import (
+    DeviceProfile,
+    LinkProfile,
+    ModelCostProfile,
+    SplitCostModel,
+    rtt_breakdown,
+)
+from repro.core.profiles import ICI, tpu_layer_time_s, tpu_stage_device
+
+if TYPE_CHECKING:  # avoid the core <-> models import cycle at runtime
+    from repro.models.graph import LayerGraph
+
+
+@dataclass(frozen=True)
+class SegmentPlan:
+    device: int  # 1-indexed device/stage
+    first_layer: int  # 1-indexed inclusive
+    last_layer: int
+    layer_names: tuple[str, ...]
+    infer_s: float
+    param_bytes: int
+    tx_bytes: int  # activation bytes leaving this segment (0 for the last)
+    cost_s: float
+
+
+@dataclass(frozen=True)
+class SplitPlan:
+    model: str
+    solver: str
+    n_devices: int
+    splits: tuple[int, ...]
+    segments: tuple[SegmentPlan, ...]
+    total_latency_s: float  # Eq. 8 incl. setup + feedback
+    objective_cost_s: float  # solver objective (no overheads)
+    planner_time_s: float
+    nodes_expanded: int
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def _build_plan(
+    model: SplitCostModel, result: S.SolverResult, n_devices: int
+) -> SplitPlan:
+    prof = model.profile
+    L = prof.num_layers
+    bounds = [0, *result.splits, L]
+    segments = []
+    for i in range(len(bounds) - 1):
+        a, b = bounds[i] + 1, bounds[i + 1]
+        segments.append(
+            SegmentPlan(
+                device=i + 1,
+                first_layer=a,
+                last_layer=b,
+                layer_names=tuple(lc.name for lc in prof.layers[a - 1 : b]),
+                infer_s=prof.segment_infer_s(a, b),
+                param_bytes=prof.segment_param_bytes(a, b),
+                tx_bytes=prof.boundary_act_bytes(b) if b < L else 0,
+                cost_s=model.segment_cost_s(a, b, i + 1),
+            )
+        )
+    total = model.end_to_end_s(result.splits, with_overheads=True) if result.feasible else float("inf")
+    return SplitPlan(
+        model=prof.name,
+        solver=result.solver,
+        n_devices=n_devices,
+        splits=result.splits,
+        segments=tuple(segments),
+        total_latency_s=total,
+        objective_cost_s=result.cost_s,
+        planner_time_s=result.wall_time_s,
+        nodes_expanded=result.nodes_expanded,
+    )
+
+
+def plan_split(
+    cost_model: SplitCostModel,
+    n_devices: int,
+    solver: str = "beam",
+    **solver_kwargs,
+) -> SplitPlan:
+    """Solve Eq. 9 for the given cost model and device count."""
+    L = cost_model.profile.num_layers
+    if not 1 <= n_devices <= L:
+        raise ValueError(f"n_devices={n_devices} out of range for L={L}")
+    fn = S.SOLVERS[solver]
+    result = fn(
+        cost_model.cost_segment_fn(),
+        L,
+        n_devices,
+        combine=("max" if cost_model.objective == "bottleneck" else "sum"),
+        **solver_kwargs,
+    )
+    return _build_plan(cost_model, result, n_devices)
+
+
+def compare_solvers(
+    cost_model: SplitCostModel,
+    n_devices: int,
+    solvers: Sequence[str] = ("beam", "greedy", "first_fit", "random_fit", "brute_force"),
+    **per_solver_kwargs,
+) -> dict[str, SplitPlan]:
+    """Run several solvers on the same instance (Figs. 3-4)."""
+    out = {}
+    for name in solvers:
+        kwargs = per_solver_kwargs.get(name, {}) if per_solver_kwargs else {}
+        out[name] = plan_split(cost_model, n_devices, solver=name, **kwargs)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# TPU pipeline planning (the beyond-paper integration)
+# ---------------------------------------------------------------------------
+
+
+def tpu_cost_profile(
+    graph: "LayerGraph",
+    *,
+    act_dtype_bytes: int = 2,
+    param_dtype_bytes: int = 2,
+    chips_per_stage: int = 1,
+) -> ModelCostProfile:
+    """Analytic per-layer TPU times: max(compute, memory) roofline terms.
+
+    ``bytes_moved`` per layer approximates params read once plus
+    activations in+out (training adds backward traffic uniformly — a
+    constant factor that does not move split decisions)."""
+    from repro.core.latency import LayerCost
+
+    layers = []
+    for n in graph.nodes:
+        bytes_moved = (
+            n.param_count * param_dtype_bytes + n.work_elems * act_dtype_bytes
+        )
+        layers.append(
+            LayerCost(
+                name=n.name,
+                t_infer_s=tpu_layer_time_s(n.flops, bytes_moved, chips_per_stage),
+                act_bytes=n.out_elems * act_dtype_bytes,
+                param_bytes=n.param_count * param_dtype_bytes,
+                work_bytes=n.work_elems * act_dtype_bytes,
+                flops=n.flops,
+            )
+        )
+    return ModelCostProfile(
+        name=graph.name, layers=tuple(layers), input_bytes=graph.input_elems * act_dtype_bytes
+    )
+
+
+def plan_pipeline(
+    graph: "LayerGraph",
+    n_stages: int,
+    *,
+    chips_per_stage: int = 1,
+    link: LinkProfile = ICI,
+    solver: str = "beam",
+    act_dtype_bytes: int = 2,
+    objective: str = "bottleneck",
+    **solver_kwargs,
+) -> SplitPlan:
+    if solver == "beam":
+        # memory-cliff instances (segments that barely fit a stage) need a
+        # wider beam than the paper's IoT cases; still < 100 ms to plan
+        solver_kwargs.setdefault("beam_width", 16)
+    """Beam-search pipeline-stage boundaries for a transformer block chain.
+
+    This is the paper's split-point optimization re-targeted at TPU
+    pipeline parallelism: stages are chip groups, the link is ICI (intra
+    pod) or DCN (across pods), and the objective is the steady-state
+    bottleneck stage time."""
+    prof = tpu_cost_profile(
+        graph, act_dtype_bytes=act_dtype_bytes, chips_per_stage=chips_per_stage
+    )
+    model = SplitCostModel(
+        profile=prof,
+        devices=(tpu_stage_device(chips_per_stage),),
+        link=link,
+        objective=objective,
+    )
+    return plan_split(model, n_stages, solver=solver, **solver_kwargs)
+
+
+def uniform_split(L: int, n_devices: int) -> tuple[int, ...]:
+    """Equal-layer-count baseline split (what a naive PP config does)."""
+    return tuple(round(L * i / n_devices) for i in range(1, n_devices))

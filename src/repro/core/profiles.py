@@ -1,0 +1,252 @@
+"""Measured device/link profiles (paper Tables I-IV) and TPU v5e profiles.
+
+Calibration notes (all constants traceable to the paper):
+
+* **Packet counts** follow exactly from activation byte sizes and MTUs
+  (Table I): e.g. block_2_expand = 56*56*48 = 150528 B int8 ->
+  ceil(150528/1460) = 104 UDP packets (Table II row 2). BLE's MTU is 512 B
+  (GATT); Table II's 603-packet BLE row corresponds to app-level 250 B
+  chunking — we keep MTU=512 and note the discrepancy in the benchmark.
+
+* **Per-packet times** are least-squares fits of Eq. 7 to the Table II
+  block_15_project / block_16_project_BN rows (the block_2_expand rows are
+  dominated by ESP32 TCP-buffer stalls the paper itself flags as
+  anomalous):
+      UDP      0.78 ms/packet   (serialization-only at ~1.87 MB/s)
+      TCP      4.71 ms/packet   (UDP serialization + 3.93 ms ack overhead)
+      ESP-NOW  3.1455 ms/packet (2 ms @1 Mbps PHY + 1.1455 ms MAC ack)
+      BLE     26.6  ms/packet   (2.05 ms @2 Mbps PHY + 24.5 ms conn-interval)
+
+* **Setup / feedback** delays are Table IV verbatim.
+
+* **ESP32-S3 compute** is FLOP-proportional, calibrated piecewise so that
+  the block_16_project_BN split reproduces Table III exactly
+  (device 1 inference 3053.75 ms, device 2 inference 437 ms).
+
+* **Sanity**: with these constants the model reproduces the Table IV RTTs
+  within ~2% for all four protocols (see tests/test_paper_fidelity.py).
+
+TPU v5e constants (the adaptation targets): 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI (16 GiB HBM). Inter-pod DCN is modeled as
+a lossy, higher-latency link — the direct analogue of the paper's lossy
+wireless hop (same Eq. 7, different constants).
+"""
+
+from __future__ import annotations
+
+from dataclasses import replace
+
+from repro.core.latency import (
+    DeviceProfile,
+    LinkProfile,
+    ModelCostProfile,
+    SplitCostModel,
+)
+
+# NOTE: repro.models.graph is imported lazily inside the builder functions
+# below — models.graph itself depends on repro.core.latency, and importing
+# it at module scope would create a cycle through repro.core.__init__.
+
+# ---------------------------------------------------------------------------
+# Wireless protocol profiles (Tables I, II, IV)
+# ---------------------------------------------------------------------------
+
+UDP = LinkProfile(
+    name="udp",
+    mtu_bytes=1460,
+    rate_bytes_per_s=1460 / 0.78e-3,  # 0.78 ms serialization per packet
+    loss_p=0.0,
+    t_prop_s=0.0,
+    t_ack_s=0.0,
+    t_setup_s=2.1349,
+    t_feedback_s=0.649e-3,
+    max_devices=None,
+)
+
+TCP = LinkProfile(
+    name="tcp",
+    mtu_bytes=1460,
+    rate_bytes_per_s=1460 / 0.78e-3,
+    loss_p=0.0,
+    t_prop_s=0.0,
+    t_ack_s=3.93e-3,  # ack + retransmission overhead per packet
+    t_setup_s=2.590623,
+    t_feedback_s=2.645e-3,
+    max_devices=10,
+)
+
+ESP_NOW = LinkProfile(
+    name="esp_now",
+    mtu_bytes=250,
+    rate_bytes_per_s=125_000.0,  # 1 Mbps ESP-NOW PHY -> 2 ms per 250 B packet
+    loss_p=0.0,
+    t_prop_s=0.0,
+    t_ack_s=1.1455e-3,  # MAC-level ack, no connection handshake
+    t_setup_s=48e-3,
+    t_feedback_s=1.115e-3,
+    max_devices=20,
+)
+
+BLE = LinkProfile(
+    name="ble",
+    mtu_bytes=512,
+    rate_bytes_per_s=250_000.0,  # 2 Mbps PHY -> 2.05 ms serialization
+    loss_p=0.0,
+    t_prop_s=0.0,
+    t_ack_s=24.5e-3,  # connection-interval + GATT overhead per packet
+    t_setup_s=6.37852,
+    t_feedback_s=24.550e-3,
+    max_devices=7,
+)
+
+PROTOCOLS: dict[str, LinkProfile] = {p.name: p for p in (UDP, TCP, ESP_NOW, BLE)}
+
+# Chunk-size variants exercised by Table II (bytes-per-chunk column).
+TABLE2_CHUNKS: dict[str, tuple[int, ...]] = {
+    "udp": (1472, 1460, 1200),
+    "tcp": (1472, 1460, 1200),
+    "esp_now": (250,),
+    "ble": (512,),
+}
+
+
+# ---------------------------------------------------------------------------
+# ESP32-S3 device profile (Table III)
+# ---------------------------------------------------------------------------
+
+# Piecewise-calibrated inference totals at the block_16_project_BN split.
+MBV2_PART1_INFER_S = 3.05375  # device 1 (camera node)
+MBV2_PART2_INFER_S = 0.437  # device 2 (classifier node)
+MBV2_SPLIT_LAYER = "block_16_project_BN"
+
+ESP32_MEM_LIMIT_BYTES = 8.5e6  # 8 MB PSRAM + 0.5 MB SRAM
+
+# Tensor-arena allocation: affine fit to Table III (43 ms @ 753 KB peak
+# arena on device 1, 10 ms @ 68 KB on device 2 — peak in+out activation
+# bytes of the largest layer in each segment).
+_ALLOC_BASE_S = 6.7113e-3
+_ALLOC_PER_BYTE_S = 4.822e-8
+
+ESP32 = DeviceProfile(
+    name="esp32_s3",
+    compute_scale=1.0,
+    t_model_load_s=0.01e-3,  # Table III: 0.0001-0.01 ms (memory-mapped flash)
+    model_load_s_per_byte=0.0,
+    t_input_load_s=9.8e-3,  # camera frame read, first device only
+    t_tensor_alloc_s=_ALLOC_BASE_S,
+    tensor_alloc_s_per_byte=_ALLOC_PER_BYTE_S,
+    t_buffer_s=0.0,
+    buffer_s_per_byte=3.6e-9,  # 0.02 ms for the 5488 B block_16 activation
+    mem_limit_bytes=ESP32_MEM_LIMIT_BYTES,
+)
+
+
+def _piecewise_calibrate(
+    profile: ModelCostProfile, split_layer: str, t1_s: float, t2_s: float
+) -> ModelCostProfile:
+    """Rescale per-layer FLOP-proportional times so the two parts of the
+    paper's two-device split sum to the measured totals (Table III)."""
+    idx = next(i for i, lc in enumerate(profile.layers) if lc.name == split_layer) + 1
+    part1 = sum(lc.t_infer_s for lc in profile.layers[:idx])
+    part2 = sum(lc.t_infer_s for lc in profile.layers[idx:])
+    f1 = t1_s / part1
+    f2 = t2_s / part2
+    new_layers = tuple(
+        replace(lc, t_infer_s=lc.t_infer_s * (f1 if i < idx else f2))
+        for i, lc in enumerate(profile.layers)
+    )
+    return replace(profile, layers=new_layers)
+
+
+def esp32_flops_per_s() -> float:
+    """Effective ESP32-S3 int8 TFLM throughput implied by Table III."""
+    from repro.models.graph import mobilenet_v2_graph
+
+    g = mobilenet_v2_graph(width=0.35, image_size=224)
+    return g.total_flops / (MBV2_PART1_INFER_S + MBV2_PART2_INFER_S)
+
+
+def mobilenet_cost_profile() -> ModelCostProfile:
+    """MobileNet-V2 0.35 per-layer costs on ESP32-S3, Table-III calibrated."""
+    from repro.models.graph import mobilenet_v2_graph
+
+    g = mobilenet_v2_graph(width=0.35, image_size=224)
+    prof = g.cost_profile(flops_per_s=esp32_flops_per_s(), act_dtype_bytes=1, param_dtype_bytes=1)
+    return _piecewise_calibrate(prof, MBV2_SPLIT_LAYER, MBV2_PART1_INFER_S, MBV2_PART2_INFER_S)
+
+
+def resnet50_cost_profile() -> ModelCostProfile:
+    """ResNet50 per-layer costs on ESP32-S3 (FLOP-proportional at the
+    MobileNet-calibrated rate; no per-part measurement exists in the paper)."""
+    from repro.models.graph import resnet50_graph
+
+    g = resnet50_graph(image_size=224)
+    return g.cost_profile(flops_per_s=esp32_flops_per_s(), act_dtype_bytes=1, param_dtype_bytes=1)
+
+
+def paper_cost_model(
+    model: str = "mobilenet_v2",
+    protocol: str = "esp_now",
+    objective: str = "sum",
+) -> SplitCostModel:
+    """The paper's experimental configuration as a ready SplitCostModel."""
+    prof = mobilenet_cost_profile() if model.startswith("mobilenet") else resnet50_cost_profile()
+    return SplitCostModel(
+        profile=prof, devices=(ESP32,), link=PROTOCOLS[protocol], objective=objective
+    )
+
+
+# ---------------------------------------------------------------------------
+# TPU v5e profiles (hardware-adaptation targets)
+# ---------------------------------------------------------------------------
+
+TPU_PEAK_FLOPS = 197e12  # bf16 per chip
+TPU_HBM_BW = 819e9  # bytes/s per chip
+TPU_HBM_BYTES = 16 * 1024**3
+TPU_ICI_BW = 4.9e10  # bytes/s per link (~50 GB/s)
+TPU_DCN_BW = 2.5e10  # bytes/s per pod-pair (inter-pod)
+
+
+def tpu_stage_device(n_chips: int, mem_fraction: float = 0.9) -> DeviceProfile:
+    """A pipeline stage made of ``n_chips`` v5e chips.
+
+    Per-layer inference times in TPU cost profiles are produced
+    analytically (max of compute and memory roofline terms); the stage
+    device then just scales by the chip count."""
+    return DeviceProfile(
+        name=f"tpu_v5e_x{n_chips}",
+        compute_scale=1.0 / n_chips,
+        t_model_load_s=0.0,
+        t_tensor_alloc_s=0.0,
+        mem_limit_bytes=n_chips * TPU_HBM_BYTES * mem_fraction,
+    )
+
+
+ICI = LinkProfile(
+    name="ici",
+    mtu_bytes=4 * 1024 * 1024,  # collective chunk granularity
+    rate_bytes_per_s=TPU_ICI_BW,
+    loss_p=0.0,
+    t_prop_s=1e-6,
+    t_ack_s=0.0,
+    t_setup_s=0.0,
+    t_feedback_s=1e-6,
+)
+
+DCN = LinkProfile(
+    name="dcn",
+    mtu_bytes=1024 * 1024,
+    rate_bytes_per_s=TPU_DCN_BW,
+    loss_p=1e-4,  # retransmission-equivalent derating (lossy fabric)
+    t_prop_s=10e-6,
+    t_ack_s=5e-6,
+    t_setup_s=1e-3,  # per-session connection warm-up
+    t_feedback_s=10e-6,
+)
+
+TPU_LINKS: dict[str, LinkProfile] = {"ici": ICI, "dcn": DCN}
+
+
+def tpu_layer_time_s(flops: float, bytes_moved: float, n_chips: int = 1) -> float:
+    """Analytic per-layer time: max of the compute and memory roofline terms."""
+    return max(flops / (n_chips * TPU_PEAK_FLOPS), bytes_moved / (n_chips * TPU_HBM_BW))

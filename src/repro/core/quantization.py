@@ -1,0 +1,146 @@
+"""TFLite-style int8 post-training quantization (Jacob et al., CVPR'18).
+
+The paper deploys each model segment as an int8-quantized TFLite blob and
+ships int8 intermediate activations between devices (Table II byte counts
+= tensor elements x 1 byte). This module provides:
+
+* affine per-tensor / per-channel quantization ``q = round(x/scale) + zp``
+  with int8 storage and exact round-trip semantics,
+* weight-set quantization for a params pytree (per-output-channel for
+  matmul/conv kernels, per-tensor otherwise),
+* activation wire-format quantize/dequantize used by the split executor at
+  segment boundaries (this is what 'transmitting the intermediate
+  activation' means on the wire),
+* fake-quant helpers for accuracy evaluation.
+
+The compute hot path (int8 x int8 -> int32 GEMM with dequant epilogue)
+lives in ``repro.kernels.quant_matmul``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INT8_MIN, INT8_MAX = -128, 127
+
+
+@dataclass(frozen=True)
+class QTensor:
+    """An int8-quantized tensor: ``x ~= (values - zero_point) * scale``."""
+
+    values: jax.Array  # int8
+    scale: jax.Array  # f32, scalar or per-axis
+    zero_point: jax.Array  # int32, same shape as scale
+    axis: int | None = None  # quantization axis (None = per-tensor)
+
+    @property
+    def nbytes(self) -> int:
+        """Wire size: int8 payload (scale/zp are negligible header)."""
+        return int(self.values.size)
+
+    def dequantize(self) -> jax.Array:
+        scale, zp = self.scale, self.zero_point
+        if self.axis is not None:
+            shape = [1] * self.values.ndim
+            shape[self.axis] = -1
+            scale = scale.reshape(shape)
+            zp = zp.reshape(shape)
+        return (self.values.astype(jnp.float32) - zp.astype(jnp.float32)) * scale
+
+
+def _affine_params(x_min: jax.Array, x_max: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Scale/zero-point for asymmetric int8 covering [x_min, x_max]."""
+    x_min = jnp.minimum(x_min, 0.0)
+    x_max = jnp.maximum(x_max, 0.0)
+    scale = (x_max - x_min) / float(INT8_MAX - INT8_MIN)
+    scale = jnp.where(scale <= 0, 1.0, scale)
+    zp = jnp.clip(jnp.round(INT8_MIN - x_min / scale), INT8_MIN, INT8_MAX).astype(jnp.int32)
+    return scale.astype(jnp.float32), zp
+
+
+def quantize(x: jax.Array, axis: int | None = None, symmetric: bool = False) -> QTensor:
+    """Quantize to int8. ``axis`` selects per-channel scales (weights);
+    ``symmetric`` forces zero_point = 0 (TFLite weight convention)."""
+    x = x.astype(jnp.float32)
+    if axis is None:
+        x_min, x_max = jnp.min(x), jnp.max(x)
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        x_min = jnp.min(x, axis=reduce_axes)
+        x_max = jnp.max(x, axis=reduce_axes)
+    if symmetric:
+        amax = jnp.maximum(jnp.abs(x_min), jnp.abs(x_max))
+        scale = jnp.where(amax <= 0, 1.0, amax / INT8_MAX).astype(jnp.float32)
+        zp = jnp.zeros_like(scale, dtype=jnp.int32)
+    else:
+        scale, zp = _affine_params(x_min, x_max)
+    if axis is not None:
+        shape = [1] * x.ndim
+        shape[axis] = -1
+        s_b, z_b = scale.reshape(shape), zp.reshape(shape)
+    else:
+        s_b, z_b = scale, zp
+    q = jnp.clip(jnp.round(x / s_b) + z_b, INT8_MIN, INT8_MAX).astype(jnp.int8)
+    return QTensor(values=q, scale=scale, zero_point=zp, axis=axis)
+
+
+def fake_quant(x: jax.Array, axis: int | None = None, symmetric: bool = False) -> jax.Array:
+    """Quantize-dequantize round trip (accuracy-degradation studies)."""
+    return quantize(x, axis=axis, symmetric=symmetric).dequantize().astype(x.dtype)
+
+
+def quantize_params(params: Any, channel_axis_rank: int = 2) -> Any:
+    """Quantize every float leaf of a params pytree.
+
+    Leaves with rank >= ``channel_axis_rank`` (matmul/conv kernels) use
+    symmetric per-output-channel scales (last axis, the TFLite
+    convention); vectors (biases, norm scales) stay float32 — TFLite keeps
+    biases int32 at scale_in*scale_w, which round-trips exactly, so f32 is
+    the faithful storage-equivalent here."""
+
+    def quant_leaf(x):
+        if not isinstance(x, jax.Array) or not jnp.issubdtype(x.dtype, jnp.floating):
+            return x
+        if x.ndim >= channel_axis_rank:
+            return quantize(x, axis=x.ndim - 1, symmetric=True)
+        return x
+
+    return jax.tree.map(quant_leaf, params)
+
+
+def dequantize_params(params: Any) -> Any:
+    return jax.tree.map(
+        lambda x: x.dequantize() if isinstance(x, QTensor) else x,
+        params,
+        is_leaf=lambda x: isinstance(x, QTensor),
+    )
+
+
+def param_bytes(params: Any) -> int:
+    """Deployed size of a (possibly quantized) params pytree in bytes."""
+    total = 0
+    for leaf in jax.tree.leaves(params, is_leaf=lambda x: isinstance(x, QTensor)):
+        if isinstance(leaf, QTensor):
+            total += leaf.nbytes + leaf.scale.size * 4 + leaf.zero_point.size * 4
+        elif isinstance(leaf, jax.Array):
+            total += leaf.size * leaf.dtype.itemsize
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Wire format for split-boundary activations
+# ---------------------------------------------------------------------------
+
+
+def encode_activation(x: jax.Array) -> QTensor:
+    """Quantize an intermediate activation for transmission (per-tensor
+    asymmetric — the TFLite activation convention)."""
+    return quantize(x, axis=None, symmetric=False)
+
+
+def decode_activation(qt: QTensor, dtype=jnp.float32) -> jax.Array:
+    return qt.dequantize().astype(dtype)

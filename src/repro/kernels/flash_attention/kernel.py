@@ -1,0 +1,132 @@
+"""Pallas TPU kernel: causal flash attention (block-wise online softmax).
+
+Serving-prefill hot path: never materializes the (Sq, Skv) score matrix.
+Grid = (batch*heads, q_blocks, kv_blocks) with kv innermost; the running
+max/denominator/accumulator live in VMEM scratch across kv steps and the
+normalized output is written on the last kv block.
+
+Causality: fully-masked kv blocks (block start beyond the q block's last
+position) are skipped via ``pl.when`` — on TPU the grid is executed
+sequentially per core, so skipped blocks cost only the (tiny) predicate.
+The diagonal blocks apply an elementwise position mask.
+
+GQA is handled without materializing repeated KV heads: the kv BlockSpec
+index_map maps attention head h to kv head h // group_size.
+
+Block sizes (q 256, kv 512) x head_dim 128 give a working set of
+~0.6 MB (q, k, v, p blocks + f32 accumulators) — comfortably inside VMEM
+with double buffering; both are multiples of the 128-lane MXU tiling.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, n_kv: int,
+                  block_q: int, block_kv: int):
+    kv_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qpos_ref[0, :]  # (block_q,)
+    k_pos = kpos_ref[0, :]  # (block_kv,)
+
+    # skip blocks that are entirely in the causal future of this q block
+    @pl.when(k_pos[0] <= q_pos[-1])
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)  # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)  # (block_kv, d)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        mask = k_pos[None, :] <= q_pos[:, None]
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "block_q", "block_kv", "interpret"),
+)
+def flash_attention_kernel(
+    q: jax.Array,  # (BH, Sq, D)   batch*heads folded
+    k: jax.Array,  # (BHkv, Skv, D)
+    v: jax.Array,  # (BHkv, Skv, D)
+    q_positions: jax.Array,  # (Sq,) int32
+    kv_positions: jax.Array,  # (Skv,) int32
+    *,
+    scale: float,
+    block_q: int = 256,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, Sq, D = q.shape
+    BHkv, Skv, _ = k.shape
+    group = BH // BHkv  # GQA: q heads per kv head (within the folded dim)
+
+    bq, bkv = min(block_q, Sq), min(block_kv, Skv)
+    pad_q, pad_kv = (-Sq) % bq, (-Skv) % bkv
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+        # pad with the last real position so the causal block-skip predicate
+        # (which reads q_pos[-1]) stays sound; padded rows are sliced off.
+        q_positions = jnp.pad(q_positions, (0, pad_q), mode="edge")
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad_kv), constant_values=2**30)
+    Sqp, Skvp = q.shape[1], k.shape[1]
+    n_q, n_kv = Sqp // bq, Skvp // bkv
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, scale=scale, n_kv=n_kv,
+                          block_q=bq, block_kv=bkv),
+        grid=(BH, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda h, qi, ki: (0, qi)),
+            pl.BlockSpec((1, bkv), lambda h, qi, ki: (0, ki)),
+            pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bkv, D), lambda h, qi, ki, g=group: (h // g, ki, 0)),
+            pl.BlockSpec((1, bkv, D), lambda h, qi, ki, g=group: (h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sqp, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(
+        q_positions.reshape(1, Sqp).astype(jnp.int32),
+        kv_positions.reshape(1, Skvp).astype(jnp.int32),
+        q, k, v,
+    )
+    if pad_q:
+        out = out[:, :Sq]
+    return out

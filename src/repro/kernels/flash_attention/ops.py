@@ -1,0 +1,34 @@
+"""Public op: flash attention in model layout (B, S, H, D)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, q_positions, kv_positions, scale,
+                    block_q: int = 256, block_kv: int = 512,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, Sq, H, D); k/v: (B, Skv, Hkv, D); GQA via head grouping.
+
+    ``q_positions`` may be (B, Sq) (uniform across batch assumed — decode
+    and prefill both satisfy this) or (Sq,)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, Sq, H, D = q.shape
+    Hkv = k.shape[2]
+    if q_positions.ndim == 2:
+        q_positions = q_positions[0]
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, k.shape[1], D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, v.shape[1], D)
+    out = flash_attention_kernel(qf, kf, vf, q_positions, kv_positions,
+                                 scale=scale, block_q=block_q,
+                                 block_kv=block_kv, interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, q_positions, kv_positions, scale):
+    """Materialized-softmax reference. q: (BH, Sq, D); k/v: (BHkv, Skv, D)."""
+    BH, Sq, D = q.shape
+    BHkv = k.shape[0]
+    group = BH // BHkv
+    k = jnp.repeat(k, group, axis=0)
+    v = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    mask = kv_positions[None, None, :] <= q_positions[None, :, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,184 @@
+"""Pallas TPU kernel: W8A8 int8 GEMM with dequantization epilogue.
+
+The paper deploys int8 post-training-quantized (TFLite) model segments;
+this is the TPU-native realization of that compute path:
+
+    C[m, n] = (sum_k (A_q[m,k] - a_zp) * W_q[k,n]) * a_scale * w_scale[n]
+            = (acc[m, n] - a_zp * colsum[n]) * a_scale * w_scale[n]
+
+where ``acc`` is the raw int8 x int8 -> int32 MXU matmul and ``colsum[n] =
+sum_k W_q[k,n]`` is precomputed (the standard zero-point folding — keeps
+the inner loop pure int8 GEMM).
+
+Tiling: (bm x bk) @ (bk x bn) blocks with a VMEM int32 accumulator;
+K is the innermost grid axis so the accumulator lives across K steps and
+the dequant epilogue fires on the last one. Block defaults (128, 512, 128)
+are MXU-aligned (multiples of 128) and keep the working set
+(bm*bk + bk*bn int8 + bm*bn int32) ~ 0.4 MB << 16 MB VMEM, leaving room
+for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _qmm_kernel(a_ref, w_ref, ascale_ref, azp_ref, wscale_ref, colsum_ref,
+                o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.int32)
+    w = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jax.lax.dot_general(
+        a, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        acc = acc_ref[...].astype(jnp.float32)
+        a_scale = ascale_ref[0, 0]
+        a_zp = azp_ref[0, 0].astype(jnp.float32)
+        corr = a_zp * colsum_ref[0, :].astype(jnp.float32)  # (bn,)
+        w_scale = wscale_ref[0, :]  # (bn,)
+        o_ref[...] = ((acc - corr[None, :]) * a_scale * w_scale[None, :]
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def quant_matmul_kernel(
+    a_q: jax.Array,  # (M, K) int8
+    w_q: jax.Array,  # (K, N) int8
+    a_scale: jax.Array,  # scalar f32
+    a_zp: jax.Array,  # scalar int32
+    w_scale: jax.Array,  # (N,) f32 per-channel
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = a_q.shape
+    K2, N = w_q.shape
+    assert K == K2, (a_q.shape, w_q.shape)
+
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    pad_m, pad_n, pad_k = (-M) % bm, (-N) % bn, (-K) % bk
+    if pad_m or pad_k:
+        a_q = jnp.pad(a_q, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w_q = jnp.pad(w_q, ((0, pad_k), (0, pad_n)))
+    if pad_n:
+        w_scale = jnp.pad(w_scale, (0, pad_n))
+    Mp, Kp = a_q.shape
+    _, Np = w_q.shape
+
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)  # (Np,) zero-point folding
+    n_m, n_n, n_k = Mp // bm, Np // bn, Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, n_k=n_k),
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, k: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(
+        a_q,
+        w_q,
+        a_scale.reshape(1, 1).astype(jnp.float32),
+        a_zp.reshape(1, 1).astype(jnp.int32),
+        w_scale.reshape(1, Np).astype(jnp.float32),
+        colsum.reshape(1, Np),
+    )
+    if pad_m or pad_n:
+        out = out[:M, :N]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# W8A16: weight-only int8 quantization (bf16/f32 activations x int8 weights)
+# — the standard serving GEMM when activation quantization is too lossy.
+# Dequantization happens per-tile in VMEM: w_tile.astype(f32) * scale[n].
+# ---------------------------------------------------------------------------
+
+
+def _w8a16_kernel(x_ref, w_ref, wscale_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)  # int8 -> f32 dequant (scale applied at epilogue)
+    acc_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _epilogue():
+        o_ref[...] = (acc_ref[...] * wscale_ref[0, :][None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype", "interpret"),
+)
+def w8a16_matmul_kernel(
+    x: jax.Array,  # (M, K) float (bf16/f32)
+    w_q: jax.Array,  # (K, N) int8
+    w_scale: jax.Array,  # (N,) f32 per-channel symmetric
+    *,
+    block_m: int = 128,
+    block_n: int = 512,
+    block_k: int = 128,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    M, K = x.shape
+    K2, N = w_q.shape
+    assert K == K2
+
+    bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
+    pad_m, pad_n, pad_k = (-M) % bm, (-N) % bn, (-K) % bk
+    if pad_m or pad_k:
+        x = jnp.pad(x, ((0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        w_q = jnp.pad(w_q, ((0, pad_k), (0, pad_n)))
+    if pad_n:
+        w_scale = jnp.pad(w_scale, (0, pad_n))
+    Mp, Kp = x.shape
+    _, Np = w_q.shape
+    n_m, n_n, n_k = Mp // bm, Np // bn, Kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_w8a16_kernel, n_k=n_k),
+        grid=(n_m, n_n, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_q, w_scale.reshape(1, Np).astype(jnp.float32))
+    if pad_m or pad_n:
+        out = out[:M, :N]
+    return out

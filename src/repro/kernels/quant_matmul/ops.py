@@ -1,0 +1,64 @@
+"""Public op: quantized linear layer backed by the Pallas W8A8 kernel.
+
+On CPU (this container) the kernel runs with ``interpret=True``; on TPU it
+compiles to the MXU int8 path. ``quant_linear`` is the layer-level
+convenience that quantizes activations on the fly against int8 weights
+(the deployed TinyML segment hot path)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, quantize
+from repro.kernels.quant_matmul.kernel import quant_matmul_kernel, w8a16_matmul_kernel
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quant_matmul(a_q, w_q, a_scale, a_zp, w_scale, *, out_dtype=jnp.float32,
+                 interpret: bool | None = None, **block_kw):
+    """(M,K) int8 x (K,N) int8 -> (M,N) ``out_dtype``."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    return quant_matmul_kernel(a_q, w_q, jnp.asarray(a_scale), jnp.asarray(a_zp),
+                               w_scale, out_dtype=out_dtype, interpret=interpret,
+                               **block_kw)
+
+
+def quant_linear(x: jax.Array, w: QTensor, *, use_kernel: bool = True,
+                 interpret: bool | None = None) -> jax.Array:
+    """x: (..., K) float; w: QTensor (K, N) int8 per-channel (axis=1).
+
+    Quantizes activations per-tensor (asymmetric, TFLite convention) and
+    runs the int8 GEMM."""
+    assert w.axis in (1, None), "weights must be per-output-channel or per-tensor"
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    xa = quantize(x.reshape(-1, K), axis=None, symmetric=False)
+    w_scale = (w.scale if w.axis == 1 else jnp.broadcast_to(w.scale, (w.values.shape[1],)))
+    if use_kernel:
+        out = quant_matmul(xa.values, w.values, xa.scale, xa.zero_point, w_scale,
+                           interpret=interpret)
+    else:
+        out = quant_matmul_ref(xa.values, w.values, xa.scale, xa.zero_point, w_scale)
+    return out.reshape(*batch_shape, -1).astype(x.dtype)
+
+
+def w8a16_linear(x: jax.Array, w: QTensor, *, interpret: bool | None = None
+                 ) -> jax.Array:
+    """Weight-only quantized linear: float activations x int8 weights.
+    w: QTensor (K, N), per-output-channel symmetric."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    assert w.axis in (1, None)
+    batch_shape = x.shape[:-1]
+    K = x.shape[-1]
+    w_scale = (w.scale if w.axis == 1
+               else jnp.broadcast_to(w.scale, (w.values.shape[1],)))
+    out = w8a16_matmul_kernel(x.reshape(-1, K), w.values, w_scale,
+                              interpret=interpret)
+    return out.reshape(*batch_shape, -1).astype(x.dtype)

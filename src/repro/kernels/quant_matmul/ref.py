@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the W8A8 quantized matmul kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(a_q, w_q, a_scale, a_zp, w_scale, out_dtype=jnp.float32):
+    """Exact integer-arithmetic reference (Jacob et al. CVPR'18 semantics)."""
+    acc = jnp.matmul(a_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    colsum = jnp.sum(w_q.astype(jnp.int32), axis=0)
+    corr = a_zp.astype(jnp.int32) * colsum[None, :]
+    deq = (acc - corr).astype(jnp.float32) * a_scale.astype(jnp.float32) * \
+        w_scale.astype(jnp.float32)[None, :]
+    return deq.astype(out_dtype)
+
+
+def float_matmul_ref(a_q, w_q, a_scale, a_zp, w_scale):
+    """Dequantize-then-matmul reference (same math, float order)."""
+    a = (a_q.astype(jnp.float32) - a_zp.astype(jnp.float32)) * a_scale
+    w = w_q.astype(jnp.float32) * w_scale[None, :]
+    return a @ w
+
+
+def w8a16_matmul_ref(x, w_q, w_scale):
+    """Weight-only dequantize-then-matmul reference."""
+    w = w_q.astype(jnp.float32) * w_scale.astype(jnp.float32)[None, :]
+    return x.astype(jnp.float32) @ w

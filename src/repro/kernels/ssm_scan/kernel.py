@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: chunked Mamba2/SSD scan.
+
+The long-context (500k) hot path for the SSM/hybrid architectures. The
+CUDA reference implementation is a warp-level associative scan; the
+TPU-native adaptation is the chunk-parallel SSD decomposition — dense
+(chunk x chunk) and (chunk x state) matmuls on the MXU, with the
+inter-chunk recurrence carried *sequentially through the grid*: Pallas TPU
+executes the grid in lexicographic order per core, so the running state
+lives in VMEM scratch across chunk steps (same trick as the flash-attn
+accumulator, applied along the time axis).
+
+Grid: (batch*heads, n_chunks). Per step, for one (b, h):
+    y_intra = (C B^T ∘ L) (dt x)          intra-chunk, L = exp(segsum(dA))
+    y_state = (C ∘ exp(cum)) h_prev        carried-state contribution
+    h_new   = exp(total) h_prev + (B ∘ decay_out)^T (dt x)
+
+Chunk=128 keeps every operand 2D-tiled at (128, ds|ph) — MXU aligned for
+ds, ph >= 64; the (chunk x chunk) decay matrix is 64 KB f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{j < t <= i} dA_t (lower-triangular), else -inf."""
+    C = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[:, None] - cs[None, :]
+    mask = jnp.tril(jnp.ones((C, C), dtype=bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _ssd_kernel(x_ref, b_ref, c_ref, da_ref, dt_ref, y_ref, h_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # (C, ph)
+    bm = b_ref[0].astype(jnp.float32)  # (C, ds)
+    cm = c_ref[0].astype(jnp.float32)  # (C, ds)
+    da = da_ref[0, :].astype(jnp.float32)  # (C,)
+    dt = dt_ref[0, :].astype(jnp.float32)  # (C,)
+
+    L = jnp.exp(_segsum(da))  # (C, C)
+    xdt = x * dt[:, None]  # (C, ph)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (C, C)
+    y_intra = jax.lax.dot_general(cb * L, xdt, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    cum = jnp.cumsum(da)  # (C,)
+    decay_in = jnp.exp(cum)[:, None]  # (C, 1)
+    h_prev = h_ref[...]  # (ds, ph)
+    y_state = jax.lax.dot_general(cm * decay_in, h_prev, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+
+    total = cum[-1]
+    decay_out = jnp.exp(total - cum)[:, None]  # (C, 1)
+    h_ref[...] = jnp.exp(total) * h_prev + jax.lax.dot_general(
+        bm * decay_out, xdt, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    y_ref[0] = (y_intra + y_state).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan_kernel(
+    x: jax.Array,  # (BH, S, ph) head-major inputs
+    b: jax.Array,  # (BH, S, ds)
+    c: jax.Array,  # (BH, S, ds)
+    dA: jax.Array,  # (BH, S)  = dt * A  (negative)
+    dt: jax.Array,  # (BH, S)  discretization step
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    BH, S, ph = x.shape
+    ds = b.shape[2]
+    ck = min(chunk, S)
+    pad = (-S) % ck
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad)))
+    Sp = x.shape[1]
+    n_chunks = Sp // ck
+
+    y = pl.pallas_call(
+        _ssd_kernel,
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, ck, ph), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, ck, ds), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, ck, ds), lambda h, i: (h, i, 0)),
+            pl.BlockSpec((1, ck), lambda h, i: (h, i)),
+            pl.BlockSpec((1, ck), lambda h, i: (h, i)),
+        ],
+        out_specs=pl.BlockSpec((1, ck, ph), lambda h, i: (h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sp, ph), x.dtype),
+        scratch_shapes=[pltpu.VMEM((ds, ph), jnp.float32)],
+        interpret=interpret,
+    )(x, b, c, dA, dt)
+    if pad:
+        y = y[:, :S]
+    return y

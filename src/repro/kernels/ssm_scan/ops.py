@@ -1,0 +1,30 @@
+"""Public op: chunked SSD scan in model layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def ssm_scan(x, b, c, dA, dt, *, chunk: int = 128,
+             interpret: bool | None = None) -> jax.Array:
+    """x: (B, S, H, ph); b/c: (B, S, ds) shared across heads; dA/dt: (B, S, H).
+
+    Returns y: (B, S, H, ph)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, ph = x.shape
+    ds = b.shape[2]
+    xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, ph)
+    bf = jnp.broadcast_to(b[:, None], (B, H, S, ds)).reshape(B * H, S, ds)
+    cf = jnp.broadcast_to(c[:, None], (B, H, S, ds)).reshape(B * H, S, ds)
+    dAf = dA.transpose(0, 2, 1).reshape(B * H, S)
+    dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+    y = ssm_scan_kernel(xf, bf, cf, dAf, dtf, chunk=chunk, interpret=interpret)
+    return y.reshape(B, H, S, ph).transpose(0, 2, 1, 3)

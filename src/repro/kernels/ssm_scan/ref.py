@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD scan kernel: exact sequential recurrence.
+
+    h_t = exp(dA_t) h_{t-1} + dt_t * B_t x_t^T      (outer product, ds x ph)
+    y_t = C_t . h_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, b, c, dA, dt):
+    """x: (BH, S, ph); b/c: (BH, S, ds); dA/dt: (BH, S). Returns (BH, S, ph)."""
+    xf = x.astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    cf = c.astype(jnp.float32)
+    dAf = dA.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+
+    def per_head(xh, bh, ch, dah, dth):
+        def step(h, inp):
+            x_t, b_t, c_t, da_t, dt_t = inp
+            h = jnp.exp(da_t) * h + dt_t * jnp.outer(b_t, x_t)
+            y_t = c_t @ h
+            return h, y_t
+
+        h0 = jnp.zeros((bh.shape[1], xh.shape[1]), dtype=jnp.float32)
+        _, ys = jax.lax.scan(step, h0, (xh, bh, ch, dah, dth))
+        return ys
+
+    ys = jax.vmap(per_head)(xf, bf, cf, dAf, dtf)
+    return ys.astype(x.dtype)

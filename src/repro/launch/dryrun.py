@@ -1,0 +1,195 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512"
+    # The two LICM passes hoist f32 operand-converts of scanned bf16
+    # weight/cache stacks out of while loops — ops that only exist in the
+    # CPU lowering (TPU MXUs consume bf16 natively). Leaving them enabled
+    # inflates the per-device memory estimate by full-stack f32 copies
+    # (e.g. +11 GB on the 235B MoE train cell). Disabling them makes
+    # memory_analysis() faithful to the TPU buffer set.
+    " --xla_disable_hlo_passes=while-loop-expensive-invariant-code-motion,"
+    "while-loop-invariant-code-motion"
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede every other import (jax locks the device
+count at first init). For each cell this driver:
+
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod),
+  2. assembles the jitted step with full in/out shardings (launch.steps),
+  3. ``.lower(...).compile()`` from ShapeDtypeStructs (no allocation),
+  4. records ``memory_analysis()`` (proves the cell fits HBM),
+     ``cost_analysis()`` (FLOPs / bytes for the roofline), and the
+     per-collective byte totals parsed from the optimized HLO,
+  5. writes ``experiments/dryrun/<arch>__<shape>__<mesh>.json``.
+
+Usage:
+  python -m repro.launch.dryrun --all [--multi-pod|--both]
+  python -m repro.launch.dryrun --arch deepseek-7b --shape train_4k
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.configs import ARCH_IDS, SHAPES, applicable_shapes, get_config  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import build_cell  # noqa: E402
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+_DTYPE_BYTES = {
+    "pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+# `%name = <output-shape(s)> <kind>(operands...)` — output shapes sit
+# between '=' and the op mnemonic in optimized HLO.
+_COLL_RE = re.compile(
+    r"=\s+(\(?[\w\[\],{}\s]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(",
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shapes_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += int(n * _DTYPE_BYTES[dt])
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-kind output-shape bytes of every collective in the optimized
+    HLO (-start counted once; -done lines are the async completions)."""
+    out: dict[str, int] = {}
+    counts: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line or "-done." in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shapes_str, kind = m.group(1), m.group(2)
+        out[kind] = out.get(kind, 0) + _shape_bytes(shapes_str)
+        counts[kind] = counts.get(kind, 0) + 1
+    return {"bytes": out, "counts": counts, "total_bytes": sum(out.values())}
+
+
+def _flops_and_bytes(cost: dict) -> tuple[float, float]:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return flops, byts
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        fn, args = build_cell(cfg, shape, mesh)
+        lowered = fn.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    from repro.parallel.hlo_analysis import weighted_collective_bytes
+
+    coll_weighted = weighted_collective_bytes(hlo)
+    flops, byts = _flops_and_bytes(cost)
+    n_dev = mesh.size
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_name,
+        "n_devices": n_dev,
+        "compile_s": round(time.time() - t0, 1),
+        "flops_per_device": flops,
+        "bytes_per_device": byts,
+        "collectives": coll,
+        "collectives_weighted": coll_weighted,  # loop-trip-aware (§Roofline)
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_estimate_bytes": mem.argument_size_in_bytes
+            + mem.output_size_in_bytes
+            + mem.temp_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "params": cfg.n_params,
+    }
+    if save:
+        OUT_DIR.mkdir(parents=True, exist_ok=True)
+        path = OUT_DIR / f"{arch}__{shape_name}__{mesh_name}.json"
+        path.write_text(json.dumps(record, indent=1))
+    hbm = 16 * 1024**3
+    print(
+        f"[dryrun] {arch:22s} {shape_name:12s} {mesh_name:7s} "
+        f"compile {record['compile_s']:6.1f}s  "
+        f"mem/dev {record['memory']['peak_estimate_bytes'] / 1e9:6.2f} GB "
+        f"({'fits' if record['memory']['peak_estimate_bytes'] < hbm else 'OVER'})  "
+        f"flops/dev {flops:.3e}  coll {coll['total_bytes'] / 1e6:8.1f} MB",
+        flush=True,
+    )
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true", help="run 16x16 and 2x16x16")
+    args = ap.parse_args()
+
+    assert jax.device_count() == 512, (
+        f"dry-run needs 512 placeholder devices, got {jax.device_count()} — "
+        "XLA_FLAGS must be set before any jax import")
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in applicable_shapes(arch):
+                cells.append((arch, shape))
+    else:
+        assert args.arch and args.shape, "--arch and --shape (or --all)"
+        cells.append((args.arch, args.shape))
+
+    meshes = [args.multi_pod] if not args.both else [False, True]
+    failures = []
+    for multi_pod in meshes:
+        for arch, shape in cells:
+            try:
+                run_cell(arch, shape, multi_pod)
+            except Exception as e:  # noqa: BLE001 — report all failures at the end
+                failures.append((arch, shape, multi_pod, repr(e)[:200]))
+                print(f"[dryrun] FAIL {arch} {shape} multi_pod={multi_pod}: {e}",
+                      flush=True)
+    if failures:
+        raise SystemExit(f"{len(failures)} dry-run cells failed: {failures}")
+    print(f"[dryrun] all {len(cells) * len(meshes)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import, and smoke tests must keep seeing 1 device.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 chips (data, model). Multi-pod: 2 pods x 256
+    chips (pod, data, model) — the 'pod' axis crosses DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_parallel: int = 1):
+    """A mesh over whatever devices exist locally (tests / examples)."""
+    n = jax.device_count()
+    assert n % model_parallel == 0
+    return jax.make_mesh((n // model_parallel, model_parallel), ("data", "model"))

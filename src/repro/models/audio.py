@@ -1,0 +1,38 @@
+"""Audio-codes utilities for the musicgen backbone (EnCodec token streams).
+
+MusicGen's *delay pattern* (Copet et al. 2023, §2.2): codebook k of frame
+t is predicted at step t + k, so all K codebooks can be decoded
+autoregressively with a single transformer pass per step instead of K.
+These helpers convert between the aligned (B, T, K) frame grid and the
+delayed (B, T + K - 1, K) training/decoding layout."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def delay_pattern(codes: jax.Array, pad_id: int) -> jax.Array:
+    """(B, T, K) aligned codes -> (B, T + K - 1, K) delayed layout;
+    codebook k is shifted right by k steps, holes filled with ``pad_id``."""
+    B, T, K = codes.shape
+    out = jnp.full((B, T + K - 1, K), pad_id, dtype=codes.dtype)
+    for k in range(K):
+        out = out.at[:, k : k + T, k].set(codes[:, :, k])
+    return out
+
+
+def undelay_pattern(delayed: jax.Array, n_frames: int) -> jax.Array:
+    """Inverse of :func:`delay_pattern`: (B, T + K - 1, K) -> (B, T, K)."""
+    B, _, K = delayed.shape
+    cols = [delayed[:, k : k + n_frames, k] for k in range(K)]
+    return jnp.stack(cols, axis=-1)
+
+
+def delay_mask(n_frames: int, n_codebooks: int) -> jax.Array:
+    """(T + K - 1, K) bool mask of REAL (non-pad) positions in the delayed
+    layout — used to exclude pad slots from the training loss."""
+    S = n_frames + n_codebooks - 1
+    t = jnp.arange(S)[:, None]
+    k = jnp.arange(n_codebooks)[None, :]
+    return (t >= k) & (t < k + n_frames)

@@ -1,0 +1,61 @@
+"""Shared conv primitives for the paper's CNN models (inference path).
+
+BatchNorm is folded into per-channel (scale, bias) applied after the conv
+— the deployed TFLite-int8 graph form the paper benchmarks. NHWC layout.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def init_conv(rng, k: int, c_in: int, c_out: int, depthwise: bool = False) -> dict:
+    if depthwise:
+        shape = (k, k, 1, c_in)  # HWIO with feature_group_count = c_in
+        fan_in = k * k
+    else:
+        shape = (k, k, c_in, c_out)
+        fan_in = k * k * c_in
+    w = jax.random.normal(rng, shape, dtype=jnp.float32) * math.sqrt(2.0 / fan_in)
+    return {"w": w, "scale": jnp.ones((c_out if not depthwise else c_in,)),
+            "bias": jnp.zeros((c_out if not depthwise else c_in,))}
+
+
+def conv2d(p: dict, x: jax.Array, stride: int = 1, depthwise: bool = False,
+           act: str = "relu6") -> jax.Array:
+    k = p["w"].shape[0]
+    pad = ((k - 1) // 2, k // 2)
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(stride, stride), padding=(pad, pad),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=(x.shape[-1] if depthwise else 1),
+    )
+    y = y * p["scale"] + p["bias"]
+    if act == "relu6":
+        y = jnp.clip(y, 0.0, 6.0)
+    elif act == "relu":
+        y = jax.nn.relu(y)
+    return y
+
+
+def max_pool(x: jax.Array, k: int = 3, stride: int = 2) -> jax.Array:
+    pad = ((k - 1) // 2, k // 2)
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, k, k, 1), (1, stride, stride, 1),
+        (pad, pad) and ((0, 0), pad, pad, (0, 0)))
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    return jnp.mean(x, axis=(1, 2))
+
+
+def init_dense(rng, d_in: int, d_out: int) -> dict:
+    w = jax.random.normal(rng, (d_in, d_out), dtype=jnp.float32) / math.sqrt(d_in)
+    return {"w": w, "b": jnp.zeros((d_out,))}
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["w"] + p["b"]

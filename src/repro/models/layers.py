@@ -1,0 +1,639 @@
+"""Neural-net primitives for the model zoo (pure functional JAX).
+
+Conventions:
+  * params are nested dicts of jax.Array leaves; init fns take (rng, cfg).
+  * activations: (batch, seq, d_model); attention heads: (B, S, H, Dh).
+  * matmuls accumulate in f32 (``preferred_element_type``), norms/softmax
+    computed in f32 and cast back to the working dtype.
+  * attention is memory-efficient by construction: q>1 paths use an
+    online-softmax scan over KV chunks (the 32k-prefill cells would
+    otherwise materialize 32k x 32k score matrices); q==1 decode paths use
+    plain O(S) attention which XLA shards cleanly (including
+    sequence-sharded KV caches for the 500k-context cells).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+Params = dict
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Logical-axis sharding constraints (MaxText-style): every major
+# intermediate is pinned so XLA SPMD cannot drift into replicating heads /
+# hidden dims at scale. All helpers no-op outside a mesh context and skip
+# non-divisible dims.
+# ---------------------------------------------------------------------------
+
+
+def _mesh_axes() -> dict:
+    try:
+        from jax._src.mesh import thread_resources
+
+        return dict(thread_resources.env.physical_mesh.shape)
+    except Exception:  # noqa: BLE001
+        return {}
+
+
+def _dp_spec(axes: dict, B: int):
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    size = 1
+    for a in dp:
+        size *= axes[a]
+    if dp and B % size == 0 and B >= size:
+        return dp if len(dp) > 1 else dp[0]
+    return None
+
+
+def constrain(x: jax.Array, model_dim: int | None) -> jax.Array:
+    """Pin (batch -> DP axes, ``model_dim`` -> 'model' if divisible)."""
+    axes = _mesh_axes()
+    if not axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = [None] * x.ndim
+    spec[0] = _dp_spec(axes, x.shape[0])
+    m = axes.get("model", 1)
+    if model_dim is not None and m > 1:
+        d = model_dim % x.ndim
+        if x.shape[d] % m == 0 and x.shape[d] >= m:
+            spec[d] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_param(w: jax.Array, model_dim: int) -> jax.Array:
+    """Pin a weight's tensor-parallel dim to 'model', leaving every other
+    dim UNCONSTRAINED (so FSDP data-sharding survives). Without this the
+    SPMD partitioner sometimes decides to all-gather multi-GB weights
+    inside the layer loop (observed on the 72B MLP stacks at decode)."""
+    axes = _mesh_axes()
+    m = axes.get("model", 1)
+    d = model_dim % w.ndim
+    if not axes or m <= 1 or w.shape[d] % m or w.shape[d] < m:
+        return w
+    from jax.sharding import PartitionSpec as P
+
+    spec: list = [P.UNCONSTRAINED] * w.ndim
+    spec[d] = "model"
+    return jax.lax.with_sharding_constraint(w, P(*spec))
+
+
+def _dense_init(rng, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(max(1, fan_in))
+    return (jax.random.normal(rng, shape, dtype=jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(cfg: ModelConfig, d: int | None = None) -> Params:
+    return {"scale": jnp.ones((d or cfg.d_model,), dtype=cdtype(cfg))}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * p["scale"]
+
+
+# ---------------------------------------------------------------------------
+# RoPE (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies for half the head dim."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               mrope_sections: tuple[int, int, int] | None = None) -> jax.Array:
+    """Rotate (B, S, H, Dh). ``positions``: (B, S) for standard RoPE or
+    (3, B, S) for M-RoPE (Qwen2-VL), where the Dh/2 frequency slots are
+    split into (t, h, w) sections each driven by its own position stream."""
+    B = x.shape[0]
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)  # (dh/2,)
+    if mrope_sections is None:
+        pos = positions.astype(jnp.float32)  # (B, S)
+        angles = pos[..., None] * inv[None, None, :]  # (B, S, dh/2)
+    else:
+        assert positions.ndim == 3, "M-RoPE needs positions (3, B, S)"
+        sec = mrope_sections
+        assert sum(sec) == dh // 2, f"M-RoPE sections {sec} must sum to {dh // 2}"
+        pos = positions.astype(jnp.float32)  # (3, B, S)
+        section_id = jnp.repeat(jnp.arange(3), jnp.array(sec), total_repeat_length=dh // 2)
+        pos_per_freq = pos[section_id]  # (dh/2, B, S)
+        angles = jnp.moveaxis(pos_per_freq, 0, -1) * inv  # (B, S, dh/2)
+    cos = jnp.cos(angles)[:, :, None, :]  # (B, S, 1, dh/2)
+    sin = jnp.sin(angles)[:, :, None, :]
+    xf = x.astype(jnp.float32)
+    x1, x2 = xf[..., 0::2], xf[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x2 * cos + x1 * sin
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention cores
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def plain_attention(q, k, v, *, q_positions, kv_positions, scale) -> jax.Array:
+    """O(Sq*Skv) attention with causal position masking (decode path).
+
+    q: (B, Sq, H, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv) — Dk and
+    Dv may differ (MLA). GQA by head-group reshape."""
+    B, Sq, H, Dk = q.shape
+    Hkv, Dv = k.shape[2], v.shape[3]
+    G = H // Hkv
+    qr = q.reshape(B, Sq, Hkv, G, Dk)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qr, k, preferred_element_type=jnp.float32)
+    s = s * scale
+    mask = kv_positions[None, None, :] <= q_positions[:, :, None]  # (B?,Sq,Skv)
+    mask = mask[:, :, None, None, :] if mask.ndim == 3 else mask[None, :, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqhgk,bkhd->bqhgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, q_positions, kv_positions, scale,
+                      kv_chunk: int, q_chunk: int = 512,
+                      causal_skip: bool = False) -> jax.Array:
+    """Online-softmax attention, tiled over BOTH query and KV chunks
+    (flash-style, pure JAX). Never materializes more than a
+    (q_chunk x kv_chunk) score block per (batch, head); differentiable.
+
+    q: (B, Sq, H, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv);
+    q_positions: (B, Sq); kv_positions: (Skv,).
+
+    Memory discipline: both scans iterate over chunk INDICES and
+    dynamic-slice in place — no transposed chunk copies, no f32 upcasts of
+    the full tensors (matmuls run in the storage dtype with f32
+    accumulation via ``preferred_element_type``, the MXU convention)."""
+    B, Sq, H, Dk = q.shape
+    Skv, Hkv, Dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // Hkv
+
+    n_kv = -(-Skv // kv_chunk)
+    pad_kv = n_kv * kv_chunk - Skv
+    if pad_kv:
+        k = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad_kv), constant_values=2**30)
+
+    qc = min(q_chunk, Sq)
+    n_q = -(-Sq // qc)
+    pad_q = n_q * qc - Sq
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+        q_positions = jnp.pad(q_positions, ((0, 0), (0, pad_q)), mode="edge")
+
+    def q_block(qi):
+        qs = qi * qc
+        qch = jax.lax.dynamic_slice_in_dim(q, qs, qc, axis=1)
+        qpos = jax.lax.dynamic_slice_in_dim(q_positions, qs, qc, axis=1)
+        qr = qch.reshape(B, qc, Hkv, G, Dk)
+
+        m0 = jnp.full((B, qc, Hkv, G), NEG_INF, dtype=jnp.float32)
+        l0 = jnp.zeros((B, qc, Hkv, G), dtype=jnp.float32)
+        a0 = jnp.zeros((B, qc, Hkv, G, Dv), dtype=jnp.float32)
+
+        def body(carry, ci):
+            m, l, acc = carry
+            start = ci * kv_chunk
+            kch = jax.lax.dynamic_slice_in_dim(k, start, kv_chunk, axis=1)
+            vch = jax.lax.dynamic_slice_in_dim(v, start, kv_chunk, axis=1)
+            pch = jax.lax.dynamic_slice_in_dim(kv_positions, start, kv_chunk)
+            s = jnp.einsum("bqhgd,bkhd->bqhgk", qr, kch,
+                           preferred_element_type=jnp.float32) * scale
+            mask = pch[None, None, :] <= qpos[:, :, None]  # (B, qc, C)
+            s = jnp.where(mask[:, :, None, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqhgk,bkhd->bqhgd", p.astype(v.dtype), vch,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        if causal_skip:
+            # Causal self-attention: kv blocks past this q block's last
+            # position are fully masked — skip them with a DYNAMIC loop
+            # bound (~2x fewer attention FLOPs at steady state). fori_loop
+            # with a traced bound is forward-only: used by the serving
+            # paths (prefill), not training (scan keeps the bwd pass).
+            hi = jnp.max(qpos)  # last real q position in this block
+            n_needed = jnp.minimum(
+                jnp.int32(n_kv), (hi.astype(jnp.int32) + kv_chunk) // kv_chunk)
+            (m, l, acc) = jax.lax.fori_loop(
+                0, n_needed, lambda ci, c: body(c, ci)[0], (m0, l0, a0))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                body, (m0, l0, a0), jnp.arange(n_kv, dtype=jnp.int32))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return out.reshape(B, qc, H, Dv).astype(q.dtype)
+
+    if n_q == 1:
+        out = q_block(jnp.int32(0))
+    else:
+        _, blocks = jax.lax.scan(
+            lambda _, qi: (None, q_block(qi)), None,
+            jnp.arange(n_q, dtype=jnp.int32))
+        out = jnp.moveaxis(blocks, 0, 1).reshape(B, n_q * qc, H, Dv)
+    if pad_q:
+        out = out[:, :Sq]
+    return out
+
+
+def attention_core(cfg: ModelConfig, q, k, v, q_positions, kv_positions) -> jax.Array:
+    scale = 1.0 / math.sqrt(q.shape[-1])
+    if cfg.use_flash_kernel and q.shape[1] > 8:
+        from repro.kernels.flash_attention.ops import flash_attention
+
+        return flash_attention(q, k, v, q_positions=q_positions,
+                               kv_positions=kv_positions, scale=scale)
+    if q.shape[1] <= 8:  # decode: O(S) memory already, no chunking needed
+        return plain_attention(q, k, v, q_positions=q_positions,
+                               kv_positions=kv_positions, scale=scale)
+    return chunked_attention(q, k, v, q_positions=q_positions,
+                             kv_positions=kv_positions, scale=scale,
+                             kv_chunk=cfg.kv_chunk, q_chunk=cfg.q_chunk,
+                             causal_skip=cfg.causal_skip)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer (with optional KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_attention(rng, cfg: ModelConfig) -> Params:
+    d, H, Hkv, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = cdtype(cfg)
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": _dense_init(ks[0], (d, H, Dh), dtype=dt),
+        "wk": _dense_init(ks[1], (d, Hkv, Dh), dtype=dt),
+        "wv": _dense_init(ks[2], (d, Hkv, Dh), dtype=dt),
+        "wo": _dense_init(ks[3], (H * Dh, d), scale=1.0 / math.sqrt(H * Dh), dtype=dt),
+    }
+
+
+def apply_attention(cfg: ModelConfig, p: Params, x: jax.Array,
+                    positions: jax.Array, cache: Params | None = None
+                    ) -> tuple[jax.Array, Params | None]:
+    """x: (B, S, D). ``positions``: (B, S) or (3, B, S) for M-RoPE.
+    ``cache``: {"k","v": (B, Smax, Hkv, Dh)} updated at ``positions``.
+    Returns (out, new_cache)."""
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q = constrain(q, 2)  # heads -> 'model' (tensor parallel attention)
+    k = constrain(k, 2)
+    v = constrain(v, 2)
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+
+    # scalar (B, S) position ids for masking (M-RoPE masks on the t stream)
+    pos_ids = positions[0] if positions.ndim == 3 else positions
+
+    if cache is not None:
+        # insert new k/v at the (uniform) write offset = pos_ids[:, 0]
+        offset = pos_ids[0, 0]
+        if "k_scale" in cache:
+            # quantized KV cache: symmetric int8 per (token, head)
+            def q8(t):
+                amax = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1)
+                scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+                vals = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                                -127, 127).astype(jnp.int8)
+                return vals, scale
+
+            kq, ks = q8(k)
+            vq, vs = q8(v)
+            upd = lambda c, u: jax.lax.dynamic_update_slice_in_dim(  # noqa: E731
+                c, u.astype(c.dtype), offset, axis=1)
+            new_cache = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
+                         "k_scale": upd(cache["k_scale"], ks),
+                         "v_scale": upd(cache["v_scale"], vs)}
+            ck = (new_cache["k"].astype(x.dtype)
+                  * new_cache["k_scale"][..., None].astype(x.dtype))
+            cv = (new_cache["v"].astype(x.dtype)
+                  * new_cache["v_scale"][..., None].astype(x.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), offset, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), offset, axis=1)
+            new_cache = {"k": ck, "v": cv}
+        kv_positions = jnp.arange(ck.shape[1], dtype=jnp.int32)
+        out = attention_core(cfg, q, ck, cv, pos_ids, kv_positions)
+    else:
+        kv_positions = jnp.arange(S, dtype=jnp.int32)
+        out = attention_core(cfg, q, k, v, pos_ids, kv_positions)
+        new_cache = None
+    out = constrain(out, 2)
+    y = jnp.einsum("bsf,fd->bsd", out.reshape(B, S, H * Dh),
+                   p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(rng, cfg: ModelConfig) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    dt = cdtype(cfg)
+    ks = jax.random.split(rng, 6)
+    return {
+        "q_down": _dense_init(ks[0], (d, qlr), dtype=dt),
+        "q_up": _dense_init(ks[1], (qlr, H, dn + dr), dtype=dt),
+        "kv_down": _dense_init(ks[2], (d, kvlr + dr), dtype=dt),
+        "kv_up_k": _dense_init(ks[3], (kvlr, H, dn), dtype=dt),
+        "kv_up_v": _dense_init(ks[4], (kvlr, H, dv), dtype=dt),
+        "wo": _dense_init(ks[5], (H * dv, d), dtype=dt),
+    }
+
+
+def apply_mla(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
+              cache: Params | None = None, absorbed: bool = False
+              ) -> tuple[jax.Array, Params | None]:
+    """Latent attention. The KV cache stores only the compressed latent
+    (B, S, kv_lora_rank) plus the shared rope key (B, S, rope_dim) — the
+    MLA memory win. ``absorbed=True`` computes scores in latent space
+    (the optimized decode path; never expands per-head K/V)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    pos_ids = positions[0] if positions.ndim == 3 else positions
+
+    q_lat = jnp.einsum("bsd,dr->bsr", x, p["q_down"], preferred_element_type=jnp.float32
+                       ).astype(x.dtype)
+    q = jnp.einsum("bsr,rhe->bshe", q_lat, p["q_up"], preferred_element_type=jnp.float32
+                   ).astype(x.dtype)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["kv_down"], preferred_element_type=jnp.float32
+                    ).astype(x.dtype)
+    c_kv, k_rope = kv[..., : cfg.kv_lora_rank], kv[..., cfg.kv_lora_rank:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+
+    if cache is not None:
+        offset = pos_ids[0, 0]
+        c_kv = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), offset, axis=1)
+        k_rope = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), offset, axis=1)
+        new_cache = {"c_kv": c_kv, "k_rope": k_rope}
+    else:
+        new_cache = None
+    Skv = c_kv.shape[1]
+    kv_positions = jnp.arange(Skv, dtype=jnp.int32)
+    scale = 1.0 / math.sqrt(dn + dr)
+
+    if absorbed:
+        # score = (q_nope^T W_uk) c + q_rope^T k_rope, all in latent space
+        q_abs = jnp.einsum("bshe,rhe->bshr", q_nope, p["kv_up_k"],
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        s = jnp.einsum("bshr,bkr->bshk", q_abs, c_kv, preferred_element_type=jnp.float32)
+        s += jnp.einsum("bshe,bke->bshk", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+        s = s * scale
+        mask = kv_positions[None, None, :] <= pos_ids[:, :, None]
+        s = jnp.where(mask[:, :, None, :], s, NEG_INF)
+        prob = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bshk,bkr->bshr", prob.astype(x.dtype), c_kv,
+                           preferred_element_type=jnp.float32).astype(x.dtype)
+        out = jnp.einsum("bshr,rhe->bshe", o_lat, p["kv_up_v"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    else:
+        k_nope = jnp.einsum("bkr,rhe->bkhe", c_kv, p["kv_up_k"],
+                            preferred_element_type=jnp.float32).astype(x.dtype)
+        v = jnp.einsum("bkr,rhe->bkhe", c_kv, p["kv_up_v"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :], (*k_rope.shape[:2], H, dr))
+        k_full = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+        q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+        if S > 8:
+            out = chunked_attention(q_full, k_full, v, q_positions=pos_ids,
+                                    kv_positions=kv_positions, scale=scale,
+                                    kv_chunk=cfg.kv_chunk, q_chunk=cfg.q_chunk)
+        else:
+            out = plain_attention(q_full, k_full, v, q_positions=pos_ids,
+                                  kv_positions=kv_positions, scale=scale)
+    y = jnp.einsum("bsf,fd->bsd", out.reshape(B, S, H * dv), p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(rng, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    dt = cdtype(cfg)
+    ks = jax.random.split(rng, 3)
+    p = {
+        "w_in": _dense_init(ks[0], (d, f), dtype=dt),
+        "w_out": _dense_init(ks[1], (f, d), dtype=dt),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = _dense_init(ks[2], (d, f), dtype=dt)
+    return p
+
+
+def apply_mlp(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    h = constrain(h, 2)  # hidden f -> 'model' (Megatron column-parallel)
+    if cfg.gated_mlp:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+        h = jax.nn.silu(constrain(g, 2)) * h
+    else:
+        h = jax.nn.gelu(h)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mixture-of-Experts (GShard-style grouped dense dispatch, EP-shardable)
+# ---------------------------------------------------------------------------
+
+
+def init_moe(rng, cfg: ModelConfig) -> Params:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = cdtype(cfg)
+    ks = jax.random.split(rng, 4)
+    p = {
+        "router": _dense_init(ks[0], (d, E), dtype=jnp.float32),
+        "w_in": _dense_init(ks[1], (E, d, f), dtype=dt),
+        "w_out": _dense_init(ks[2], (E, f, d), dtype=dt),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = _dense_init(ks[3], (E, d, f), dtype=dt)
+    return p
+
+
+def apply_moe(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    """Top-k routed experts with capacity-bounded grouped dispatch.
+
+    Tokens are processed in groups of ``moe_group_size``; per group, each
+    expert accepts at most C = ceil(g * top_k / E * capacity_factor)
+    tokens (overflow dropped — GShard semantics). Experts are stacked
+    (E, d, f) so EP shards them over the 'model' mesh axis."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    g = min(cfg.moe_group_size, T)
+    n_groups = -(-T // g)
+    pad = n_groups * g - T
+    xf = x.reshape(T, D)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    xg = xf.reshape(n_groups, g, D)
+
+    logits = jnp.einsum("ngd,de->nge", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)  # (n, g, E)
+    top_p, top_i = jax.lax.top_k(probs, K)  # (n, g, K)
+    top_p = top_p / jnp.maximum(jnp.sum(top_p, axis=-1, keepdims=True), 1e-9)
+
+    C = max(1, int(math.ceil(g * K / E * cfg.moe_capacity_factor)))
+    # slot-major expert masks: (n, K, g, E)
+    masks = jax.nn.one_hot(jnp.swapaxes(top_i, 1, 2), E, dtype=jnp.int32)
+    flat = masks.reshape(xg.shape[0], K * g, E)
+    pos = jnp.cumsum(flat, axis=1) * flat - 1  # position in expert queue
+    pos = pos.reshape(masks.shape)  # (n, K, g, E)
+    keep = (pos >= 0) & (pos < C)
+    gates = jnp.swapaxes(top_p, 1, 2).astype(xg.dtype)  # (n, K, g)
+    # accumulate dispatch/combine one top-k slot at a time: materializing
+    # the full (n, K, g, E, C) one-hot would dominate training memory
+    # (e.g. 5.4 GB/device for granite-moe train_4k)
+    dispatch = jnp.zeros((xg.shape[0], g, E, C), dtype=xg.dtype)
+    combine = jnp.zeros((xg.shape[0], g, E, C), dtype=xg.dtype)
+    for j in range(K):
+        d_j = jax.nn.one_hot(pos[:, j], C, dtype=xg.dtype)
+        d_j = d_j * keep[:, j][..., None].astype(xg.dtype)  # (n, g, E, C)
+        d_j = constrain(d_j, 2)
+        dispatch = dispatch + d_j
+        combine = combine + d_j * gates[:, j][:, :, None, None]
+    dispatch = constrain(dispatch, 2)
+    combine = constrain(combine, 2)
+
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch, xg,
+                           preferred_element_type=jnp.float32).astype(xg.dtype)
+    expert_in = constrain(expert_in, 1)  # experts -> 'model' (EP)
+    h = jnp.einsum("necd,edf->necf", expert_in, p["w_in"],
+                   preferred_element_type=jnp.float32).astype(xg.dtype)
+    h = constrain(h, 1)
+    if cfg.gated_mlp:
+        gate = jnp.einsum("necd,edf->necf", expert_in,
+                          p["w_gate"],
+                          preferred_element_type=jnp.float32).astype(xg.dtype)
+        h = jax.nn.silu(constrain(gate, 1)) * h
+    else:
+        h = jax.nn.gelu(h)
+    expert_out = jnp.einsum("necf,efd->necd", h, p["w_out"],
+                            preferred_element_type=jnp.float32).astype(xg.dtype)
+    expert_out = constrain(expert_out, 1)
+    out = jnp.einsum("ngec,necd->ngd", combine, expert_out,
+                     preferred_element_type=jnp.float32).astype(xg.dtype)
+    out = out.reshape(n_groups * g, D)
+    if pad:
+        out = out[:T]
+    return out.reshape(B, S, D)
+
+
+def moe_aux_loss(cfg: ModelConfig, router_probs: jax.Array, top_idx: jax.Array) -> jax.Array:
+    """Switch-style load-balancing loss (mean fraction * mean prob * E)."""
+    E = cfg.n_experts
+    frac = jnp.mean(jax.nn.one_hot(top_idx, E, dtype=jnp.float32), axis=(0, 1, 2))
+    prob = jnp.mean(router_probs, axis=tuple(range(router_probs.ndim - 1)))
+    return jnp.sum(frac * prob) * E
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embed(rng, cfg: ModelConfig) -> Params:
+    dt = cdtype(cfg)
+    n_tables = max(1, cfg.n_codebooks)
+    table = _dense_init(rng, (n_tables * cfg.vocab, cfg.d_model), scale=0.02, dtype=dt)
+    return {"table": table}
+
+
+def apply_embed(cfg: ModelConfig, p: Params, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, S) int32, or (B, S, n_codebooks) for audio codes
+    (musicgen: the frame embedding is the sum over codebook embeddings)."""
+    if cfg.n_codebooks and tokens.ndim == 3:
+        offsets = (jnp.arange(cfg.n_codebooks, dtype=tokens.dtype) * cfg.vocab)
+        emb = jnp.take(p["table"], tokens + offsets[None, None, :], axis=0)
+        return jnp.sum(emb, axis=2)
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def init_lm_head(rng, cfg: ModelConfig) -> Params:
+    if cfg.tie_embeddings:
+        return {}
+    dt = cdtype(cfg)
+    n_heads = max(1, cfg.n_codebooks)
+    return {"w": _dense_init(rng, (cfg.d_model, n_heads * cfg.vocab_padded),
+                             scale=0.02, dtype=dt)}
+
+
+def apply_lm_head(cfg: ModelConfig, p: Params, x: jax.Array,
+                  embed_params: Params | None = None) -> jax.Array:
+    """Logits over the PADDED vocab (multiple of ``pad_vocab_to`` so they
+    shard over any TP width); padded slots are masked to -inf — they never
+    win argmax and contribute ~0 to the softmax normalizer."""
+    if cfg.tie_embeddings:
+        w = embed_params["table"].T
+    else:
+        w = p["w"]
+    Vp = cfg.vocab_padded
+    logits = jnp.einsum("bsd,dv->bsv", x, w,
+                        preferred_element_type=jnp.float32)
+    if cfg.n_codebooks:
+        B, S = x.shape[:2]
+        logits = logits.reshape(B, S, cfg.n_codebooks, Vp)
+    if Vp > cfg.vocab:
+        slot = jax.lax.broadcasted_iota(jnp.int32, (Vp,), 0)
+        logits = jnp.where(slot < cfg.vocab, logits, -1e30)
+    return logits

@@ -1,0 +1,120 @@
+"""MobileNet-V2 (paper model 1) as a sequential layer-list model.
+
+Layer names align 1:1 with :func:`repro.models.graph.mobilenet_v2_graph`
+so the split executor, the cost model, and the real forward pass share the
+same chain indices — including the paper's split points ``block_2_expand``,
+``block_15_project_BN`` and ``block_16_project_BN``.
+
+Residual skip connections are carried through the chain explicitly: the
+carry is ``{"h": main, "res": skip}``. At an intra-block cut the live set
+is therefore (main + skip) — the paper's Table II counts only the main
+tensor, which matches its 'Part 2 constructs the remaining layers
+sequentially' deployment (the cross-cut skip is dropped there); we keep
+the skip so split execution stays exactly equal to the unsplit model, and
+report the byte-count delta in the benchmark.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn_common import (
+    conv2d,
+    dense,
+    global_avg_pool,
+    init_conv,
+    init_dense,
+)
+from repro.models.graph import _MBV2_GROUPS, make_divisible
+
+
+class MobileNetV2:
+    def __init__(self, width: float = 0.35, image_size: int = 224,
+                 num_classes: int = 1000):
+        self.width = width
+        self.image_size = image_size
+        self.num_classes = num_classes
+        self._build()
+
+    def _build(self):
+        # (name, kind, dict(meta)) in chain order; mirrors graph.py exactly
+        specs: list[tuple[str, str, dict]] = []
+        c1 = make_divisible(32 * self.width)
+        specs.append(("Conv1", "conv", dict(k=3, c_in=3, c_out=c1, stride=2)))
+        c_in = c1
+        block_id = 0
+        for t, c_base, n, s in _MBV2_GROUPS:
+            c_out = make_divisible(c_base * self.width)
+            for i in range(n):
+                stride = s if i == 0 else 1
+                prefix = "expanded_conv" if block_id == 0 else f"block_{block_id}"
+                residual = stride == 1 and c_in == c_out
+                c_mid = c_in * t
+                if t != 1:
+                    specs.append((f"{prefix}_expand", "expand",
+                                  dict(k=1, c_in=c_in, c_out=c_mid, stride=1,
+                                       residual=residual)))
+                specs.append((f"{prefix}_depthwise", "dw",
+                              dict(k=3, c=c_mid, stride=stride,
+                                   residual=residual and t == 1)))
+                specs.append((f"{prefix}_project_BN", "project",
+                              dict(k=1, c_in=c_mid, c_out=c_out, stride=1,
+                                   residual=residual)))
+                c_in = c_out
+                block_id += 1
+        c_last = make_divisible(1280 * max(1.0, self.width))
+        specs.append(("Conv_1", "conv", dict(k=1, c_in=c_in, c_out=c_last, stride=1)))
+        specs.append(("global_pool", "pool", {}))
+        specs.append(("Logits", "dense", dict(d_in=c_last, d_out=self.num_classes)))
+        self._specs = specs
+        self.layer_names = [name for name, _, _ in specs]
+
+    # -- SequentialModel protocol -------------------------------------------
+    def init(self, rng: jax.Array) -> dict:
+        params = {}
+        for i, (name, kind, m) in enumerate(self._specs):
+            r = jax.random.fold_in(rng, i)
+            if kind in ("conv", "expand", "project"):
+                params[name] = init_conv(r, m["k"], m["c_in"], m["c_out"])
+            elif kind == "dw":
+                params[name] = init_conv(r, m["k"], m["c"], m["c"], depthwise=True)
+            elif kind == "dense":
+                params[name] = init_dense(r, m["d_in"], m["d_out"])
+            else:
+                params[name] = {}
+        return params
+
+    def apply_layer(self, name: str, p: dict, carry):
+        kind, m = next((k, mm) for n, k, mm in self._specs if n == name)
+        if isinstance(carry, jax.Array):  # input image
+            carry = {"h": carry}
+        h = carry["h"]
+        if kind == "conv":
+            h = conv2d(p, h, stride=m["stride"])
+            return {"h": h}
+        if kind == "expand":
+            out = {"h": conv2d(p, h, stride=1)}
+            if m["residual"]:
+                out["res"] = h
+            return out
+        if kind == "dw":
+            out = {"h": conv2d(p, h, stride=m["stride"], depthwise=True)}
+            if m.get("residual"):
+                out["res"] = h
+            elif "res" in carry:
+                out["res"] = carry["res"]
+            return out
+        if kind == "project":
+            y = conv2d(p, h, stride=1, act="none")
+            if m["residual"]:
+                y = y + carry["res"]
+            return {"h": y}
+        if kind == "pool":
+            return {"h": global_avg_pool(h)}
+        if kind == "dense":
+            return {"h": dense(p, h)}
+        raise ValueError(kind)
+
+    def input_shape(self, batch: int = 1):
+        return (batch, self.image_size, self.image_size, 3)

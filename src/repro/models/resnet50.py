@@ -1,0 +1,97 @@
+"""ResNet50 (paper model 2) as a sequential layer-list model.
+
+Layer names align 1:1 with :func:`repro.models.graph.resnet50_graph`.
+Bottleneck residuals are carried explicitly; the downsample projection of
+each stage's first block is folded into its ``_3`` unit (as in the cost
+table)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cnn_common import (
+    conv2d,
+    dense,
+    global_avg_pool,
+    init_conv,
+    init_dense,
+    max_pool,
+)
+from repro.models.graph import _R50_STAGES
+
+
+class ResNet50:
+    def __init__(self, image_size: int = 224, num_classes: int = 1000):
+        self.image_size = image_size
+        self.num_classes = num_classes
+        self._build()
+
+    def _build(self):
+        specs: list[tuple[str, str, dict]] = []
+        specs.append(("conv1", "conv", dict(k=7, c_in=3, c_out=64, stride=2, act="relu")))
+        specs.append(("pool1", "maxpool", {}))
+        c_in = 64
+        for stage, (c_mid, c_out, n, s) in enumerate(_R50_STAGES, start=2):
+            for i in range(n):
+                stride = s if i == 0 else 1
+                name = f"conv{stage}_block{i + 1}"
+                specs.append((f"{name}_1", "b1",
+                              dict(k=1, c_in=c_in, c_out=c_mid, stride=1)))
+                specs.append((f"{name}_2", "b2",
+                              dict(k=3, c_in=c_mid, c_out=c_mid, stride=stride)))
+                specs.append((f"{name}_3", "b3",
+                              dict(k=1, c_in=c_mid, c_out=c_out,
+                                   proj=(i == 0), proj_c_in=c_in, stride=stride)))
+                c_in = c_out
+        specs.append(("avg_pool", "pool", {}))
+        specs.append(("fc", "dense", dict(d_in=c_in, d_out=self.num_classes)))
+        self._specs = specs
+        self.layer_names = [name for name, _, _ in specs]
+
+    def init(self, rng: jax.Array) -> dict:
+        params = {}
+        for i, (name, kind, m) in enumerate(self._specs):
+            r = jax.random.fold_in(rng, i)
+            if kind in ("conv", "b1", "b2"):
+                params[name] = init_conv(r, m["k"], m["c_in"], m["c_out"])
+            elif kind == "b3":
+                p = {"main": init_conv(r, m["k"], m["c_in"], m["c_out"])}
+                if m["proj"]:
+                    p["proj"] = init_conv(jax.random.fold_in(r, 1), 1,
+                                          m["proj_c_in"], m["c_out"])
+                params[name] = p
+            elif kind == "dense":
+                params[name] = init_dense(r, m["d_in"], m["d_out"])
+            else:
+                params[name] = {}
+        return params
+
+    def apply_layer(self, name: str, p: dict, carry):
+        kind, m = next((k, mm) for n, k, mm in self._specs if n == name)
+        if isinstance(carry, jax.Array):
+            carry = {"h": carry}
+        h = carry["h"]
+        if kind == "conv":
+            return {"h": conv2d(p, h, stride=m["stride"], act=m.get("act", "relu"))}
+        if kind == "maxpool":
+            return {"h": max_pool(h, 3, 2)}
+        if kind == "b1":
+            return {"h": conv2d(p, h, stride=1, act="relu"), "res": h}
+        if kind == "b2":
+            return {"h": conv2d(p, h, stride=m["stride"], act="relu"),
+                    "res": carry["res"]}
+        if kind == "b3":
+            y = conv2d(p["main"], h, stride=1, act="none")
+            res = carry["res"]
+            if m["proj"]:
+                res = conv2d(p["proj"], res, stride=m["stride"], act="none")
+            return {"h": jax.nn.relu(y + res)}
+        if kind == "pool":
+            return {"h": global_avg_pool(h)}
+        if kind == "dense":
+            return {"h": dense(p, h)}
+        raise ValueError(kind)
+
+    def input_shape(self, batch: int = 1):
+        return (batch, self.image_size, self.image_size, 3)

@@ -1,0 +1,371 @@
+"""Recurrent / state-space blocks: Mamba2 (SSD), mLSTM, sLSTM.
+
+These power the sub-quadratic architectures (zamba2 hybrid, xlstm) and the
+long_500k cells. Design notes:
+
+* **Mamba2 (SSD)** — chunked parallel form for training/prefill (dense
+  matmuls inside chunks -> MXU-friendly; inter-chunk state carried by a
+  scan), plus an O(1)-per-token recurrent step for decode. This is the
+  TPU-native adaptation: the CUDA kernel's warp-level scan becomes a
+  chunk-parallel matmul decomposition.
+
+* **mLSTM** — chunk-parallel linear attention with per-head scalar
+  input/forget gates (GLA-style decay within/across chunks), matrix
+  memory C: (B, H, Dk, Dv) carried across chunks; O(1) decode step. The
+  max-stabilizer of the paper's fully-sequential form is replaced by
+  log-space gate accumulation within chunks (documented simplification —
+  exact for the gate magnitudes used here).
+
+* **sLSTM** — inherently sequential scalar-memory cell with block-diagonal
+  recurrent mixing; implemented as a lax.scan over time (one while loop in
+  HLO), exponential gating with the stabilizer state m.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Params, _dense_init, cdtype, constrain
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 / SSD
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(rng, cfg: ModelConfig) -> Params:
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    dt = cdtype(cfg)
+    ks = jax.random.split(rng, 5)
+    return {
+        # projects to [z (di), x (di), B (ds), C (ds), dt (nh)]
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * ds + nh), dtype=dt),
+        "conv_w": _dense_init(ks[1], (cfg.d_conv, di + 2 * ds), scale=0.5, dtype=dt),
+        "conv_b": jnp.zeros((di + 2 * ds,), dtype=dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), dtype=jnp.float32),
+        "dt_bias": jnp.zeros((nh,), dtype=jnp.float32),
+        "out_proj": _dense_init(ks[2], (di, d), dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv along seq. x: (B, S, C); w: (K, C).
+    ``state``: (B, K-1, C) trailing context from previous steps."""
+    K = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else jnp.zeros_like(x[:, :0, :])
+    return jax.nn.silu(out + b[None, None, :]), new_state
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """L[i, j] = sum_{j < t <= i} dA_t for j <= i else -inf. dA: (..., C)."""
+    C = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j) = cs_i - cs_j
+    mask = jnp.tril(jnp.ones((C, C), dtype=bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def mamba_chunked(cfg: ModelConfig, p: Params, xin: jax.Array,
+                  chunk: int = 128) -> jax.Array:
+    """Chunk-parallel SSD over a full sequence (training/prefill)."""
+    B, S, _ = xin.shape
+    di, ds = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    ph = cfg.ssm_head_dim
+
+    proj = jnp.einsum("bsd,de->bse", xin, p["in_proj"],
+                      preferred_element_type=jnp.float32).astype(xin.dtype)
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * ds], axis=-1)
+    z = constrain(z, 2)  # d_inner -> 'model' (TP over the SSM channels)
+    xBC, _ = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    x, Bmat, Cmat = jnp.split(xBC, [di, di + ds], axis=-1)
+    x = constrain(x, 2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,S,nh)
+    A = -jnp.exp(p["A_log"])  # (nh,) negative
+    dA = dt * A[None, None, :]  # (B,S,nh)
+
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+
+    def rs(t, feat):  # (B, S', F) -> (n, B, C, F)
+        return t.reshape(B, n_chunks, chunk, feat).transpose(1, 0, 2, 3)
+
+    xh = rs(x, di).reshape(n_chunks, B, chunk, nh, ph)
+    Bc = rs(Bmat, ds)
+    Cc = rs(Cmat, ds)
+    dAc = rs(dA, nh)
+    dtc = rs(dt, nh)
+
+    h0 = jnp.zeros((B, nh, ph, ds), dtype=jnp.float32)
+
+    def body(h_prev, inp):
+        xc, bc, cc, dac, dtck = inp  # per-chunk tensors
+        L = jnp.exp(_segsum(dac.transpose(0, 2, 1)))  # (B, nh, C, C)
+        # intra-chunk: Y = (C B^T ∘ L) (dt x)
+        cb = jnp.einsum("bis,bjs->bij", cc.astype(jnp.float32), bc.astype(jnp.float32))
+        scores = cb[:, None, :, :] * L  # (B, nh, C, C)
+        xdt = xc.astype(jnp.float32) * dtck[..., None]  # (B, C, nh, ph)
+        y_intra = jnp.einsum("bhij,bjhp->bihp", scores, xdt)
+        # contribution of the carried state: y += (C_t ∘ exp(cum dA)) h_prev
+        cum = jnp.cumsum(dac, axis=1)  # (B, C, nh)
+        decay_in = jnp.exp(cum)  # (B, C, nh)
+        y_state = jnp.einsum("bis,bhps,bih->bihp", cc.astype(jnp.float32), h_prev,
+                             decay_in)
+        # state update: h = exp(total) h_prev + sum_t exp(total - cum_t) dt_t B_t x_t
+        total = cum[:, -1, :]  # (B, nh)
+        decay_out = jnp.exp(total[:, None, :] - cum)  # (B, C, nh)
+        h_new = jnp.exp(total)[:, :, None, None] * h_prev + jnp.einsum(
+            "bis,bihp,bih->bhps", bc.astype(jnp.float32), xdt, decay_out)
+        return h_new, y_intra + y_state
+
+    _, ys = jax.lax.scan(body, h0, (xh, Bc, Cc, dAc, dtc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, nh, ph)
+    if pad:
+        y = y[:, :S]
+        x = x[:, :S]
+    y = y + x.reshape(B, S, nh, ph).astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, di).astype(xin.dtype) * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"],
+                      preferred_element_type=jnp.float32).astype(xin.dtype)
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> Params:
+    di, ds = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, nh, cfg.ssm_head_dim, ds), dtype=jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, di + 2 * ds), dtype=dtype),
+    }
+
+
+def mamba_step(cfg: ModelConfig, p: Params, xin: jax.Array, cache: Params
+               ) -> tuple[jax.Array, Params]:
+    """Single-token recurrent step. xin: (B, 1, D)."""
+    B = xin.shape[0]
+    di, ds = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    ph = cfg.ssm_head_dim
+
+    proj = jnp.einsum("bsd,de->bse", xin, p["in_proj"],
+                      preferred_element_type=jnp.float32).astype(xin.dtype)
+    z, xBC, dt_raw = jnp.split(proj, [di, 2 * di + 2 * ds], axis=-1)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], state=cache["conv"])
+    x, Bmat, Cmat = jnp.split(xBC[:, 0], [di, di + ds], axis=-1)  # (B, ·)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A[None, :])  # (B,nh)
+    xh = x.reshape(B, nh, ph).astype(jnp.float32)
+    h = cache["h"] * dA[:, :, None, None] + jnp.einsum(
+        "bs,bhp,bh->bhps", Bmat.astype(jnp.float32), xh, dt)
+    y = jnp.einsum("bs,bhps->bhp", Cmat.astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, 1, di).astype(xin.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("bsd,de->bse", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(xin.dtype)
+    return out, {"h": h, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (xLSTM matrix-memory block)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg: ModelConfig) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    nh = cfg.n_heads
+    dt = cdtype(cfg)
+    ks = jax.random.split(rng, 3)
+    return {
+        # q, k, v (each di) + input/forget gate logits (nh each)
+        "in_proj": _dense_init(ks[0], (d, 3 * di + 2 * nh), dtype=dt),
+        "out_proj": _dense_init(ks[1], (di, d), dtype=dt),
+        "f_bias": jnp.full((nh,), 3.0, dtype=jnp.float32),  # open forget gates
+    }
+
+
+def mlstm_chunked(cfg: ModelConfig, p: Params, xin: jax.Array,
+                  chunk: int = 128) -> jax.Array:
+    """Chunk-parallel mLSTM: linear attention with scalar decay gates."""
+    B, S, _ = xin.shape
+    di, nh = cfg.d_inner, cfg.n_heads
+    ph = di // nh
+
+    proj = jnp.einsum("bsd,de->bse", xin, p["in_proj"],
+                      preferred_element_type=jnp.float32).astype(xin.dtype)
+    q, k, v, gates = jnp.split(proj, [di, 2 * di, 3 * di], axis=-1)
+    if cfg.ssm_tp:
+        q, k, v = constrain(q, 2), constrain(k, 2), constrain(v, 2)
+    else:  # pure-DP mixer: keep channels replicated, no per-chunk psums
+        q, k, v = constrain(q, None), constrain(k, None), constrain(v, None)
+    i_log = gates[..., :nh].astype(jnp.float32)  # log input gate
+    f_log = jax.nn.log_sigmoid(gates[..., nh:].astype(jnp.float32) + p["f_bias"])
+
+    n_chunks = -(-S // chunk)
+    pad = n_chunks * chunk - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        i_log = jnp.pad(i_log, ((0, 0), (0, pad), (0, 0)), constant_values=-1e30)
+        f_log = jnp.pad(f_log, ((0, 0), (0, pad), (0, 0)))
+
+    def rs(t):
+        return t.reshape(B, n_chunks, chunk, nh, ph).transpose(1, 0, 2, 3, 4)
+
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    ic = i_log.reshape(B, n_chunks, chunk, nh).transpose(1, 0, 2, 3)
+    fc = f_log.reshape(B, n_chunks, chunk, nh).transpose(1, 0, 2, 3)
+    scale = 1.0 / math.sqrt(ph)
+
+    C0 = jnp.zeros((B, nh, ph, ph), dtype=jnp.float32)
+    n0 = jnp.zeros((B, nh, ph), dtype=jnp.float32)
+
+    def body(carry, inp):
+        C, n = carry
+        qk, kk, vk, ik, fk = inp
+        qf = qk.astype(jnp.float32) * scale
+        kf, vf = kk.astype(jnp.float32), vk.astype(jnp.float32)
+        cumf = jnp.cumsum(fk, axis=1)  # (B, C, nh)
+        total = cumf[:, -1, :]
+        # intra-chunk decay matrix D_ij = exp(cumf_i - cumf_j + i_j), j <= i
+        dmat = cumf[:, :, None, :] - cumf[:, None, :, :] + ik[:, None, :, :]
+        mask = jnp.tril(jnp.ones((qk.shape[1], qk.shape[1]), dtype=bool))
+        dmat = jnp.where(mask[None, :, :, None], dmat, -jnp.inf)
+        w = jnp.exp(dmat)  # (B, i, j, nh)
+        s = jnp.einsum("bihp,bjhp->bijh", qf, kf)
+        y_intra = jnp.einsum("bijh,bijh,bjhp->bihp", s, w, vf)
+        z_intra = jnp.einsum("bijh,bijh,bjhp->bihp", s, w, jnp.ones_like(vf))[..., :1]
+        # carried state: y += exp(cumf_i) q_i C ; normalizer n likewise
+        din = jnp.exp(cumf)  # (B, C, nh)
+        y_state = jnp.einsum("bihp,bhpq,bih->bihq", qf, C, din)
+        z_state = jnp.einsum("bihp,bhp,bih->bih", qf, n, din)[..., None]
+        # state update
+        dout = jnp.exp(total[:, None, :] - cumf + ik)  # (B, C, nh)
+        C_new = jnp.exp(total)[:, :, None, None] * C + jnp.einsum(
+            "bjhp,bjhq,bjh->bhpq", kf, vf, dout)
+        n_new = jnp.exp(total)[:, :, None] * n + jnp.einsum("bjhp,bjh->bhp", kf, dout)
+        y = (y_intra + y_state) / jnp.maximum(jnp.abs(z_intra + z_state), 1.0)
+        return (C_new, n_new), y
+
+    _, ys = jax.lax.scan(body, (C0, n0), (qc, kc, vc, ic, fc))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(B, n_chunks * chunk, di)
+    if pad:
+        y = y[:, :S]
+    return jnp.einsum("bsd,de->bse", y.astype(xin.dtype), p["out_proj"],
+                      preferred_element_type=jnp.float32).astype(xin.dtype)
+
+
+def init_mlstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    nh, ph = cfg.n_heads, cfg.d_inner // cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, nh, ph, ph), dtype=jnp.float32),
+        "n": jnp.zeros((batch, nh, ph), dtype=jnp.float32),
+    }
+
+
+def mlstm_step(cfg: ModelConfig, p: Params, xin: jax.Array, cache: Params
+               ) -> tuple[jax.Array, Params]:
+    """O(1) decode step. xin: (B, 1, D)."""
+    B = xin.shape[0]
+    di, nh = cfg.d_inner, cfg.n_heads
+    ph = di // nh
+    proj = jnp.einsum("bsd,de->bse", xin, p["in_proj"],
+                      preferred_element_type=jnp.float32).astype(xin.dtype)
+    q, k, v, gates = jnp.split(proj[:, 0], [di, 2 * di, 3 * di], axis=-1)
+    i_g = jnp.exp(gates[..., :nh].astype(jnp.float32))
+    f_g = jax.nn.sigmoid(gates[..., nh:].astype(jnp.float32) + p["f_bias"])
+    qh = q.reshape(B, nh, ph).astype(jnp.float32) / math.sqrt(ph)
+    kh = k.reshape(B, nh, ph).astype(jnp.float32)
+    vh = v.reshape(B, nh, ph).astype(jnp.float32)
+    C = cache["C"] * f_g[:, :, None, None] + i_g[:, :, None, None] * jnp.einsum(
+        "bhp,bhq->bhpq", kh, vh)
+    n = cache["n"] * f_g[:, :, None] + i_g[:, :, None] * kh
+    y = jnp.einsum("bhp,bhpq->bhq", qh, C)
+    z = jnp.abs(jnp.einsum("bhp,bhp->bh", qh, n))[..., None]
+    y = (y / jnp.maximum(z, 1.0)).reshape(B, 1, di)
+    out = jnp.einsum("bsd,de->bse", y.astype(xin.dtype), p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(xin.dtype)
+    return out, {"C": C, "n": n}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM (xLSTM scalar-memory block, sequential)
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, cfg: ModelConfig) -> Params:
+    d, di, nh = cfg.d_model, cfg.d_inner, cfg.n_heads
+    ph = di // nh
+    dt = cdtype(cfg)
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_in": _dense_init(ks[0], (d, 4 * di), dtype=dt),  # i, f, z, o pre-acts
+        "r": _dense_init(ks[1], (nh, ph, 4 * ph), scale=1.0 / math.sqrt(ph),
+                         dtype=jnp.float32),
+        "out_proj": _dense_init(ks[2], (di, d), dtype=dt),
+    }
+
+
+def init_slstm_cache(cfg: ModelConfig, batch: int) -> Params:
+    di = cfg.d_inner
+    z = jnp.zeros((batch, di), dtype=jnp.float32)
+    return {"c": z, "n": z, "h": z, "m": z - 10.0}
+
+
+def _slstm_cell(cfg: ModelConfig, p: Params, wx_t: jax.Array, state: Params
+                ) -> tuple[Params, jax.Array]:
+    """One sLSTM time step with exponential gating + stabilizer m."""
+    B = wx_t.shape[0]
+    di, nh = cfg.d_inner, cfg.n_heads
+    ph = di // nh
+    h_prev = state["h"].reshape(B, nh, ph)
+    rec = jnp.einsum("bhp,hpq->bhq", h_prev, p["r"]).reshape(B, 4 * di)
+    pre = wx_t.astype(jnp.float32) + rec
+    i_r, f_r, z_r, o_r = jnp.split(pre, 4, axis=-1)
+    m_new = jnp.maximum(f_r + state["m"], i_r)
+    i_g = jnp.exp(i_r - m_new)
+    f_g = jnp.exp(f_r + state["m"] - m_new)
+    c = f_g * state["c"] + i_g * jnp.tanh(z_r)
+    n = f_g * state["n"] + i_g
+    h = jax.nn.sigmoid(o_r) * c / jnp.maximum(n, 1.0)
+    return {"c": c, "n": n, "h": h, "m": m_new}, h
+
+
+def slstm_forward(cfg: ModelConfig, p: Params, xin: jax.Array,
+                  cache: Params | None = None
+                  ) -> tuple[jax.Array, Params]:
+    """Sequence or single-step sLSTM. xin: (B, S, D)."""
+    B, S, _ = xin.shape
+    wx = jnp.einsum("bsd,de->bse", xin, p["w_in"],
+                    preferred_element_type=jnp.float32)
+    state = cache or init_slstm_cache(cfg, B)
+
+    def step(st, wx_t):
+        st2, h = _slstm_cell(cfg, p, wx_t, st)
+        return st2, h
+
+    state, hs = jax.lax.scan(step, state, jnp.swapaxes(wx, 0, 1))
+    y = jnp.swapaxes(hs, 0, 1)  # (B, S, di)
+    out = jnp.einsum("bsd,de->bse", y.astype(xin.dtype), p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(xin.dtype)
+    return out, state

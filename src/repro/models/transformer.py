@@ -1,0 +1,484 @@
+"""Decoder-only LM covering all assigned architectures.
+
+One functional model, configured by :class:`ModelConfig`:
+
+  * dense / GQA / MQA attention (deepseek-7b, stablelm-12b, granite-34b,
+    musicgen-medium, qwen2-vl-72b backbones),
+  * MLA latent attention (minicpm3-4b),
+  * grouped MoE FFN (granite-moe-1b, qwen3-moe-235b),
+  * Mamba2 + shared-attention hybrid (zamba2-1.2b),
+  * mLSTM/sLSTM stacks (xlstm-1.3b),
+  * audio-codes embedding (musicgen) and vision-embeds passthrough
+    (qwen2-vl) modality frontends as stubs per the assignment.
+
+Homogeneous stacks are executed with ``lax.scan`` over stacked per-layer
+params (compile-time O(1) in depth — critical for the 88-94 layer
+dry-runs); heterogeneous patterns (hybrid/ssm) unroll over the block
+pattern with per-kind parameter stacks.
+
+Inputs are normalized to a dict so every architecture exposes the same
+``forward(params, inputs, cache)`` signature:
+  tokens    (B, S) int32            — LM families
+  codes     (B, S, K) int32         — musicgen (EnCodec streams)
+  embeds    (B, S, D) float         — qwen2-vl (patch embeds, stub frontend)
+  positions (B, S) or (3, B, S) int — rope / M-RoPE streams
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    Params,
+    apply_attention,
+    apply_embed,
+    apply_lm_head,
+    apply_mla,
+    apply_mlp,
+    apply_moe,
+    cdtype,
+    init_attention,
+    init_embed,
+    init_lm_head,
+    init_mla,
+    init_mlp,
+    init_moe,
+    init_rmsnorm,
+    rmsnorm,
+)
+
+# ---------------------------------------------------------------------------
+# Activation sharding (sequence parallelism at block boundaries)
+# ---------------------------------------------------------------------------
+
+
+def _ambient_mesh_shape() -> dict:
+    """Axis sizes of the mesh active via ``with mesh:`` (empty if none)."""
+    try:
+        from jax._src.mesh import thread_resources
+
+        return dict(thread_resources.env.physical_mesh.shape)
+    except Exception:  # noqa: BLE001 — no mesh / internal API moved
+        return {}
+
+
+def maybe_constrain_act(x: jax.Array) -> jax.Array:
+    """Pin layer-boundary activations (B, S, D) to batch-over-DP.
+
+    Activation memory is controlled by microbatching + grouped remat (the
+    production levers — see ModelConfig.train_microbatches/remat_group);
+    boundaries stay sequence-replicated so the TP block interiors (heads /
+    hidden over 'model') need no SP resharding collectives. No-op outside
+    a mesh context."""
+    axes = _ambient_mesh_shape()
+    if not axes or x.ndim < 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axes[a]
+    spec = [None] * x.ndim
+    B = x.shape[0]
+    if dp and B % dp_size == 0 and B >= dp_size:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def maybe_constrain_logits(logits: jax.Array) -> jax.Array:
+    """Keep logits vocab-sharded over 'model' (batch over DP). Without
+    this, XLA propagates the sequence sharding from the SP block stack and
+    all-gathers the full-vocab head weight plus (B, S, V) f32 logits per
+    device — the dominant training-memory term after activations."""
+    axes = _ambient_mesh_shape()
+    if not axes:
+        return logits
+    from jax.sharding import PartitionSpec as P
+
+    dp = tuple(a for a in ("pod", "data") if a in axes)
+    dp_size = 1
+    for a in dp:
+        dp_size *= axes[a]
+    spec = [None] * logits.ndim
+    B, V = logits.shape[0], logits.shape[-1]
+    if dp and B % dp_size == 0 and B >= dp_size:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    m = axes.get("model", 1)
+    if m > 1 and V % m == 0:
+        spec[-1] = "model"
+    return jax.lax.with_sharding_constraint(logits, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(rng, cfg: ModelConfig, kind: str) -> Params:
+    ks = jax.random.split(rng, 4)
+    if kind == "attn":
+        attn = init_mla(ks[0], cfg) if cfg.use_mla else init_attention(ks[0], cfg)
+        ff = init_moe(ks[1], cfg) if cfg.is_moe else init_mlp(ks[1], cfg)
+        return {
+            "norm1": init_rmsnorm(cfg),
+            "attn": attn,
+            "norm2": init_rmsnorm(cfg),
+            "ff": ff,
+        }
+    if kind == "mamba":
+        return {"norm": init_rmsnorm(cfg), "mixer": ssm.init_mamba(ks[0], cfg)}
+    if kind == "mlstm":
+        return {"norm": init_rmsnorm(cfg), "mixer": ssm.init_mlstm(ks[0], cfg)}
+    if kind == "slstm":
+        return {"norm": init_rmsnorm(cfg), "mixer": ssm.init_slstm(ks[0], cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def apply_block(cfg: ModelConfig, kind: str, p: Params, x: jax.Array,
+                positions: jax.Array, cache: Params | None, *,
+                decode: bool) -> tuple[jax.Array, Params | None]:
+    eps = cfg.norm_eps
+    if kind == "attn":
+        h = rmsnorm(p["norm1"], x, eps)
+        if cfg.use_mla:
+            a, new_cache = apply_mla(cfg, p["attn"], h, positions, cache,
+                                     absorbed=decode and cfg.mla_absorbed_decode)
+        else:
+            a, new_cache = apply_attention(cfg, p["attn"], h, positions, cache)
+        if cfg.parallel_residual:
+            f = apply_moe(cfg, p["ff"], h) if cfg.is_moe else apply_mlp(cfg, p["ff"], h)
+            return x + a + f, new_cache
+        x = x + a
+        h2 = rmsnorm(p["norm2"], x, eps)
+        f = apply_moe(cfg, p["ff"], h2) if cfg.is_moe else apply_mlp(cfg, p["ff"], h2)
+        return x + f, new_cache
+    if kind == "mamba":
+        h = rmsnorm(p["norm"], x, eps)
+        if decode:
+            y, new_cache = ssm.mamba_step(cfg, p["mixer"], h, cache)
+        else:
+            y, new_cache = ssm.mamba_chunked(cfg, p["mixer"], h, chunk=cfg.scan_chunk), None
+        return x + y, new_cache
+    if kind == "mlstm":
+        h = rmsnorm(p["norm"], x, eps)
+        if decode:
+            y, new_cache = ssm.mlstm_step(cfg, p["mixer"], h, cache)
+        else:
+            y, new_cache = ssm.mlstm_chunked(cfg, p["mixer"], h, chunk=cfg.scan_chunk), None
+        return x + y, new_cache
+    if kind == "slstm":
+        h = rmsnorm(p["norm"], x, eps)
+        y, new_cache = ssm.slstm_forward(cfg, p["mixer"], h, cache)
+        return x + y, new_cache
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+
+def _is_homogeneous(cfg: ModelConfig) -> bool:
+    return all(k == "attn" for k in cfg.pattern) and not cfg.shared_attn
+
+
+def _pattern_runs(pattern) -> list[tuple[str, int, int]]:
+    """[(kind, first_occurrence_index, count)] for runs of equal kinds."""
+    runs = []
+    occ: dict[str, int] = {}
+    i = 0
+    while i < len(pattern):
+        k = pattern[i]
+        j = i
+        while j < len(pattern) and pattern[j] == k:
+            j += 1
+        runs.append((k, occ.get(k, 0), j - i))
+        occ[k] = occ.get(k, 0) + (j - i)
+        i = j
+    return runs
+
+
+def init_params(rng, cfg: ModelConfig) -> Params:
+    k_embed, k_blocks, k_head = jax.random.split(rng, 3)
+    params: Params = {"embed": init_embed(k_embed, cfg)}
+
+    if _is_homogeneous(cfg):
+        rngs = jax.random.split(k_blocks, cfg.n_layers)
+        params["blocks"] = jax.vmap(lambda r: init_block(r, cfg, "attn"))(rngs)
+    else:
+        pattern = cfg.pattern
+        kinds = list(dict.fromkeys(pattern))
+        stacks: Params = {}
+        for kind in kinds:
+            n = sum(1 for k in pattern if k == kind)
+            if kind == "attn" and cfg.shared_attn:
+                stacks["attn_shared"] = init_block(
+                    jax.random.fold_in(k_blocks, hash(kind) % 2**31), cfg, "attn")
+            else:
+                rngs = jax.random.split(
+                    jax.random.fold_in(k_blocks, kinds.index(kind)), n)
+                stacks[kind] = jax.vmap(lambda r, kk=kind: init_block(r, cfg, kk))(rngs)
+        params["blocks"] = stacks
+
+    params["final_norm"] = init_rmsnorm(cfg)
+    params["lm_head"] = init_lm_head(k_head, cfg)
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# KV / state cache
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype=None) -> Any:
+    """Decode cache. Homogeneous attn: stacked {"k","v"} of shape
+    (L, B, Smax, Hkv, Dh) (or MLA latents). Heterogeneous: tuple of
+    per-layer caches following the block pattern.
+
+    ``kv_cache_dtype="int8"`` stores KIVI-style quantized K/V (symmetric
+    per-(token, head) scales alongside) — halves cache HBM vs bf16."""
+    dt = dtype or cdtype(cfg)
+    quant = dtype is None and cfg.kv_cache_dtype == "int8"
+
+    def attn_cache():
+        if cfg.use_mla:
+            return {
+                "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype=dt),
+                "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype=dt),
+            }
+        if quant:
+            return {
+                "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                               dtype=jnp.int8),
+                "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim),
+                               dtype=jnp.int8),
+                "k_scale": jnp.zeros((batch, max_seq, cfg.n_kv_heads),
+                                     dtype=jnp.float32),
+                "v_scale": jnp.zeros((batch, max_seq, cfg.n_kv_heads),
+                                     dtype=jnp.float32),
+            }
+        return {
+            "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype=dt),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype=dt),
+        }
+
+    if _is_homogeneous(cfg):
+        one = attn_cache()
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (cfg.n_layers, *x.shape)), one)
+
+    caches = []
+    for kind in cfg.pattern:
+        if kind == "attn":
+            caches.append(attn_cache())
+        elif kind == "mamba":
+            caches.append(ssm.init_mamba_cache(cfg, batch, dtype=dt))
+        elif kind == "mlstm":
+            caches.append(ssm.init_mlstm_cache(cfg, batch))
+        elif kind == "slstm":
+            caches.append(ssm.init_slstm_cache(cfg, batch))
+    return tuple(caches)
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params: Params, inputs: dict) -> jax.Array:
+    if cfg.frontend == "vision_embeds":
+        # stub frontend: precomputed patch/text embeddings arrive directly
+        return inputs["embeds"].astype(cdtype(cfg))
+    if cfg.frontend == "audio_codes":
+        return apply_embed(cfg, params["embed"], inputs["codes"])
+    return apply_embed(cfg, params["embed"], inputs["tokens"])
+
+
+def _default_positions(cfg: ModelConfig, B: int, S: int, offset) -> jax.Array:
+    pos = offset + jnp.arange(S, dtype=jnp.int32)[None, :]
+    pos = jnp.broadcast_to(pos, (B, S))
+    if cfg.mrope_sections is not None:
+        return jnp.broadcast_to(pos[None], (3, B, S))
+    return pos
+
+
+def forward(cfg: ModelConfig, params: Params, inputs: dict,
+            cache: Any = None, decode: bool = False
+            ) -> tuple[jax.Array, Any]:
+    """Returns (logits, new_cache). ``inputs`` per the module docstring;
+    optional ``inputs["positions"]`` overrides the default arange."""
+    x = _embed_inputs(cfg, params, inputs)
+    B, S = x.shape[:2]
+    offset = inputs.get("cur_index", 0)
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = _default_positions(cfg, B, S, offset)
+
+    if _is_homogeneous(cfg):
+        block_fn = functools.partial(apply_block, cfg, "attn", decode=decode)
+        if cfg.remat and not decode:
+            block_fn = jax.checkpoint(
+                block_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+        blocks = params["blocks"]
+        if cache is None:
+            g = cfg.remat_group
+            x = maybe_constrain_act(x)
+            if g > 1 and cfg.n_layers % g == 0 and cfg.remat and not decode:
+                # grouped remat: save only every g-th layer boundary and
+                # recompute the group on backward — activation storage L/g.
+                grouped = jax.tree.map(
+                    lambda t: t.reshape(cfg.n_layers // g, g, *t.shape[1:]),
+                    blocks)
+
+                def group_fn(h, gparams):
+                    def inner(h2, lp):
+                        h2, _ = apply_block(cfg, "attn", lp, h2, positions,
+                                            None, decode=decode)
+                        return h2, None
+
+                    h, _ = jax.lax.scan(inner, h, gparams)
+                    return h
+
+                gfn = jax.checkpoint(
+                    group_fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+                def body(h, gp):
+                    return maybe_constrain_act(gfn(h, gp)), None
+
+                x, _ = jax.lax.scan(body, x, grouped)
+            else:
+                def body(h, layer_params):
+                    h, _ = block_fn(layer_params, h, positions, None)
+                    return maybe_constrain_act(h), None
+
+                x, _ = jax.lax.scan(body, x, blocks)
+            new_cache = None
+        else:
+            # The stacked cache rides in the CARRY and is updated in place
+            # (dynamic_update_index) rather than being scanned as xs/ys:
+            # carried buffers alias across iterations, so the (huge) cache
+            # is never copied or dtype-hoisted — the serving-system
+            # in-place KV-update pattern. Params stay scan-xs: per-layer
+            # slices keep their declared shardings.
+            def body(carry, layer_params):
+                h, cache_st, li = carry
+                layer_cache = jax.tree.map(
+                    lambda c: jax.lax.dynamic_index_in_dim(c, li, 0,
+                                                           keepdims=False),
+                    cache_st)
+                h, c2 = block_fn(layer_params, h, positions, layer_cache)
+                cache_st = jax.tree.map(
+                    lambda c, u: jax.lax.dynamic_update_index_in_dim(
+                        c, u.astype(c.dtype), li, 0),
+                    cache_st, c2)
+                return (h, cache_st, li + 1), None
+
+            (x, new_cache, _), _ = jax.lax.scan(
+                body, (x, cache, jnp.int32(0)), blocks)
+    elif cache is None:
+        # heterogeneous, no cache (train/prefill): scan over RUNS of
+        # consecutive same-kind blocks (e.g. zamba2 = 5 x [6 mamba + shared
+        # attn] + 3 mamba). One scan body per run keeps the HLO ~run-count
+        # sized instead of layer-count sized (38 unrolled mamba blocks cost
+        # 6 minutes of XLA time and pessimistic buffer liveness).
+        x = maybe_constrain_act(x)
+        for kind, occ0, count in _pattern_runs(cfg.pattern):
+            if kind == "attn" and cfg.shared_attn:
+                fn = functools.partial(apply_block, cfg, "attn", decode=decode)
+                if cfg.remat:
+                    fn = jax.checkpoint(
+                        fn, policy=jax.checkpoint_policies.nothing_saveable)
+                for _ in range(count):
+                    x, _ = fn(params["blocks"]["attn_shared"], x, positions, None)
+                    x = maybe_constrain_act(x)
+                continue
+            run_params = jax.tree.map(
+                lambda t: t[occ0 : occ0 + count], params["blocks"][kind])
+            fn = functools.partial(apply_block, cfg, kind, decode=decode)
+            if cfg.remat:
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+            def body(h, lp, fn=fn):
+                h, _ = fn(lp, h, positions, None)
+                return maybe_constrain_act(h), None
+
+            x, _ = jax.lax.scan(body, x, run_params)
+        new_cache = None
+    else:
+        # heterogeneous decode: unrolled (per-block decode HLO is tiny and
+        # the per-layer cache tuple keeps heterogeneous state shapes simple)
+        pattern = cfg.pattern
+        occ = {k: 0 for k in set(pattern)}
+        new_caches = []
+        for li, kind in enumerate(pattern):
+            if kind == "attn" and cfg.shared_attn:
+                p_block = params["blocks"]["attn_shared"]
+            else:
+                i = occ[kind]
+                p_block = jax.tree.map(lambda t: t[i], params["blocks"][kind])
+            occ[kind] = occ.get(kind, 0) + 1
+            layer_cache = cache[li] if cache is not None else None
+            x, c2 = apply_block(cfg, kind, p_block, x, positions, layer_cache,
+                                decode=decode)
+            new_caches.append(c2)
+        new_cache = tuple(new_caches)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = apply_lm_head(cfg, params["lm_head"], x, params["embed"])
+    return logits, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Losses and steps
+# ---------------------------------------------------------------------------
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean next-token CE. logits: (..., V) f32; labels: (...) int32.
+
+    The gold logit is extracted with an iota-compare mask rather than
+    ``take_along_axis``: on a vocab-sharded mesh the masked sum is local
+    per shard (+ a scalar all-reduce), and its backward is a fused
+    elementwise (softmax - onehot) — no giant scatter buffers."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    V = logits.shape[-1]
+    onehot = labels[..., None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1,) * (logits.ndim - 1) + (V,), logits.ndim - 1)
+    gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    return jnp.mean(lse - gold)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict) -> jax.Array:
+    logits, _ = forward(cfg, params, batch)
+    logits = maybe_constrain_logits(logits)
+    labels = batch["labels"]
+    return cross_entropy(logits, labels)
+
+
+def serve_step(cfg: ModelConfig, params: Params, inputs: dict, cache: Any
+               ) -> tuple[jax.Array, Any]:
+    """One decode step: new token(s) + cache -> next-token logits + cache.
+    ``inputs["cur_index"]`` is the write offset into the cache."""
+    logits, new_cache = forward(cfg, params, inputs, cache=cache, decode=True)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params: Params, inputs: dict, cache: Any
+            ) -> tuple[jax.Array, Any]:
+    """Prefill a prompt into the cache (chunked attention path)."""
+    logits, new_cache = forward(cfg, params, inputs, cache=cache, decode=False)
+    return logits, new_cache

@@ -1,0 +1,7 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    global_norm,
+)
+from repro.optim.schedules import cosine_schedule, linear_warmup_cosine  # noqa: F401

@@ -1,0 +1,233 @@
+"""Sharding rules: param/batch/cache PartitionSpecs for the production mesh.
+
+Axes:
+  * ``data`` (+ ``pod`` when multi-pod) — batch / data parallelism,
+  * ``model`` — tensor parallelism: attention heads, FFN hidden, experts
+    (EP), vocab.
+
+Rules are name-based and divisibility-checked: a dim is sharded only when
+its size divides the mesh axis size, otherwise the rule falls through to
+the next candidate dim (e.g. minicpm3's 40 heads don't divide a 16-wide
+model axis — its attention shards on the fused head*dim axis instead; MQA
+kv projections replicate). Leading layer-stack dims (from scan-stacked
+params) are never sharded.
+
+Long-context (batch=1) cells shard the KV-cache *sequence* dim over
+``data`` instead of batch — decode attention over a sequence-sharded cache
+becomes a distributed flash-decoding pattern (partial softmax + psum),
+which XLA SPMD derives from these specs.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+# (regex on the param path, candidate shard dims counted from the END of
+# the shape, e.g. -1 = last dim). The first divisible candidate wins.
+_PARAM_RULES: list[tuple[str, list[int]]] = [
+    # embed table shards d_model (NOT vocab): token gathers and their
+    # backward scatter-adds stay shard-local; the lm_head is the one that
+    # shards vocab (where the big logits live).
+    (r"embed/table$", [-1]),
+    (r"lm_head/w$", [-1]),  # vocab(-heads)-parallel
+    (r"attn/w[qkv]$", [-2, -1]),  # heads, else head_dim
+    (r"attn/wo$", [-2]),  # fused head*dim (row-parallel)
+    (r"attn/q_down$", [-1]),
+    (r"attn/q_up$", [-2, -3]),  # heads, else lora rank (row-parallel)
+    (r"attn/kv_down$", []),  # latent bottleneck: replicate
+    (r"attn/kv_up_[kv]$", [-2, -3]),
+    (r"ff/w_(in|gate)$", [-1]),  # MoE (E,d,f) -> experts; dense (d,f) -> f
+    (r"ff/w_out$", [-2]),
+    (r"ff/router$", []),
+    (r"mixer/in_proj$", [-1]),
+    (r"mixer/out_proj$", [-2]),
+    (r"mixer/conv_[wb]$", []),
+    (r"mixer/(A_log|D|dt_bias|f_bias)$", []),
+    (r"mixer/r$", []),
+    (r"norm", []),
+    (r"scale$", []),
+]
+
+# MoE expert stacks: shard the expert dim (EP) in preference to f.
+# These fire ONLY on rank-4 leaves (layer-stacked (L, E, d, f)): a
+# layer-stacked DENSE weight is also rank 3, and letting the expert rule
+# shard its dim -3 would shard the LAYER axis over 'model' — replicating
+# the weights and poisoning every scan (the qwen2-vl 36 GB decode bug).
+_MOE_RULES: list[tuple[str, list[int]]] = [
+    (r"ff/w_(in|gate)$", [-3, -1]),
+    (r"ff/w_out$", [-3, -2]),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_spec(path_s: str, shape: tuple[int, ...], model_axis: str,
+               model_size: int) -> P:
+    """PartitionSpec for one param leaf."""
+    rules = _MOE_RULES + _PARAM_RULES if len(shape) >= 4 else _PARAM_RULES
+    for pat, dims in rules:
+        if re.search(pat, path_s):
+            spec = [None] * len(shape)
+            for d in dims:
+                if len(shape) >= -d and shape[d] % model_size == 0 and shape[d] >= model_size:
+                    spec[d] = model_axis
+                    break
+            return P(*spec)
+    return P(*([None] * len(shape)))
+
+
+def params_sharding(params: Any, mesh: Mesh, fsdp: bool = False) -> Any:
+    """NamedSharding pytree matching ``params``.
+
+    ``fsdp=True`` additionally shards every (large) leaf over the DP axes
+    on a second dim — FSDP/ZeRO-3 parameter sharding. Inside the layer
+    scan, XLA SPMD then all-gathers exactly one layer's weights at a time,
+    which is the FSDP execution pattern. Used for the archs whose
+    model-axis-only shards exceed HBM (qwen3-moe, granite-34b,
+    qwen2-vl-72b), and for optimizer moments (ZeRO-1) universally."""
+    model_axis = "model"
+    model_size = mesh.shape[model_axis]
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    dp_name = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def leaf_spec(path, x):
+        spec = list(param_spec(_path_str(path), x.shape, model_axis, model_size))
+        spec += [None] * (len(x.shape) - len(spec))
+        if fsdp and dp_name is not None and x.size * 4 >= 2**22:
+            # dim 0 of stacked-block leaves is the layer stack: skip it so
+            # the scan slices stay layout-friendly
+            start = 1 if len(x.shape) >= 3 else 0
+            cands = sorted(range(start, len(x.shape)),
+                           key=lambda d: -x.shape[d])
+            for d in cands:
+                if spec[d] is None and x.shape[d] % dp_size == 0 \
+                        and x.shape[d] >= dp_size:
+                    spec[d] = dp_name
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params)
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def batch_sharding(mesh: Mesh, batch_size: int, ndim: int,
+                   seq_dim: int | None = None, seq_len: int = 0) -> NamedSharding:
+    """Shard dim 0 (batch) over the DP axes; if the batch does not divide
+    them (e.g. batch=1 long-context), shard ``seq_dim`` over 'data'."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    spec = [None] * ndim
+    if batch_size % dp_size == 0 and batch_size >= dp_size:
+        spec[0] = dp if len(dp) > 1 else dp[0]
+    elif seq_dim is not None and seq_len % mesh.shape["data"] == 0:
+        spec[seq_dim] = "data"
+    return NamedSharding(mesh, P(*spec))
+
+
+def cache_sharding(cfg: ModelConfig, cache: Any, mesh: Mesh, batch: int) -> Any:
+    """Shardings for a decode cache pytree.
+
+    Attention k/v (or MLA latents): batch over DP if divisible, else the
+    sequence dim over 'data'; head dims over 'model' when divisible.
+    Recurrent states (mamba/mlstm/slstm): batch over DP if divisible; inner
+    (head or channel) dim over 'model' when divisible."""
+    model_size = mesh.shape["model"]
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_ok = batch % dp_size == 0 and batch >= dp_size
+    dp_spec = (dp if len(dp) > 1 else dp[0]) if batch_ok else None
+
+    def leaf_spec(path, x):
+        path_s = _path_str(path)
+        shape = x.shape
+        spec = [None] * len(shape)
+        # locate the batch dim: stacked homogeneous caches are (L, B, ...);
+        # heterogeneous tuples are (B, ...) per layer.
+        names = [p for p in path_s.split("/")]
+        stacked = len(shape) >= 2 and shape[0] != batch and shape[1] == batch
+        b_dim = 1 if stacked else 0
+        if names[-1] in ("k", "v", "k_scale", "v_scale") or "c_kv" in path_s \
+                or "k_rope" in path_s:
+            s_dim = b_dim + 1
+            if batch_ok:
+                spec[b_dim] = dp_spec
+            elif shape[s_dim] % mesh.shape["data"] == 0:
+                spec[s_dim] = "data"
+            # heads dim for k/v: (…, S, Hkv, Dh); when kv heads don't
+            # divide the model axis (MQA/GQA-8 on a 16-wide axis), shard
+            # the sequence over 'model' instead — decode attention over a
+            # seq-sharded cache is the flash-decoding split-KV pattern
+            # (partial softmax + psum), and the cache memory still divides.
+            h_dim = s_dim + 1
+            heads_ok = (names[-1] in ("k", "v") and len(shape) >= h_dim + 1
+                        and shape[h_dim] % model_size == 0
+                        and shape[h_dim] >= model_size)
+            if heads_ok:
+                spec[h_dim] = "model"
+            elif spec[s_dim] is None and shape[s_dim] % model_size == 0:
+                spec[s_dim] = "model"
+        else:
+            # recurrent state (B, nh, ...) / (B, K-1, C) / (B, di)
+            if batch_ok:
+                spec[b_dim] = dp_spec
+            for d in range(b_dim + 1, len(shape)):
+                if shape[d] % model_size == 0 and shape[d] >= model_size:
+                    spec[d] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def input_sharding(cfg: ModelConfig, mesh: Mesh, inputs: dict) -> dict:
+    """Shardings for a model-input dict of ShapeDtypeStructs or arrays.
+
+    Handles the microbatched training layout (leading N dim replicated,
+    per-microbatch batch dim over DP) and each frontend's trailing dims."""
+    dp = dp_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    dp_name = dp if len(dp) > 1 else (dp[0] if dp else None)
+
+    def batch_dim_of(k, v) -> int:
+        if k == "positions":
+            return v.ndim - 2  # (..., 3, B, S) -> B
+        if k == "embeds" or (cfg.frontend == "audio_codes" and k in ("codes", "labels")):
+            return v.ndim - 3  # (..., B, S, D|K)
+        return v.ndim - 2  # tokens/labels: (..., B, S)
+
+    out = {}
+    for k, v in inputs.items():
+        if not hasattr(v, "shape") or v.ndim == 0:
+            out[k] = replicated(mesh)
+            continue
+        spec = [None] * v.ndim
+        bd = max(0, batch_dim_of(k, v))
+        if dp_name is not None and v.shape[bd] % dp_size == 0 and v.shape[bd] >= dp_size:
+            spec[bd] = dp_name
+        out[k] = NamedSharding(mesh, P(*spec))
+    return out

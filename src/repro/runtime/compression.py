@@ -1,0 +1,51 @@
+"""Gradient compression for data-parallel reduction (int8 + error feedback).
+
+On a multi-pod fleet the DP gradient all-reduce crosses DCN — the paper's
+lossy, bandwidth-limited hop. Int8 compression cuts those bytes 4x
+(vs f32) at the cost of quantization noise; the error-feedback buffer
+(Seide et al. 2014; Karimireddy et al. 2019) re-injects the residual next
+step so the noise doesn't bias the trajectory.
+
+Functional API so it composes with the jitted train step; the feedback
+buffer lives in the optimizer-state pytree and shards like the params.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(g: jax.Array, err: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Per-tensor symmetric int8 round trip with error feedback.
+    Returns (decompressed gradient, new error residual)."""
+    g32 = g.astype(jnp.float32) + err
+    amax = jnp.max(jnp.abs(g32))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return deq.astype(g.dtype), g32 - deq
+
+
+def compress_grads(grads: Any, err_state: Any) -> tuple[Any, Any]:
+    """Apply int8+EF compression leaf-wise (what would cross the DCN wire
+    is ``q`` + one scale per tensor — 4x fewer bytes than f32)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err_state)
+    out = [compress_decompress(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_e = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return new_g, new_e
+
+
+def wire_bytes(grads: Any) -> tuple[int, int]:
+    """(compressed, uncompressed) bytes a DP all-reduce would move."""
+    comp = sum(x.size + 4 for x in jax.tree.leaves(grads))
+    raw = sum(x.size * 4 for x in jax.tree.leaves(grads))
+    return comp, raw

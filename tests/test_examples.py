@@ -1,0 +1,43 @@
+"""Examples must stay runnable — subprocess smoke tests (marked slow)."""
+
+import subprocess
+import sys
+
+import pytest
+
+
+def _run(script, *args, timeout=420):
+    res = subprocess.run(
+        [sys.executable, script, *args], capture_output=True, text=True,
+        timeout=timeout, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert res.returncode == 0, res.stderr[-2000:]
+    return res.stdout
+
+
+@pytest.mark.slow
+def test_quickstart():
+    out = _run("examples/quickstart.py")
+    assert "split executes correctly: top-1 agreement = True" in out
+    assert "predicted end-to-end latency" in out
+
+
+@pytest.mark.slow
+def test_serve_split_llm():
+    out = _run("examples/serve_split_llm.py")
+    assert "served 8 requests" in out
+    assert "modeled split-hop overhead" in out
+
+
+@pytest.mark.slow
+def test_adaptive_replanning():
+    out = _run("examples/adaptive_replanning.py")
+    assert "decision log" in out
+    assert "udp" in out  # deep degradation ends in a protocol switch
+
+
+@pytest.mark.slow
+def test_train_pipeline_lm_short():
+    out = _run("examples/train_pipeline_lm.py", "--steps", "24", "--batch", "4",
+               "--seq", "32", "--vocab", "256", timeout=540)
+    assert "restarting from checkpoint step" in out
+    assert "beam PP plan over dcn" in out

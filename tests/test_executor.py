@@ -1,0 +1,90 @@
+"""Split-executor property tests: split execution must equal the unsplit
+model for ANY valid split configuration (the core correctness invariant
+of split inference), plus wire-accounting consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.executor import run_split, run_unsplit, segment_bounds
+from repro.core.profiles import ESP_NOW, UDP
+from repro.models.mobilenetv2 import MobileNetV2
+from repro.models.resnet50 import ResNet50
+
+
+@pytest.fixture(scope="module")
+def mbv2():
+    model = MobileNetV2(width=0.35, image_size=64)
+    params = model.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), model.input_shape(2))
+    ref = run_unsplit(model, params, x)
+    return model, params, x, ref
+
+
+class TestSplitEqualsUnsplit:
+    @given(st.data())
+    @settings(max_examples=15, deadline=None)
+    def test_any_split_configuration_mbv2(self, mbv2, data):
+        model, params, x, ref = mbv2
+        L = len(model.layer_names)
+        n = data.draw(st.integers(2, 5))
+        splits = tuple(sorted(data.draw(
+            st.sets(st.integers(1, L - 1), min_size=n - 1, max_size=n - 1))))
+        out, trace = run_split(model, params, x, splits)
+        np.testing.assert_array_equal(out["h"], ref["h"])
+        assert len(trace.hops) == n - 1
+
+    def test_paper_split_points(self, mbv2):
+        model, params, x, ref = mbv2
+        g_idx = [model.layer_names.index(n) + 1 for n in
+                 ("block_2_expand", "block_15_project_BN", "block_16_project_BN")]
+        out, _ = run_split(model, params, x, tuple(sorted(g_idx)))
+        np.testing.assert_array_equal(out["h"], ref["h"])
+
+    def test_resnet50_block_splits(self):
+        model = ResNet50(image_size=64)
+        params = model.init(jax.random.PRNGKey(2))
+        x = jax.random.normal(jax.random.PRNGKey(3), model.input_shape(1))
+        ref = run_unsplit(model, params, x)
+        out, _ = run_split(model, params, x, (5, 20, 35, 50))
+        np.testing.assert_array_equal(out["h"], ref["h"])
+
+
+class TestWireAccounting:
+    def test_bytes_include_live_residuals(self, mbv2):
+        """Cutting inside a residual block ships main + skip tensors —
+        16.7% more than the paper's main-tensor-only count at
+        block_2_expand (documented fidelity note)."""
+        model, params, x, ref = mbv2
+        idx = model.layer_names.index("block_2_expand") + 1
+        _, trace = run_split(model, params, x, (idx,), quantize_wire=True)
+        h, w = 16, 16  # 64px input -> 16x16 at this depth
+        main = 2 * h * w * 48
+        skip = 2 * h * w * 8
+        assert trace.hops[0].nbytes == main + skip
+
+    def test_block_boundary_matches_paper_bytes(self, mbv2):
+        """At block_16_project_BN the residual is consumed: the wire holds
+        exactly the main tensor (paper's Table II convention)."""
+        model, params, x, ref = mbv2
+        idx = model.layer_names.index("block_16_project_BN") + 1
+        _, trace = run_split(model, params, x, (idx,), quantize_wire=True)
+        assert trace.hops[0].nbytes == 2 * 2 * 2 * 112  # 64px -> 2x2 spatial
+
+    def test_packets_and_latency_consistent_with_link(self, mbv2):
+        model, params, x, _ = mbv2
+        for link in (ESP_NOW, UDP):
+            _, trace = run_split(model, params, x, (30,), link=link,
+                                 quantize_wire=True)
+            hop = trace.hops[0]
+            assert hop.n_packets == link.packets(hop.nbytes)
+            assert hop.sim_latency_s == pytest.approx(
+                link.transmission_latency_s(hop.nbytes))
+
+    def test_segment_bounds_validation(self):
+        with pytest.raises(ValueError):
+            segment_bounds((5, 3), 10)  # not increasing
+        assert segment_bounds((3,), 5) == [(1, 3), (4, 5)]

@@ -1,0 +1,80 @@
+"""Loop-aware HLO analysis tests (the roofline collective-term machinery)."""
+
+import textwrap
+
+import pytest
+
+from repro.parallel.hlo_analysis import (
+    computation_multipliers,
+    shape_bytes,
+    split_computations,
+    trip_count,
+    weighted_collective_bytes,
+)
+
+FAKE_HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %add (a: f32[], b: f32[]) -> f32[] {
+      %a = f32[] parameter(0)
+      %b = f32[] parameter(1)
+      ROOT %r = f32[] add(%a, %b)
+    }
+
+    %cond (p: (s32[], f32[4,8])) -> pred[] {
+      %p = (s32[], f32[4,8]) parameter(0)
+      %c = s32[] constant(12)
+      %i = s32[] get-tuple-element(%p), index=0
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    %body (p: (s32[], f32[4,8])) -> (s32[], f32[4,8]) {
+      %p = (s32[], f32[4,8]) parameter(0)
+      %x = f32[4,8] get-tuple-element(%p), index=1
+      %ar = f32[4,8]{1,0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%add
+      %i = s32[] get-tuple-element(%p), index=0
+      ROOT %t = (s32[], f32[4,8]) tuple(%i, %ar)
+    }
+
+    ENTRY %main (x: f32[4,8]) -> f32[4,8] {
+      %x = f32[4,8] parameter(0)
+      %ag = f32[64,8]{1,0} all-gather(%x), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+      %zero = s32[] constant(0)
+      %t0 = (s32[], f32[4,8]) tuple(%zero, %x)
+      %w = (s32[], f32[4,8]) while(%t0), condition=%cond, body=%body
+      ROOT %out = f32[4,8] get-tuple-element(%w), index=1
+    }
+""")
+
+
+class TestParsing:
+    def test_split_computations(self):
+        comps, entry = split_computations(FAKE_HLO)
+        assert entry == "main"
+        assert set(comps) >= {"add", "cond", "body", "main"}
+
+    def test_trip_count_from_condition(self):
+        comps, _ = split_computations(FAKE_HLO)
+        assert trip_count(comps["cond"]) == 12
+
+    def test_multipliers(self):
+        mult = computation_multipliers(FAKE_HLO)
+        assert mult["main"] == 1.0
+        assert mult["body"] == 12.0
+        assert mult["cond"] == 12.0
+        # reduction computations (to_apply of collectives) carry no
+        # collectives themselves; they are not walked.
+
+    def test_shape_bytes(self):
+        assert shape_bytes("f32[4,8]") == 128
+        assert shape_bytes("(bf16[2,2], s8[10])") == 18
+
+    def test_weighted_bytes(self):
+        res = weighted_collective_bytes(FAKE_HLO)
+        # in-loop all-reduce: 128 B x 12 trips; entry all-gather: 2048 B x 1
+        assert res["bytes"]["all-reduce"] == 128 * 12
+        assert res["bytes"]["all-gather"] == 64 * 8 * 4
+        assert res["counts"]["all-reduce"] == 12
+        # wire: AR ring 2(s-1)/s with s=16; AG (s-1)/s
+        assert res["wire_bytes"]["all-reduce"] == int(128 * 12 * 2 * 15 / 16)
+        assert res["wire_bytes"]["all-gather"] == int(2048 * 15 / 16)

@@ -1,0 +1,219 @@
+"""Pallas kernel tests: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in ``interpret=True`` on CPU (the TPU lowering is
+exercised structurally by the dry-run)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import quantize
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant_matmul.kernel import quant_matmul_kernel, w8a16_matmul_kernel
+from repro.kernels.quant_matmul.ops import quant_linear, w8a16_linear
+from repro.kernels.quant_matmul.ref import (float_matmul_ref, quant_matmul_ref,
+                                             w8a16_matmul_ref)
+from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
+from repro.kernels.ssm_scan.ops import ssm_scan
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+
+
+class TestQuantMatmul:
+    @pytest.mark.parametrize("shape", [
+        (64, 64, 64), (128, 256, 512), (100, 200, 300), (1, 64, 17),
+        (256, 128, 128), (33, 65, 129),
+    ])
+    def test_matches_integer_reference_exactly(self, shape):
+        M, K, N = shape
+        rng = np.random.default_rng(M * K + N)
+        a = jnp.asarray(rng.integers(-128, 128, (M, K), dtype=np.int8))
+        w = jnp.asarray(rng.integers(-128, 128, (K, N), dtype=np.int8))
+        a_scale, a_zp = jnp.float32(0.03), jnp.int32(-5)
+        w_scale = jnp.asarray(rng.uniform(0.001, 0.1, N), dtype=jnp.float32)
+        out = quant_matmul_kernel(a, w, a_scale, a_zp, w_scale, interpret=True)
+        ref = quant_matmul_ref(a, w, a_scale, a_zp, w_scale)
+        np.testing.assert_allclose(out, ref, rtol=1e-6, atol=1e-6)
+
+    @pytest.mark.parametrize("out_dtype", [jnp.float32, jnp.bfloat16])
+    def test_out_dtypes(self, out_dtype):
+        rng = np.random.default_rng(7)
+        a = jnp.asarray(rng.integers(-128, 128, (64, 64), dtype=np.int8))
+        w = jnp.asarray(rng.integers(-128, 128, (64, 64), dtype=np.int8))
+        w_scale = jnp.full((64,), 0.02, dtype=jnp.float32)
+        out = quant_matmul_kernel(a, w, jnp.float32(0.1), jnp.int32(0), w_scale,
+                                  out_dtype=out_dtype, interpret=True)
+        assert out.dtype == out_dtype
+        ref = quant_matmul_ref(a, w, jnp.float32(0.1), jnp.int32(0), w_scale)
+        np.testing.assert_allclose(out.astype(jnp.float32), ref,
+                                   rtol=1e-2 if out_dtype == jnp.bfloat16 else 1e-6)
+
+    def test_integer_vs_float_reference_consistent(self):
+        """The zero-point-folded integer math equals dequantize-then-matmul."""
+        rng = np.random.default_rng(3)
+        a = jnp.asarray(rng.integers(-128, 128, (32, 48), dtype=np.int8))
+        w = jnp.asarray(rng.integers(-128, 128, (48, 16), dtype=np.int8))
+        w_scale = jnp.asarray(rng.uniform(0.01, 0.1, 16), dtype=jnp.float32)
+        i_ref = quant_matmul_ref(a, w, jnp.float32(0.05), jnp.int32(4), w_scale)
+        f_ref = float_matmul_ref(a, w, jnp.float32(0.05), jnp.int32(4), w_scale)
+        np.testing.assert_allclose(i_ref, f_ref, rtol=1e-4, atol=1e-4)
+
+    def test_quant_linear_close_to_float_linear(self):
+        """End-to-end: int8 path approximates the float matmul within the
+        quantization noise floor."""
+        rng = jax.random.PRNGKey(0)
+        x = jax.random.normal(rng, (8, 128))
+        w = jax.random.normal(jax.random.fold_in(rng, 1), (128, 64)) * 0.1
+        wq = quantize(w, axis=1, symmetric=True)
+        out = quant_linear(x, wq, interpret=True)
+        ref = x @ w
+        rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+        assert rel < 0.02, rel
+
+
+class TestW8A16Matmul:
+    @pytest.mark.parametrize("shape", [(64, 64, 64), (100, 200, 300), (1, 128, 32),
+                                       (256, 128, 512)])
+    def test_matches_reference(self, shape):
+        M, K, N = shape
+        rng = np.random.default_rng(M + K + N)
+        x = jnp.asarray(rng.normal(size=(M, K)), dtype=jnp.float32)
+        w = jnp.asarray(rng.integers(-128, 128, (K, N)), dtype=np.int8)
+        ws = jnp.asarray(rng.uniform(0.001, 0.05, N), dtype=jnp.float32)
+        out = w8a16_matmul_kernel(x, w, ws, interpret=True)
+        ref = w8a16_matmul_ref(x, w, ws)
+        # k-block accumulation order differs from the monolithic matmul
+        np.testing.assert_allclose(out, ref, rtol=1e-4, atol=1e-4)
+
+    def test_bf16_activations(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(32, 64)), dtype=jnp.bfloat16)
+        w = jnp.asarray(rng.integers(-128, 128, (64, 48)), dtype=np.int8)
+        ws = jnp.full((48,), 0.02, dtype=jnp.float32)
+        out = w8a16_matmul_kernel(x, w, ws, interpret=True)
+        ref = w8a16_matmul_ref(x.astype(jnp.float32), w, ws)
+        np.testing.assert_allclose(out, ref, rtol=2e-2, atol=2e-2)
+
+    def test_layer_level_close_to_float(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 128))
+        wf = jax.random.normal(jax.random.PRNGKey(1), (128, 64)) * 0.1
+        wq = quantize(wf, axis=1, symmetric=True)
+        out = w8a16_linear(x, wq, interpret=True)
+        rel = float(jnp.linalg.norm(out - x @ wf) / jnp.linalg.norm(x @ wf))
+        assert rel < 0.01
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("cfg", [
+        # (B, Sq, Skv, H, Hkv, D, bq, bkv)
+        (2, 128, 128, 4, 2, 32, 32, 64),
+        (1, 64, 64, 4, 4, 64, 16, 16),
+        (2, 100, 100, 4, 1, 32, 32, 32),   # MQA + ragged
+        (1, 1, 256, 8, 2, 64, 8, 64),      # decode-shaped
+        (1, 96, 200, 2, 2, 16, 32, 64),    # q suffix of longer kv
+        (1, 256, 256, 2, 2, 128, 128, 128),  # MXU-aligned blocks
+    ])
+    def test_matches_reference(self, cfg):
+        B, Sq, Skv, H, Hkv, D, bq, bkv = cfg
+        ks = jax.random.split(jax.random.PRNGKey(Sq + Skv), 3)
+        q = jax.random.normal(ks[0], (B, Sq, H, D), dtype=jnp.float32)
+        k = jax.random.normal(ks[1], (B, Skv, Hkv, D), dtype=jnp.float32)
+        v = jax.random.normal(ks[2], (B, Skv, Hkv, D), dtype=jnp.float32)
+        qpos = jnp.arange(Skv - Sq, Skv, dtype=jnp.int32)
+        kpos = jnp.arange(Skv, dtype=jnp.int32)
+        out = flash_attention(q, k, v, q_positions=jnp.tile(qpos[None], (B, 1)),
+                              kv_positions=kpos, scale=D**-0.5,
+                              block_q=bq, block_kv=bkv, interpret=True)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skv, D)
+        ref = attention_ref(qf, kf, vf, qpos, kpos, D**-0.5)
+        ref = ref.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(out, ref, rtol=1e-3, atol=2e-5)
+
+    def test_bf16_inputs(self):
+        B, S, H, D = 1, 128, 2, 64
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), dtype=jnp.bfloat16)
+        k = jax.random.normal(ks[1], (B, S, H, D), dtype=jnp.bfloat16)
+        v = jax.random.normal(ks[2], (B, S, H, D), dtype=jnp.bfloat16)
+        pos = jnp.arange(S, dtype=jnp.int32)
+        out = flash_attention(q, k, v, q_positions=jnp.tile(pos[None], (B, 1)),
+                              kv_positions=pos, scale=D**-0.5, block_q=32,
+                              block_kv=64, interpret=True)
+        qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+        kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+        vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, D)
+        ref = attention_ref(qf.astype(jnp.float32), kf.astype(jnp.float32),
+                            vf.astype(jnp.float32), pos, pos, D**-0.5)
+        ref = ref.reshape(B, H, S, D).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(out.astype(jnp.float32), ref, rtol=2e-2, atol=2e-2)
+
+    def test_matches_model_chunked_attention(self):
+        """Kernel vs the model's pure-JAX chunked attention (two
+        independent flash implementations must agree)."""
+        from repro.models.layers import chunked_attention
+
+        B, S, H, Hkv, D = 2, 96, 4, 2, 32
+        ks = jax.random.split(jax.random.PRNGKey(5), 3)
+        q = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, Hkv, D))
+        v = jax.random.normal(ks[2], (B, S, Hkv, D))
+        pos = jnp.arange(S, dtype=jnp.int32)
+        a = flash_attention(q, k, v, q_positions=jnp.tile(pos[None], (B, 1)),
+                            kv_positions=pos, scale=D**-0.5, block_q=32,
+                            block_kv=32, interpret=True)
+        b = chunked_attention(q, k, v, q_positions=jnp.tile(pos[None], (B, 1)),
+                              kv_positions=pos, scale=D**-0.5, kv_chunk=16)
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+class TestSSMScan:
+    @pytest.mark.parametrize("cfg", [
+        # (BH, S, ph, ds, chunk)
+        (4, 64, 16, 8, 16), (2, 128, 32, 16, 32), (3, 100, 16, 8, 32),
+        (1, 256, 64, 64, 128), (2, 37, 8, 8, 16),
+    ])
+    def test_matches_sequential_recurrence(self, cfg):
+        BH, S, ph, ds, ck = cfg
+        ks = jax.random.split(jax.random.PRNGKey(S * ph), 5)
+        x = jax.random.normal(ks[0], (BH, S, ph))
+        b = jax.random.normal(ks[1], (BH, S, ds)) * 0.5
+        c = jax.random.normal(ks[2], (BH, S, ds)) * 0.5
+        dA = -jax.nn.softplus(jax.random.normal(ks[3], (BH, S)))
+        dt = jax.nn.softplus(jax.random.normal(ks[4], (BH, S)))
+        out = ssm_scan_kernel(x, b, c, dA, dt, chunk=ck, interpret=True)
+        ref = ssm_scan_ref(x, b, c, dA, dt)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-4)
+
+    def test_model_layout_op(self):
+        B, S, H, ph, ds = 2, 64, 3, 16, 8
+        ks = jax.random.split(jax.random.PRNGKey(1), 5)
+        x = jax.random.normal(ks[0], (B, S, H, ph))
+        b = jax.random.normal(ks[1], (B, S, ds)) * 0.5
+        c = jax.random.normal(ks[2], (B, S, ds)) * 0.5
+        dA = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+        dt = jax.nn.softplus(jax.random.normal(ks[4], (B, S, H)))
+        out = ssm_scan(x, b, c, dA, dt, chunk=16, interpret=True)
+        assert out.shape == (B, S, H, ph)
+        # oracle in folded layout
+        xf = x.transpose(0, 2, 1, 3).reshape(B * H, S, ph)
+        bf = jnp.broadcast_to(b[:, None], (B, H, S, ds)).reshape(B * H, S, ds)
+        cf = jnp.broadcast_to(c[:, None], (B, H, S, ds)).reshape(B * H, S, ds)
+        dAf = dA.transpose(0, 2, 1).reshape(B * H, S)
+        dtf = dt.transpose(0, 2, 1).reshape(B * H, S)
+        ref = ssm_scan_ref(xf, bf, cf, dAf, dtf).reshape(B, H, S, ph).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-4)
+
+    def test_long_sequence_stability(self):
+        """Decay keeps the state bounded over long scans (no overflow)."""
+        BH, S, ph, ds = 1, 1024, 8, 8
+        ks = jax.random.split(jax.random.PRNGKey(2), 5)
+        x = jax.random.normal(ks[0], (BH, S, ph))
+        b = jax.random.normal(ks[1], (BH, S, ds)) * 0.3
+        c = jax.random.normal(ks[2], (BH, S, ds)) * 0.3
+        dA = -jax.nn.softplus(jax.random.normal(ks[3], (BH, S)) + 1.0)
+        dt = jax.nn.softplus(jax.random.normal(ks[4], (BH, S)))
+        out = ssm_scan_kernel(x, b, c, dA, dt, chunk=128, interpret=True)
+        assert bool(jnp.all(jnp.isfinite(out)))

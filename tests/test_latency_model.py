@@ -1,0 +1,136 @@
+"""Unit tests for the Eq. 4-8 latency model."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.latency import (
+    DeviceProfile,
+    LayerCost,
+    LinkProfile,
+    ModelCostProfile,
+    SplitCostModel,
+    rtt_breakdown,
+    scale_profile,
+)
+
+LINK = LinkProfile("test", mtu_bytes=100, rate_bytes_per_s=1e4, loss_p=0.1,
+                   t_prop_s=1e-3, t_ack_s=2e-3, t_setup_s=0.5, t_feedback_s=0.1)
+
+
+def make_profile(n=6, act=500, param=1000, t=0.01):
+    layers = [
+        LayerCost(f"l{i}", t_infer_s=t * (i + 1), act_bytes=act, param_bytes=param,
+                  work_bytes=act * 2, flops=1e6)
+        for i in range(n)
+    ]
+    return ModelCostProfile("toy", tuple(layers), input_bytes=act)
+
+
+class TestLink:
+    def test_packet_count_ceil(self):
+        assert LINK.packets(1) == 1
+        assert LINK.packets(100) == 1
+        assert LINK.packets(101) == 2
+        assert LINK.packets(0) == 0
+
+    def test_packet_time_eq7(self):
+        # MTU/(r(1-p)) + T_prop + T_ack
+        want = 100 / (1e4 * 0.9) + 1e-3 + 2e-3
+        assert LINK.packet_time_s() == pytest.approx(want)
+
+    def test_transmission_linear_in_packets(self):
+        t1 = LINK.transmission_latency_s(100)
+        t5 = LINK.transmission_latency_s(401)  # 5 packets
+        assert t5 == pytest.approx(5 * t1)
+
+    @given(nbytes=st.integers(1, 10**7), mtu=st.integers(1, 10**5))
+    @settings(max_examples=200, deadline=None)
+    def test_packets_property(self, nbytes, mtu):
+        link = LinkProfile("x", mtu_bytes=mtu, rate_bytes_per_s=1e6)
+        k = link.packets(nbytes)
+        assert (k - 1) * mtu < nbytes <= k * mtu
+        assert k == math.ceil(nbytes / mtu)
+
+    @given(p=st.floats(0.0, 0.9))
+    @settings(max_examples=50, deadline=None)
+    def test_loss_monotone(self, p):
+        """Higher loss -> longer expected transmission (Eq. 7 derating)."""
+        base = LinkProfile("x", 100, 1e4, loss_p=0.0)
+        lossy = LinkProfile("x", 100, 1e4, loss_p=p)
+        assert lossy.transmission_latency_s(1000) >= base.transmission_latency_s(1000)
+
+
+class TestDevice:
+    def test_memory_feasibility_inf(self):
+        dev = DeviceProfile("d", mem_limit_bytes=100)
+        assert dev.local_latency_s(0.1, param_bytes=90, act_bytes=0, work_bytes=20) == float("inf")
+        assert dev.local_latency_s(0.1, param_bytes=90, act_bytes=0, work_bytes=5) < float("inf")
+
+    def test_eq4_decomposition(self):
+        dev = DeviceProfile(
+            "d", compute_scale=2.0, t_model_load_s=1.0, model_load_s_per_byte=0.1,
+            t_input_load_s=5.0, t_tensor_alloc_s=2.0, tensor_alloc_s_per_byte=0.01,
+            t_buffer_s=3.0, buffer_s_per_byte=0.001,
+        )
+        t = dev.local_latency_s(infer_s=10.0, param_bytes=10, act_bytes=100, work_bytes=200,
+                                is_first=True)
+        want = (1.0 + 0.1 * 10) + (2.0 + 0.01 * 200) + 10.0 * 2.0 + (3.0 + 0.001 * 100) + 5.0
+        assert t == pytest.approx(want)
+
+
+class TestCostModel:
+    def test_sum_objective_decomposes(self):
+        prof = make_profile()
+        m = SplitCostModel(prof, (DeviceProfile("d"),), LINK)
+        splits = (2, 4)
+        total = m.end_to_end_s(splits, with_overheads=False)
+        parts = [m.segment_cost_s(1, 2, 1), m.segment_cost_s(3, 4, 2), m.segment_cost_s(5, 6, 3)]
+        assert total == pytest.approx(sum(parts))
+
+    def test_overheads_add_setup_and_feedback(self):
+        prof = make_profile()
+        m = SplitCostModel(prof, (DeviceProfile("d"),), LINK)
+        no = m.end_to_end_s((3,), with_overheads=False)
+        yes = m.end_to_end_s((3,), with_overheads=True)
+        assert yes == pytest.approx(no + 0.5 + 0.1)
+
+    def test_last_segment_has_no_transmission(self):
+        prof = make_profile()
+        m = SplitCostModel(prof, (DeviceProfile("d"),), LINK)
+        c_last = m.segment_cost_s(5, 6, 2)
+        dev_only = DeviceProfile("d").local_latency_s(
+            prof.segment_infer_s(5, 6), prof.segment_param_bytes(5, 6),
+            prof.boundary_act_bytes(6), prof.segment_work_bytes(5, 6))
+        assert c_last == pytest.approx(dev_only)
+
+    def test_invalid_splits_inf(self):
+        prof = make_profile()
+        m = SplitCostModel(prof, (DeviceProfile("d"),), LINK)
+        assert m.end_to_end_s((4, 2)) == float("inf")  # not increasing
+        assert m.end_to_end_s((0, 3)) == float("inf")  # s_i >= 1
+
+    def test_bottleneck_objective_is_max(self):
+        prof = make_profile()
+        m = SplitCostModel(prof, (DeviceProfile("d"),), LINK, objective="bottleneck")
+        splits = (3,)
+        parts = [m.segment_cost_s(1, 3, 1), m.segment_cost_s(4, 6, 2)]
+        assert m.end_to_end_s(splits, with_overheads=False) == pytest.approx(max(parts))
+
+    def test_rtt_breakdown_consistent(self):
+        prof = make_profile()
+        m = SplitCostModel(prof, (DeviceProfile("d"),), LINK)
+        br = rtt_breakdown(m, (2, 4))
+        assert br.rtt_s == pytest.approx(m.end_to_end_s((2, 4), with_overheads=True))
+        assert len(br.device_s) == 3
+        assert len(br.transmission_s) == 2
+
+    def test_scale_profile(self):
+        prof = make_profile()
+        scaled = scale_profile(prof, 42.0)
+        assert sum(lc.t_infer_s for lc in scaled.layers) == pytest.approx(42.0)
+        # ratios preserved
+        r0 = scaled.layers[1].t_infer_s / scaled.layers[0].t_infer_s
+        assert r0 == pytest.approx(prof.layers[1].t_infer_s / prof.layers[0].t_infer_s)

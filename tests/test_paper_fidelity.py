@@ -1,0 +1,184 @@
+"""Paper-fidelity tests: the cost model must reproduce the paper's own
+measurements (Tables II-IV) and the qualitative claims of Figs. 3-4."""
+
+import math
+
+import pytest
+
+from repro.core.latency import rtt_breakdown
+from repro.core.planner import compare_solvers, plan_split
+from repro.core.profiles import (
+    ESP32,
+    MBV2_PART1_INFER_S,
+    MBV2_PART2_INFER_S,
+    PROTOCOLS,
+    mobilenet_cost_profile,
+    paper_cost_model,
+    resnet50_cost_profile,
+)
+from repro.models.graph import mobilenet_v2_graph, resnet50_graph
+
+# Activation byte sizes at the paper's three split points (int8).
+ACT_BYTES = {
+    "block_2_expand": 56 * 56 * 48,  # 150528
+    "block_15_project_BN": 7 * 7 * 56,  # 2744
+    "block_16_project_BN": 7 * 7 * 112,  # 5488
+}
+
+# Table II ground truth: protocol -> split -> (latency_ms, n_packets)
+TABLE2 = {
+    "udp": {"block_2_expand": (83.9, 104), "block_15_project_BN": (1.4, 2),
+            "block_16_project_BN": (3.2, 4)},
+    "tcp": {"block_2_expand": (563.3, 104), "block_15_project_BN": (8.5, 2),
+            "block_16_project_BN": (19.3, 4)},
+    "esp_now": {"block_2_expand": (1897.0, 603), "block_15_project_BN": (34.6, 11),
+                "block_16_project_BN": (69.2, 22)},
+    "ble": {"block_15_project_BN": (148.9, None), "block_16_project_BN": (272.9, 11)},
+}
+
+# Table IV ground truth (seconds).
+TABLE4_RTT = {"udp": 5.8000, "tcp": 6.2022, "esp_now": 3.662, "ble": 10.44355}
+
+
+class TestGraphShapes:
+    def test_mbv2_split_point_shapes(self):
+        g = mobilenet_v2_graph(0.35, 224)
+        for name, want in ACT_BYTES.items():
+            assert g.nodes[g.node_index(name) - 1].out_elems == want
+
+    def test_mbv2_parameter_count(self):
+        """MobileNet-V2 x0.35 has ~1.66 M params (public model card)."""
+        g = mobilenet_v2_graph(0.35, 224)
+        assert 1.5e6 < g.total_params < 1.8e6
+
+    def test_resnet50_parameter_count(self):
+        g = resnet50_graph(224)
+        assert 25.0e6 < g.total_params < 26.5e6
+
+    def test_mbv2_flops(self):
+        """~59 M MACs = ~118 M FLOPs at 224x224 (public model card)."""
+        g = mobilenet_v2_graph(0.35, 224)
+        assert 1.0e8 < g.total_flops < 1.4e8
+
+
+class TestTable2:
+    @pytest.mark.parametrize("protocol", ["udp", "tcp", "esp_now"])
+    def test_packet_counts_exact(self, protocol):
+        link = PROTOCOLS[protocol]
+        for split, (_, n_packets) in TABLE2[protocol].items():
+            assert link.packets(ACT_BYTES[split]) == n_packets
+
+    def test_ble_block16_packets(self):
+        # 5488 B / 512 B GATT MTU = 11 packets (Table II BLE block_16 row).
+        assert PROTOCOLS["ble"].packets(ACT_BYTES["block_16_project_BN"]) == 11
+
+    @pytest.mark.parametrize("protocol,tol", [("udp", 0.25), ("tcp", 0.15),
+                                              ("esp_now", 0.01), ("ble", 0.10)])
+    def test_transmission_latency(self, protocol, tol):
+        """Modeled Eq. 7 latency within tolerance of Table II at the two
+        consistent split points (block_2 rows are buffer-stall anomalies
+        the paper itself flags; ESP-NOW block_2 is consistent and exact)."""
+        link = PROTOCOLS[protocol]
+        rows = TABLE2[protocol]
+        for split in ("block_15_project_BN", "block_16_project_BN"):
+            want_ms = rows[split][0]
+            got_ms = link.transmission_latency_s(ACT_BYTES[split]) * 1e3
+            assert got_ms == pytest.approx(want_ms, rel=tol)
+
+    def test_espnow_block2_near_exact(self):
+        got = PROTOCOLS["esp_now"].transmission_latency_s(ACT_BYTES["block_2_expand"]) * 1e3
+        assert got == pytest.approx(1897.0, rel=0.01)
+
+
+class TestTable3:
+    def test_inference_split_calibration(self):
+        """Device-local inference at the block_16_project_BN split matches
+        Table III: 3053.75 ms on device 1, 437 ms on device 2."""
+        prof = mobilenet_cost_profile()
+        idx = next(i for i, lc in enumerate(prof.layers) if lc.name == "block_16_project_BN") + 1
+        part1 = sum(lc.t_infer_s for lc in prof.layers[:idx])
+        part2 = sum(lc.t_infer_s for lc in prof.layers[idx:])
+        assert part1 == pytest.approx(MBV2_PART1_INFER_S, rel=1e-6)
+        assert part2 == pytest.approx(MBV2_PART2_INFER_S, rel=1e-6)
+
+    def test_esp32_memory_feasibility(self):
+        """The whole MobileNet fits the ESP32 budget; whole ResNet50 does
+        not (int8 25.6 MB > 8.5 MB) — the Fig. 3 infeasibility mechanism."""
+        mb = mobilenet_cost_profile()
+        rn = resnet50_cost_profile()
+        assert ESP32.local_latency_s(1.0, mb.segment_param_bytes(1, mb.num_layers), 0,
+                                     mb.segment_work_bytes(1, mb.num_layers)) < math.inf
+        assert ESP32.local_latency_s(1.0, rn.segment_param_bytes(1, rn.num_layers), 0,
+                                     rn.segment_work_bytes(1, rn.num_layers)) == math.inf
+
+
+class TestTable4:
+    @pytest.mark.parametrize("protocol", list(TABLE4_RTT))
+    def test_rtt_within_3pct(self, protocol):
+        """End-to-end RTT (Eq. 8 + setup + feedback) reproduces Table IV."""
+        m = paper_cost_model("mobilenet_v2", protocol)
+        split_idx = next(
+            i for i, lc in enumerate(m.profile.layers) if lc.name == "block_16_project_BN"
+        ) + 1
+        br = rtt_breakdown(m, (split_idx,))
+        assert br.rtt_s == pytest.approx(TABLE4_RTT[protocol], rel=0.03)
+
+    def test_espnow_best_rtt(self):
+        """Paper's headline: ESP-NOW achieves the best RTT (3.6 s)."""
+        rtts = {}
+        for p in PROTOCOLS:
+            m = paper_cost_model("mobilenet_v2", p)
+            idx = next(i for i, lc in enumerate(m.profile.layers)
+                       if lc.name == "block_16_project_BN") + 1
+            rtts[p] = rtt_breakdown(m, (idx,)).rtt_s
+        assert min(rtts, key=rtts.get) == "esp_now"
+        assert max(rtts, key=rtts.get) == "ble"
+
+
+class TestFig3Fig4:
+    """Qualitative claims of the heuristic comparison figures."""
+
+    @pytest.mark.parametrize("n_devices", [2, 3, 4, 5])
+    def test_beam_at_most_greedy_at_most_firstfit_trend(self, n_devices):
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        plans = compare_solvers(m, n_devices, solvers=("beam", "greedy", "first_fit"))
+        assert plans["beam"].total_latency_s <= plans["greedy"].total_latency_s + 1e-9
+
+    @pytest.mark.parametrize("n_devices", [2, 3, 4])
+    def test_beam_matches_brute_force_within_5pct(self, n_devices):
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        beam = plan_split(m, n_devices, solver="beam", beam_width=8)
+        brute = plan_split(m, n_devices, solver="brute_force")
+        assert beam.total_latency_s <= brute.total_latency_s * 1.05
+
+    def test_beam_planner_under_quarter_second_at_5_devices(self):
+        """Paper: ~0.1 s processing for 5 devices; we bound at 0.25 s."""
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        plan = plan_split(m, 5, solver="beam", beam_width=8)
+        assert plan.planner_time_s < 0.25
+
+    def test_beam_beats_random_fit_at_6_devices(self):
+        """Paper: >600% latency reduction vs Random-Fit at 6 devices.
+        Random placement on ESP-NOW ships huge early activations; we
+        assert a conservative >=1.3x gap (seeded random draw)."""
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        beam = plan_split(m, 6, solver="beam", beam_width=8)
+        rand = plan_split(m, 6, solver="random_fit", seed=1)
+        assert rand.total_latency_s >= 1.3 * beam.total_latency_s
+
+    def test_resnet50_has_infeasible_configs(self):
+        """Fig. 3: ResNet50 latency fluctuates because some segments cannot
+        run on a node (memory). Random splits should often be infeasible."""
+        m = paper_cost_model("resnet50", "esp_now")
+        # N=3 is genuinely infeasible: 25.5 MB int8 across 3x8.5 MB devices
+        assert plan_split(m, 3, solver="optimal_dp").total_latency_s == math.inf
+        infeasible = 0
+        for seed in range(8):
+            p = plan_split(m, 4, solver="random_fit", seed=seed)
+            if p.total_latency_s == math.inf:
+                infeasible += 1
+        assert infeasible >= 1
+        # while the planner still finds a feasible split (needs the
+        # beyond-paper feasibility lookahead; vanilla Alg. 1 dead-ends)
+        assert plan_split(m, 4, solver="beam").total_latency_s < math.inf
+        assert plan_split(m, 4, solver="first_fit").total_latency_s < math.inf

@@ -1,0 +1,89 @@
+"""Quantization tests: PTQ round-trips, wire format, deployed sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.quantization import (
+    QTensor,
+    decode_activation,
+    dequantize_params,
+    encode_activation,
+    fake_quant,
+    param_bytes,
+    quantize,
+    quantize_params,
+)
+
+
+class TestQuantize:
+    @given(st.integers(0, 2**31 - 1), st.floats(0.1, 50.0))
+    @settings(max_examples=40, deadline=None)
+    def test_roundtrip_error_bounded_by_scale(self, seed, spread):
+        x = jax.random.normal(jax.random.PRNGKey(seed % 2**31), (32, 16)) * spread
+        qt = quantize(x)
+        err = jnp.max(jnp.abs(qt.dequantize() - x))
+        assert float(err) <= float(qt.scale) * 0.51 + 1e-6
+
+    def test_symmetric_zero_point_is_zero(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (8, 8))
+        qt = quantize(x, symmetric=True)
+        assert int(qt.zero_point) == 0
+
+    def test_per_channel_beats_per_tensor_on_skewed(self):
+        """Per-channel scales win when channel magnitudes differ wildly."""
+        rng = jax.random.PRNGKey(1)
+        x = jax.random.normal(rng, (64, 4)) * jnp.array([0.01, 0.1, 1.0, 10.0])
+        e_tensor = jnp.mean(jnp.abs(fake_quant(x) - x))
+        e_channel = jnp.mean(jnp.abs(fake_quant(x, axis=1) - x))
+        assert float(e_channel) < float(e_tensor)
+
+    def test_constant_tensor(self):
+        x = jnp.full((4, 4), 3.7)
+        qt = quantize(x)
+        np.testing.assert_allclose(qt.dequantize(), x, rtol=1e-2)
+
+    def test_zeros(self):
+        qt = quantize(jnp.zeros((5, 5)))
+        np.testing.assert_array_equal(qt.dequantize(), jnp.zeros((5, 5)))
+
+
+class TestParamsQuantization:
+    def test_quantize_params_structure(self):
+        params = {
+            "w": jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
+            "b": jnp.zeros((8,)),
+            "nested": {"k": jax.random.normal(jax.random.PRNGKey(1), (4, 4, 4))},
+        }
+        q = quantize_params(params)
+        assert isinstance(q["w"], QTensor)
+        assert isinstance(q["nested"]["k"], QTensor)
+        assert not isinstance(q["b"], QTensor)  # vectors stay float
+
+    def test_deployed_size_is_quarter_of_f32(self):
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 256))}
+        raw = param_bytes(params)
+        q = param_bytes(quantize_params(params))
+        assert q < raw / 3.5  # int8 + scale overhead
+
+    def test_dequantize_params_roundtrip(self):
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (32, 32)) * 0.1}
+        deq = dequantize_params(quantize_params(params))
+        rel = jnp.linalg.norm(deq["w"] - params["w"]) / jnp.linalg.norm(params["w"])
+        assert float(rel) < 0.02
+
+
+class TestWireFormat:
+    def test_activation_wire_bytes_match_paper_convention(self):
+        """int8 activation wire size = element count (Table II packets)."""
+        x = jax.random.normal(jax.random.PRNGKey(0), (7, 7, 112))
+        qt = encode_activation(x)
+        assert qt.nbytes == 7 * 7 * 112
+
+    def test_encode_decode_small_error(self):
+        x = jax.random.normal(jax.random.PRNGKey(2), (56, 56, 48))
+        back = decode_activation(encode_activation(x))
+        assert float(jnp.max(jnp.abs(back - x))) < 0.05 * float(jnp.max(jnp.abs(x)))

@@ -1,0 +1,83 @@
+"""Sharding-rule unit tests: PartitionSpecs assigned to param/cache leaves.
+
+These are pure spec-level tests (no devices needed beyond 1): the rules
+module is deterministic shape math. Regression coverage for the
+layer-stack-vs-expert-stack bug (M15 in the perf log)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import param_spec
+
+
+class TestParamSpec:
+    def test_dense_stacked_mlp_shards_hidden_not_layers(self):
+        """(L, d, f) with L divisible by the axis MUST NOT shard L —
+        the qwen2-vl 36 GB decode regression (M15)."""
+        spec = param_spec("blocks/ff/w_in", (80, 8192, 29568), "model", 16)
+        assert spec == P(None, None, "model")
+        spec = param_spec("blocks/ff/w_out", (80, 29568, 8192), "model", 16)
+        assert spec == P(None, "model", None)
+
+    def test_moe_expert_stack_shards_experts(self):
+        spec = param_spec("blocks/ff/w_in", (94, 128, 4096, 1536), "model", 16)
+        assert spec == P(None, "model", None, None)
+
+    def test_attention_heads_sharded_when_divisible(self):
+        spec = param_spec("blocks/attn/wq", (30, 4096, 32, 128), "model", 16)
+        assert spec == P(None, None, "model", None)
+
+    def test_mqa_kv_falls_through_to_head_dim_or_replicates(self):
+        # kv=1 head: 1 % 16 != 0; head_dim 128 divisible -> shard dim -1
+        spec = param_spec("blocks/attn/wk", (88, 6144, 1, 128), "model", 16)
+        assert spec == P(None, None, None, "model")
+
+    def test_nondivisible_heads_fall_through(self):
+        # minicpm3: 40 heads % 16 != 0 -> q_up falls to the lora-rank dim
+        spec = param_spec("blocks/attn/q_up", (62, 768, 40, 96), "model", 16)
+        assert spec == P(None, "model", None, None)
+
+    def test_norms_replicated(self):
+        assert param_spec("blocks/norm1/scale", (30, 4096), "model", 16) == P(None, None)
+
+    def test_router_replicated(self):
+        assert param_spec("blocks/ff/router", (24, 1024, 32), "model", 16) \
+            == P(None, None, None)
+
+    def test_embed_shards_d_model(self):
+        assert param_spec("embed/table", (49155, 1024), "model", 16) == P(None, "model")
+
+    def test_lm_head_shards_vocab(self):
+        assert param_spec("lm_head/w", (4096, 151936), "model", 16) == P(None, "model")
+
+    def test_wo_row_parallel(self):
+        assert param_spec("blocks/attn/wo", (30, 4096, 4096), "model", 16) \
+            == P(None, "model", None)
+
+
+class TestCacheSharding:
+    def _mesh(self):
+        return jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_cache_spec_paths_exist(self):
+        """cache_sharding handles every cache layout without error."""
+        from repro.models.config import ModelConfig
+        from repro.models.transformer import init_cache
+        from repro.parallel.sharding import cache_sharding
+
+        mesh = self._mesh()
+        for kwargs in (
+            dict(),  # plain GQA
+            dict(kv_cache_dtype="int8"),
+            dict(use_mla=True, q_lora_rank=32, kv_lora_rank=16,
+                 qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16),
+        ):
+            cfg = ModelConfig("t", "dense", n_layers=2, d_model=64, n_heads=4,
+                              n_kv_heads=2, d_ff=128, vocab=64, head_dim=16,
+                              dtype="float32", **kwargs)
+            cache = jax.eval_shape(lambda c=cfg: init_cache(c, 4, 32))
+            shardings = cache_sharding(cfg, cache, mesh, 4)
+            assert jax.tree.structure(shardings, is_leaf=lambda x: hasattr(x, "spec")) \
+                is not None

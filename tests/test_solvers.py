@@ -1,0 +1,212 @@
+"""Solver tests: Algorithms 1-3 semantics + property-based optimality checks."""
+
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import solvers as S
+
+INF = float("inf")
+
+
+def table_cost_fn(seg_costs):
+    """cost_fn from a dict {(a,b): cost} (device-independent)."""
+
+    def fn(a, b, k):
+        return seg_costs.get((a, b), INF)
+
+    return fn
+
+
+def random_instance(draw, max_L=9, max_N=4):
+    L = draw(st.integers(3, max_L))
+    N = draw(st.integers(2, min(max_N, L)))
+    costs = {}
+    for a in range(1, L + 1):
+        for b in range(a, L + 1):
+            costs[(a, b)] = draw(
+                st.floats(0.01, 100.0, allow_nan=False, allow_infinity=False)
+            )
+    return L, N, costs
+
+
+@st.composite
+def instances(draw):
+    return random_instance(draw)
+
+
+def additive_cost_fn(layer_costs, boundary_costs):
+    """Structured instance: segment cost = sum of per-layer costs + cost of
+    the boundary after it (mirrors the real latency model)."""
+    L = len(layer_costs)
+
+    def fn(a, b, k):
+        c = sum(layer_costs[a - 1 : b])
+        if b < L:
+            c += boundary_costs[b - 1]
+        return c
+
+    return fn
+
+
+class TestBeamSearch:
+    def test_single_device(self):
+        fn = table_cost_fn({(1, 3): 5.0})
+        r = S.beam_search(fn, L=3, N=1)
+        assert r.splits == ()
+        assert r.cost_s == 5.0
+
+    def test_two_devices_exhaustive_window(self):
+        costs = {(1, 1): 1.0, (1, 2): 3.0, (2, 3): 7.0, (3, 3): 2.0}
+        # N=2, L=3: candidates splits=(1,): 1+7=8 ; (2,): 3+2=5
+        r = S.beam_search(table_cost_fn(costs), L=3, N=2, beam_width=10)
+        assert r.splits == (2,)
+        assert r.cost_s == pytest.approx(5.0)
+
+    def test_final_segment_ends_at_L(self):
+        """The chosen configuration must cover all L layers (s_N = L)."""
+        L, N = 7, 3
+        fn = additive_cost_fn([1.0] * L, [0.5] * (L - 1))
+        r = S.beam_search(fn, L, N)
+        bounds = [0, *r.splits, L]
+        assert all(bounds[i] < bounds[i + 1] for i in range(N))
+        assert len(r.splits) == N - 1
+
+    @given(instances())
+    @settings(max_examples=60, deadline=None)
+    def test_wide_beam_equals_brute_force(self, inst):
+        """Beam width >= number of boundary positions makes Alg. 1 exact."""
+        L, N, costs = inst
+        fn = table_cost_fn(costs)
+        wide = S.beam_search(fn, L, N, beam_width=10**6)
+        brute = S.brute_force(fn, L, N)
+        assert wide.cost_s == pytest.approx(brute.cost_s)
+
+    @given(instances(), st.integers(1, 8))
+    @settings(max_examples=60, deadline=None)
+    def test_beam_never_beats_brute_force(self, inst, width):
+        L, N, costs = inst
+        fn = table_cost_fn(costs)
+        beam = S.beam_search(fn, L, N, beam_width=width)
+        brute = S.brute_force(fn, L, N)
+        assert beam.cost_s >= brute.cost_s - 1e-9
+        # and the reported cost matches recomputation from splits
+        assert beam.cost_s == pytest.approx(S.total_cost(fn, beam.splits, L))
+
+    @given(instances(), st.integers(1, 6))
+    @settings(max_examples=40, deadline=None)
+    def test_beam_monotone_in_width(self, inst, width):
+        """Wider beams never do worse (superset of candidates kept)."""
+        L, N, costs = inst
+        fn = table_cost_fn(costs)
+        narrow = S.beam_search(fn, L, N, beam_width=width)
+        wider = S.beam_search(fn, L, N, beam_width=width * 4)
+        assert wider.cost_s <= narrow.cost_s + 1e-9
+
+
+class TestDPandBrute:
+    @given(instances())
+    @settings(max_examples=60, deadline=None)
+    def test_dp_equals_brute_force_sum(self, inst):
+        L, N, costs = inst
+        fn = table_cost_fn(costs)
+        assert S.optimal_dp(fn, L, N).cost_s == pytest.approx(S.brute_force(fn, L, N).cost_s)
+
+    @given(instances())
+    @settings(max_examples=40, deadline=None)
+    def test_dp_equals_brute_force_max(self, inst):
+        L, N, costs = inst
+        fn = table_cost_fn(costs)
+        dp = S.optimal_dp(fn, L, N, combine="max")
+        bf = S.brute_force(fn, L, N, combine="max")
+        assert dp.cost_s == pytest.approx(bf.cost_s)
+
+    def test_brute_force_enumerates_all(self):
+        L, N = 8, 3
+        fn = additive_cost_fn([1.0] * L, [0.0] * (L - 1))
+        r = S.brute_force(fn, L, N)
+        # every combination visits every distinct (a,b,k) segment
+        assert r.cost_s == pytest.approx(8.0)  # total layers, any split
+
+    def test_infeasible_instance(self):
+        fn = table_cost_fn({})  # everything INF
+        for solver in (S.beam_search, S.optimal_dp, S.brute_force):
+            assert not solver(fn, 5, 3).feasible
+
+
+class TestGreedyFirstFit:
+    @given(instances())
+    @settings(max_examples=60, deadline=None)
+    def test_greedy_valid_and_bounded_below_by_optimal(self, inst):
+        L, N, costs = inst
+        fn = table_cost_fn(costs)
+        g = S.greedy_search(fn, L, N)
+        opt = S.optimal_dp(fn, L, N)
+        assert len(g.splits) == N - 1
+        bounds = [0, *g.splits, L]
+        assert all(bounds[i] < bounds[i + 1] for i in range(N))
+        assert g.cost_s >= opt.cost_s - 1e-9
+
+    @given(instances())
+    @settings(max_examples=40, deadline=None)
+    def test_first_fit_valid(self, inst):
+        L, N, costs = inst
+        fn = table_cost_fn(costs)
+        f = S.first_fit_search(fn, L, N)
+        opt = S.optimal_dp(fn, L, N)
+        bounds = [0, *f.splits, L]
+        assert all(bounds[i] < bounds[i + 1] for i in range(N))
+        assert f.cost_s >= opt.cost_s - 1e-9
+
+    def test_first_fit_threshold_accepts_early(self):
+        L = 5
+        fn = additive_cost_fn([1.0] * L, [0.0] * (L - 1))
+        r = S.first_fit_search(fn, L, 2, thresholds=1.0)
+        assert r.splits == (1,)  # first position already within budget
+
+    def test_first_fit_fallback_when_no_fit(self):
+        L = 5
+        fn = additive_cost_fn([10.0] * L, [0.0] * (L - 1))
+        r = S.first_fit_search(fn, L, 3, thresholds=0.001)
+        # falls back to the latest feasible positions: L-(N-k)
+        assert r.splits == (3, 4)
+
+
+class TestRandomFit:
+    @given(instances(), st.integers(0, 3))
+    @settings(max_examples=30, deadline=None)
+    def test_valid_configuration(self, inst, seed):
+        L, N, costs = inst
+        fn = table_cost_fn(costs)
+        r = S.random_fit(fn, L, N, seed=seed)
+        bounds = [0, *r.splits, L]
+        assert all(bounds[i] < bounds[i + 1] for i in range(N))
+
+    def test_more_trials_never_worse(self):
+        L, N = 9, 3
+        fn = additive_cost_fn(list(range(1, 10)), [5.0] * 8)
+        r1 = S.random_fit(fn, L, N, trials=1, seed=7)
+        r64 = S.random_fit(fn, L, N, trials=64, seed=7)
+        assert r64.cost_s <= r1.cost_s
+
+
+class TestComplexity:
+    def test_beam_explores_fewer_nodes_than_brute(self):
+        """The paper's scalability claim: beam is poly, brute exponential."""
+        L, N = 20, 4
+        fn = additive_cost_fn([1.0] * L, [0.5] * (L - 1))
+        beam = S.beam_search(fn, L, N, beam_width=5)
+        brute = S.brute_force(fn, L, N)
+        assert beam.nodes_expanded <= brute.nodes_expanded
+        assert beam.wall_time_s < brute.wall_time_s * 5  # generous, CI-safe
+
+    def test_brute_force_candidate_count(self):
+        """Brute force covers C(L-1, N-1) configurations."""
+        L, N = 10, 3
+        seen = []
+        fn = lambda a, b, k: 1.0  # noqa: E731
+        r = S.brute_force(fn, L, N)
+        assert r.cost_s == pytest.approx(3.0)
+        assert math.comb(L - 1, N - 1) == 36  # sanity of the formula itself
