@@ -1,13 +1,20 @@
 """Fig. 3 — Beam vs Greedy vs First-Fit: end-to-end latency and planner
 processing time vs number of devices, for MobileNet-V2 and ResNet50
-(ESP-NOW link, the paper's base protocol)."""
+(ESP-NOW link, the paper's base protocol).
+
+Beyond-paper: a ``batched_dp`` column gives the exact optimum for EVERY
+fleet size from one vectorized all-k DP pass over the dense cost tensor
+(the sweep engine), so heuristic optimality gaps are certified at
+negligible planner cost."""
 
 from __future__ import annotations
 
 import math
+import time
 
 from repro.core.planner import plan_split
 from repro.core.profiles import paper_cost_model
+from repro.core.sweep import batched_optimal_dp
 
 SOLVERS = ("beam", "greedy", "first_fit")
 DEVICES = (2, 3, 4, 5, 6, 7, 8)
@@ -24,9 +31,27 @@ def run() -> list[dict]:
                     "model": model, "solver": solver, "devices": n,
                     "latency_s": (None if math.isinf(plan.total_latency_s)
                                   else round(plan.total_latency_s, 3)),
+                    "latency_raw_s": plan.total_latency_s,  # unrounded, for gaps
                     "planner_ms": round(plan.planner_time_s * 1e3, 1),
                     "splits": plan.splits,
                 })
+        # exact optimum for all fleet sizes in ONE batched DP pass
+        t0 = time.perf_counter()
+        C = m.segment_cost_tensor(max(DEVICES))[None]  # (1, N, L, L)
+        all_k = batched_optimal_dp(C, combine="sum", return_all_k=True)
+        batched_ms = (time.perf_counter() - t0) * 1e3
+        for n in DEVICES:
+            res = all_k[n]
+            feasible = bool(res.feasible[0])
+            lat = (m.end_to_end_s(res.splits_tuple(0), with_overheads=True)
+                   if feasible else math.inf)
+            rows.append({
+                "model": model, "solver": "batched_dp", "devices": n,
+                "latency_s": None if math.isinf(lat) else round(lat, 3),
+                "latency_raw_s": lat,
+                "planner_ms": round(batched_ms / len(DEVICES), 2),
+                "splits": res.splits_tuple(0),
+            })
     return rows
 
 
@@ -44,12 +69,17 @@ def main():
             print(line)
     # paper claims
     mb = [r for r in rows if r["model"] == "mobilenet_v2" and r["latency_s"]]
-    beam = {r["devices"]: r["latency_s"] for r in mb if r["solver"] == "beam"}
-    greedy = {r["devices"]: r["latency_s"] for r in mb if r["solver"] == "greedy"}
-    ff = {r["devices"]: r["latency_s"] for r in mb if r["solver"] == "first_fit"}
+    beam = {r["devices"]: r["latency_raw_s"] for r in mb if r["solver"] == "beam"}
+    greedy = {r["devices"]: r["latency_raw_s"] for r in mb if r["solver"] == "greedy"}
+    opt = {r["devices"]: r["latency_raw_s"] for r in mb if r["solver"] == "batched_dp"}
     ok = all(beam[n] <= greedy[n] + 1e-9 for n in beam if n in greedy)
     print(f"claim 'beam <= greedy everywhere (MobileNetV2)': {ok}")
-    times = [r["planner_ms"] for r in rows if r["latency_s"] is not None]
+    gaps = [beam[n] / opt[n] - 1 for n in beam if n in opt and opt[n]]
+    if gaps:
+        print(f"beam optimality gap vs batched-DP optimum: "
+              f"max {100 * max(gaps):.2f}% over N={sorted(beam)}")
+    times = [r["planner_ms"] for r in rows if r["latency_s"] is not None
+             and r["solver"] != "batched_dp"]
     print(f"claim 'planner time < 230 ms at all N': {max(times) < 230} "
           f"(max {max(times):.0f} ms; paper <=170/230 ms)")
 

@@ -8,9 +8,11 @@ beyond that (the exact optimum is still certified by the O(L^2 N) DP)."""
 from __future__ import annotations
 
 import math
+import time
 
 from repro.core.planner import plan_split
 from repro.core.profiles import paper_cost_model
+from repro.core.sweep import batched_optimal_dp
 
 DEVICES = (2, 3, 4, 5, 6)
 BRUTE_EXACT_UPTO = 5
@@ -20,6 +22,12 @@ BRUTE_CAP = 400_000
 def run() -> list[dict]:
     m = paper_cost_model("mobilenet_v2", "esp_now")
     rows = []
+    # vectorized DP: the optimum for every N in one tensor pass — used to
+    # cross-check the scalar DP oracle below (bit-identical splits)
+    t0 = time.perf_counter()
+    all_k = batched_optimal_dp(m.segment_cost_tensor(max(DEVICES))[None],
+                               combine="sum", return_all_k=True)
+    vdp_ms = (time.perf_counter() - t0) * 1e3
     for n in DEVICES:
         beam = plan_split(m, n, solver="beam", beam_width=8)
         # Random-Fit averaged over 16 draws (a single draw is seed noise;
@@ -39,6 +47,7 @@ def run() -> list[dict]:
         kwargs = {} if n <= BRUTE_EXACT_UPTO else {"max_candidates": BRUTE_CAP}
         brute = plan_split(m, n, solver="brute_force", **kwargs)
         L = m.profile.num_layers
+        vdp_match = all_k[n].splits_tuple(0) == dp.splits
         rows.append({
             "devices": n,
             "beam_s": round(beam.total_latency_s, 3),
@@ -51,6 +60,8 @@ def run() -> list[dict]:
             "beam_ms": round(beam.planner_time_s * 1e3, 1),
             "brute_ms": round(brute.planner_time_s * 1e3, 1),
             "dp_ms": round(dp.planner_time_s * 1e3, 1),
+            "vdp_ms": round(vdp_ms / len(DEVICES), 2),
+            "vdp_match": vdp_match,
             "brute_candidates": math.comb(L - 1, n - 1),
             "brute_exact": n <= BRUTE_EXACT_UPTO,
         })
@@ -59,13 +70,15 @@ def run() -> list[dict]:
 
 def main():
     print("\n=== Fig. 4: beam vs brute-force vs random-fit (MobileNetV2, ESP-NOW) ===")
-    for r in run():
+    rows = run()
+    for r in rows:
         rnd = r["random_s"] if r["random_s"] is not None else "inf"
         note = "" if r["brute_exact"] else f" (capped; C={r['brute_candidates']:.2e})"
         print(f"N={r['devices']}: beam {r['beam_s']}s/{r['beam_ms']}ms  "
               f"brute {r['brute_s']}s/{r['brute_ms']}ms{note}  "
-              f"random {rnd}s  optimal(DP) {r['optimal_s']}s/{r['dp_ms']}ms")
-    rows = run()
+              f"random {rnd}s  optimal(DP) {r['optimal_s']}s/{r['dp_ms']}ms  "
+              f"vectorized-DP {r['vdp_ms']}ms "
+              f"({'match' if r['vdp_match'] else 'MISMATCH'})")
     r5 = next(r for r in rows if r["devices"] == 5)
     print(f"claim 'beam near-optimal at N=5': gap "
           f"{100 * (r5['beam_s'] / r5['optimal_s'] - 1):.1f}% vs optimum; "

@@ -15,6 +15,7 @@ def main() -> None:
         fig4_beam_vs_brute,
         planner_tpu,
         roofline,
+        sweep_grid,
         table2_transmission,
         table3_processing,
         table4_rtt,
@@ -45,6 +46,19 @@ def main() -> None:
           lambda r: f"N{r['devices']}_beam={r['beam_s']}s_brute={r['brute_s']}s")
     timed("planner_tpu", planner_tpu,
           lambda r: f"{r['arch']}/{r['link']}_gain={r['gain_vs_uniform_pct']}%")
+    # fleet sweep: one summary row (scenarios/sec + scalar-vs-batched speedup);
+    # us_per_call reflects the BATCHED engine only (run() also times the
+    # ~100x-slower scalar baseline for the speedup figure)
+    sweep_report = sweep_grid.run(smoke=True)
+    sweep_us = sweep_report["batched_wall_s"] * 1e6 / max(1, sweep_report["n_scenarios"])
+    csv_lines.append(
+        f"sweep_grid[0],{sweep_us:.1f},"
+        f"speedup={sweep_report['speedup_x']}x"
+        f"_sps={sweep_report['scenarios_per_sec_batched']}"
+        f"_parity={sweep_report['parity_ok']}")
+    print(f"\n=== sweep_grid (smoke): {sweep_report['n_scenarios']} scenarios, "
+          f"{sweep_report['speedup_x']}x over scalar loop, "
+          f"parity={sweep_report['parity_ok']} ===")
     try:
         timed("roofline", roofline,
               lambda r: f"{r['arch']}/{r['shape']}_dom={r['dominant']}"

@@ -1,0 +1,156 @@
+"""Fleet-scale scenario sweep benchmark — the vectorized engine vs the
+scalar per-scenario loop.
+
+Sweeps a protocol × fleet-size × loss-rate × bandwidth (× model) grid
+with the batched DP (one array pass per (model, N) group) and with the
+scalar ``optimal_dp`` loop it replaces, verifies bit-identical best
+splits, and reports scenarios/sec + speedup.
+
+Usage:
+  PYTHONPATH=src python benchmarks/sweep_grid.py            # full grid (512 scenarios)
+  PYTHONPATH=src python benchmarks/sweep_grid.py --smoke    # CI smoke (256 scenarios)
+  ... [--backend jax] [--json BENCH_sweep.json] [--csv sweep.csv]
+
+The JSON artifact (``BENCH_sweep.json`` by default) is the
+machine-readable perf record future PRs compare against.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+from repro.core.profiles import ESP32, PROTOCOLS, mobilenet_cost_profile, resnet50_cost_profile
+from repro.core.sweep import ScenarioGrid, parity_report, sweep, sweep_scalar
+
+LOSS_P = (None, 0.01, 0.05, 0.10)
+RATE_SCALE = (1.0, 0.5, 0.25, 0.125)
+DEVICES = (2, 3, 4, 5)
+
+
+def build_grid(smoke: bool) -> ScenarioGrid:
+    models = {"mobilenet_v2": mobilenet_cost_profile()}
+    if not smoke:
+        models["resnet50"] = resnet50_cost_profile()
+    return ScenarioGrid(
+        models=models,
+        links=dict(PROTOCOLS),
+        n_devices=DEVICES,
+        loss_p=LOSS_P,
+        rate_scale=RATE_SCALE,
+        devices=(ESP32,),
+    )
+
+
+def run(smoke: bool = True, backend: str = "numpy") -> dict:
+    grid = build_grid(smoke)
+
+    t0 = time.perf_counter()
+    batched = sweep(grid, solver="batched_dp", backend=backend)
+    batched_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    scalar = sweep_scalar(grid, solver="optimal_dp")
+    scalar_wall = time.perf_counter() - t0
+
+    mismatches = parity_report(batched, scalar)
+    feasible = sum(r.feasible for r in batched.rows)
+    return {
+        "benchmark": "sweep_grid",
+        "mode": "smoke" if smoke else "full",
+        "backend": backend,
+        "n_scenarios": grid.size,
+        "n_feasible": feasible,
+        "grid": {
+            "models": sorted(grid.models), "protocols": sorted(grid.links),
+            "n_devices": list(grid.n_devices),
+            "loss_p": [p if p is not None else "base" for p in grid.loss_p],
+            "rate_scale": list(grid.rate_scale),
+        },
+        "batched_wall_s": round(batched_wall, 4),
+        "batched_solve_s": round(batched.solve_time_s, 4),
+        "batched_build_s": round(batched.build_time_s, 4),
+        "scalar_wall_s": round(scalar_wall, 4),
+        "speedup_x": round(scalar_wall / batched_wall, 1),
+        "scenarios_per_sec_batched": round(grid.size / batched_wall, 1),
+        "scenarios_per_sec_scalar": round(grid.size / scalar_wall, 1),
+        "parity_ok": not mismatches,
+        "parity_mismatches": mismatches[:10],
+        "best": {
+            name: {
+                "scenario": row.scenario.describe(),
+                "splits": list(row.splits),
+                "total_latency_s": round(row.total_latency_s, 4),
+            }
+            for name, row in (
+                (m, sweep_best(batched, m)) for m in sorted(grid.models)
+            )
+            if row is not None
+        },
+    }
+
+
+def sweep_best(result, model):
+    try:
+        return result.best(model=model)
+    except LookupError:
+        return None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (256 scenarios, one model)")
+    ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"))
+    ap.add_argument("--json", default="BENCH_sweep.json",
+                    help="path for the machine-readable result (empty to skip)")
+    ap.add_argument("--csv", default="",
+                    help="optionally dump the full per-scenario sweep table")
+    args = ap.parse_args()
+
+    print("\n=== sweep_grid: batched fleet sweep vs scalar per-scenario loop ===")
+    report = run(smoke=args.smoke, backend=args.backend)
+    print(f"scenarios: {report['n_scenarios']} "
+          f"({report['n_feasible']} feasible; mode={report['mode']}, "
+          f"backend={report['backend']})")
+    print(f"batched: {report['batched_wall_s']}s "
+          f"(solve {report['batched_solve_s']}s + build {report['batched_build_s']}s) "
+          f"-> {report['scenarios_per_sec_batched']} scenarios/s")
+    print(f"scalar loop: {report['scalar_wall_s']}s "
+          f"-> {report['scenarios_per_sec_scalar']} scenarios/s")
+    print(f"speedup: {report['speedup_x']}x  "
+          f"parity (bit-identical splits): {report['parity_ok']}")
+    for name, best in report["best"].items():
+        print(f"best[{name}]: {best['scenario']} splits={best['splits']} "
+              f"latency {best['total_latency_s']}s")
+    if not report["parity_ok"]:
+        for m in report["parity_mismatches"]:
+            print("  MISMATCH:", m)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+    if args.csv:
+        grid = build_grid(args.smoke)
+        with open(args.csv, "w") as f:
+            f.write(sweep(grid, backend=args.backend).to_csv())
+        print(f"wrote {args.csv}")
+
+    if args.backend == "numpy":
+        # the f64 NumPy backend is bit-identical to the scalar oracle;
+        # jax (f32 by default) may break exact-cost ties differently
+        assert report["parity_ok"], "batched sweep diverged from the scalar oracle"
+    elif not report["parity_ok"]:
+        print(f"note: backend={args.backend} differs from the scalar oracle on "
+              f"{len(report['parity_mismatches'])}+ scenarios (expected: float32 "
+              f"tie-breaking; use --backend numpy for bit-exact parity)")
+    if not math.isfinite(report["speedup_x"]) or report["speedup_x"] < 10:
+        print(f"WARNING: speedup {report['speedup_x']}x below the 10x target")
+
+
+if __name__ == "__main__":
+    main()

@@ -3,7 +3,10 @@
 Public API:
   latency    — Eq. 4-8 cost model (LinkProfile / DeviceProfile / SplitCostModel)
   solvers    — beam / greedy / first_fit / random_fit / brute_force / optimal_dp
-  planner    — plan_split (IoT), plan_pipeline (TPU PP), compare_solvers
+  planner    — plan_split (IoT), plan_pipeline (TPU PP), compare_solvers,
+               plan_split_batch (vectorized fleet planning)
+  sweep      — batched solvers over stacked C[k,a,b] cost tensors +
+               ScenarioGrid fleet sweeps (protocol x fleet x loss x rate)
   profiles   — paper-calibrated ESP32 + protocol tables; TPU v5e constants
   executor   — run_split / run_unsplit segment execution with wire simulation
   quantization — int8 PTQ + activation wire format
@@ -24,8 +27,25 @@ from repro.core.planner import (  # noqa: F401
     compare_solvers,
     plan_pipeline,
     plan_split,
+    plan_split_batch,
     tpu_cost_profile,
     uniform_split,
+)
+# NOTE: the sweep() entry point itself is deliberately NOT re-exported
+# here — `repro.core.sweep` must keep resolving to the submodule
+# (`from repro.core.sweep import sweep` for the function).
+from repro.core.sweep import (  # noqa: F401
+    BatchedSolverResult,
+    Scenario,
+    ScenarioGrid,
+    SweepResult,
+    SweepRow,
+    batched_beam_search,
+    batched_greedy_search,
+    batched_optimal_dp,
+    batched_total_cost,
+    stack_cost_tensors,
+    sweep_scalar,
 )
 from repro.core.solvers import (  # noqa: F401
     SOLVERS,

@@ -29,8 +29,11 @@ from __future__ import annotations
 from dataclasses import dataclass, field, replace
 from typing import Sequence
 
+import numpy as np
+
+from repro.core import sweep as SW
 from repro.core.latency import LinkProfile, SplitCostModel
-from repro.core.planner import SplitPlan, plan_split
+from repro.core.planner import SplitPlan, plan_split, plans_from_batched
 
 
 class LinkEstimator:
@@ -109,9 +112,13 @@ class AdaptiveSplitManager:
     history: list[PlanDecision] = field(default_factory=list)
 
     def __post_init__(self):
+        L = self.cost_model.profile.num_layers
+        if not 1 <= self.n_devices <= L:
+            raise ValueError(f"n_devices={self.n_devices} out of range for L={L}")
         self.estimators = {name: LinkEstimator(link)
                            for name, link in self.protocols.items()}
         self._step = 0
+        self._local_tensor = None  # built lazily; link-independent
         self.current: PlanDecision | None = None
         self._replan("initial")
 
@@ -134,12 +141,37 @@ class AdaptiveSplitManager:
     def _model_for(self, link: LinkProfile) -> SplitCostModel:
         return replace(self.cost_model, link=link)
 
+    def _batched_plans(self, links, solver: str) -> list[SplitPlan]:
+        """One batched solve across all protocols, reusing the
+        link-independent device-local tensor (built once per manager —
+        ``observe()`` is the hot loop, and only the transmission vector
+        changes as the estimators drift)."""
+        if self._local_tensor is None:
+            self._local_tensor = self.cost_model.local_cost_tensor(self.n_devices)
+        models = [self._model_for(lk) for lk in links]
+        TX = np.stack([m.transmission_cost_vector() for m in models])
+        C = self._local_tensor[None, :, :, :] + TX[:, None, None, :]
+        combine = "max" if self.cost_model.objective == "bottleneck" else "sum"
+        res = SW.solve_batched(C, solver=solver, combine=combine)
+        return plans_from_batched(models, res, self.n_devices)
+
     def _best_available(self):
+        """Re-plan every protocol in ONE batched tensor pass (the sweep
+        engine), then tune each winner's activation chunk size. The
+        per-protocol scalar re-solve this replaces was the hot loop of
+        ``observe()`` — fleet controllers call it on every measurement."""
         best = (None, None, 0, float("inf"))
-        for name, est in self.estimators.items():
-            link = est.current_profile()
-            plan = plan_split(self._model_for(link), self.n_devices,
-                              solver=self.solver)
+        names = list(self.estimators.keys())
+        links = [self.estimators[n].current_profile() for n in names]
+        solver = ("batched_beam" if self.solver == "beam"
+                  else "batched_dp" if self.solver == "optimal_dp"
+                  else self.solver)
+        if solver in ("batched_beam", "batched_dp", "batched_greedy"):
+            plans = self._batched_plans(links, solver)
+        else:  # fall back to the scalar oracle path
+            plans = [plan_split(self._model_for(lk), self.n_devices,
+                                solver=self.solver) for lk in links]
+        for name, link, plan in zip(names, links, plans):
             if not plan.splits and self.n_devices > 1:
                 continue
             cuts = [seg.tx_bytes for seg in plan.segments[:-1]]

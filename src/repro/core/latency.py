@@ -22,7 +22,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
+from functools import cached_property
 from typing import Callable, Sequence
+
+import numpy as np
 
 INF = float("inf")
 
@@ -177,6 +180,57 @@ class ModelCostProfile:
             return 0
         return self.layers[b - 1].act_bytes
 
+    # -- dense per-segment arrays (vectorized planning / sweep engine) ------
+    @cached_property
+    def segment_arrays(self) -> "SegmentArrays":
+        """Dense segment-cost arrays; entry ``[a-1, b-1]`` covers layers
+        ``[a, b]`` (1-indexed inclusive), lower triangle (a > b) is 0/unused.
+
+        Bit-exactness contract: row-wise ``np.cumsum`` accumulates
+        left-to-right exactly like the Python ``sum`` in
+        :meth:`segment_infer_s`, so every upper-triangle entry equals the
+        scalar query bit-for-bit. This is what lets the batched solvers in
+        :mod:`repro.core.sweep` certify against the scalar oracle."""
+        L = self.num_layers
+        t_infer = np.array([lc.t_infer_s for lc in self.layers], dtype=np.float64)
+        p_bytes = np.array([lc.param_bytes for lc in self.layers], dtype=np.int64)
+        w_bytes = np.array([lc.work_bytes for lc in self.layers], dtype=np.int64)
+        flops = np.array([lc.flops for lc in self.layers], dtype=np.float64)
+
+        infer = np.zeros((L, L), dtype=np.float64)
+        param = np.zeros((L, L), dtype=np.int64)
+        work = np.zeros((L, L), dtype=np.int64)
+        fl = np.zeros((L, L), dtype=np.float64)
+        for a in range(L):
+            infer[a, a:] = np.cumsum(t_infer[a:])
+            param[a, a:] = np.cumsum(p_bytes[a:])
+            work[a, a:] = np.maximum.accumulate(w_bytes[a:])
+            fl[a, a:] = np.cumsum(flops[a:])
+
+        boundary = np.zeros(L + 1, dtype=np.int64)
+        boundary[0] = self.input_bytes
+        if L > 1:
+            boundary[1:L] = np.array(
+                [lc.act_bytes for lc in self.layers[: L - 1]], dtype=np.int64
+            )
+        return SegmentArrays(
+            infer_s=infer, param_bytes=param, work_bytes=work, flops=fl,
+            boundary_act_bytes=boundary,
+        )
+
+
+@dataclass(frozen=True)
+class SegmentArrays:
+    """Dense 0-indexed segment arrays exported by
+    :attr:`ModelCostProfile.segment_arrays` (see its docstring for the
+    indexing and bit-exactness contract)."""
+
+    infer_s: np.ndarray  # (L, L) float64, [a-1, b-1] = sum of t_infer over [a, b]
+    param_bytes: np.ndarray  # (L, L) int64
+    work_bytes: np.ndarray  # (L, L) int64 (max over the segment)
+    flops: np.ndarray  # (L, L) float64
+    boundary_act_bytes: np.ndarray  # (L+1,) int64; [b] = bytes crossing the cut after layer b
+
 
 # ---------------------------------------------------------------------------
 # Segment and end-to-end cost (Eq. 8 and CostSegment of Alg. 1-3)
@@ -272,6 +326,67 @@ class SplitCostModel:
     def cost_segment_fn(self) -> Callable[[int, int, int], float]:
         """The ``CostSegment`` callable consumed by the solvers."""
         return self.segment_cost_s
+
+    # -- dense tensor export (the sweep-engine fast path) --------------------
+    def _local_cost_matrix(self, dev: DeviceProfile, is_first: bool) -> np.ndarray:
+        """(L, L) float64 of device-local latency for every segment [a, b]
+        on ``dev``; +inf where the segment is invalid (a > b) or does not
+        fit memory. Mirrors :meth:`DeviceProfile.local_latency_s` operation
+        by operation so entries are bit-identical to the scalar path."""
+        seg = self.profile.segment_arrays
+        L = self.profile.num_layers
+        act = seg.boundary_act_bytes[1:]  # [b-1] = bytes leaving layer b (0 at b=L)
+        t = dev.t_model_load_s + seg.param_bytes * dev.model_load_s_per_byte
+        t = t + (dev.t_tensor_alloc_s + seg.work_bytes * dev.tensor_alloc_s_per_byte)
+        t = t + seg.infer_s * dev.compute_scale
+        t = t + (dev.t_buffer_s + act[None, :] * dev.buffer_s_per_byte)
+        if is_first:
+            t = t + dev.t_input_load_s
+        invalid = np.tril(np.ones((L, L), dtype=bool), k=-1)  # a > b
+        if dev.mem_limit_bytes is not None:
+            invalid |= (seg.param_bytes + seg.work_bytes) > dev.mem_limit_bytes
+        return np.where(invalid, INF, t)
+
+    def transmission_cost_vector(self) -> np.ndarray:
+        """(L,) float64; ``[b-1]`` = link cost charged when cutting after
+        layer ``b`` (0 at b = L). Identical arithmetic to
+        :meth:`LinkProfile.transmission_latency_s` (+ setup when
+        ``include_setup``)."""
+        seg = self.profile.segment_arrays
+        act = seg.boundary_act_bytes[1:].astype(np.float64)
+        packets = np.where(act > 0, np.ceil(act / self.link.mtu_bytes), 0.0)
+        tx = packets * self.link.packet_time_s()
+        if self.include_setup:
+            tx = tx + self.link.t_setup_s  # charged on every cut (b < L)
+        tx[-1] = 0.0  # no transmission after the final layer
+        return tx
+
+    def local_cost_tensor(self, n_devices: int) -> np.ndarray:
+        """(N, L, L) float64 of device-local segment costs, ``[k-1, a-1,
+        b-1]`` = local part of ``segment_cost_s(a, b, k)``."""
+        L = self.profile.num_layers
+        out = np.empty((n_devices, L, L), dtype=np.float64)
+        out[0] = self._local_cost_matrix(self.device(1), is_first=True)
+        generic: np.ndarray | None = None
+        for k in range(2, n_devices + 1):
+            if len(self.devices) == 1:
+                if generic is None:
+                    generic = self._local_cost_matrix(self.devices[0], is_first=False)
+                out[k - 1] = generic
+            else:
+                out[k - 1] = self._local_cost_matrix(self.device(k), is_first=False)
+        return out
+
+    def segment_cost_tensor(self, n_devices: int) -> np.ndarray:
+        """Dense ``C[k-1, a-1, b-1] == segment_cost_s(a, b, k)`` tensor of
+        shape (N, L, L), float64, +inf at invalid/infeasible segments.
+
+        Entries are bit-identical to the scalar per-call path — the
+        batched solvers in :mod:`repro.core.sweep` consume these tensors
+        and certify their results against the scalar oracle."""
+        local = self.local_cost_tensor(n_devices)
+        tx = self.transmission_cost_vector()
+        return local + tx[None, None, :]
 
 
 # ---------------------------------------------------------------------------

@@ -18,7 +18,10 @@ import dataclasses
 from dataclasses import dataclass
 from typing import TYPE_CHECKING, Sequence
 
+import numpy as np
+
 from repro.core import solvers as S
+from repro.core import sweep as SW  # no cycle: sweep depends only on latency/solvers
 from repro.core.latency import (
     DeviceProfile,
     LinkProfile,
@@ -101,10 +104,21 @@ def plan_split(
     solver: str = "beam",
     **solver_kwargs,
 ) -> SplitPlan:
-    """Solve Eq. 9 for the given cost model and device count."""
+    """Solve Eq. 9 for the given cost model and device count.
+
+    ``solver`` accepts the scalar algorithms in
+    :data:`repro.core.solvers.SOLVERS` plus the vectorized engines
+    (``"batched_dp"``, ``"batched_beam"``, ``"batched_greedy"``) which
+    run on the dense cost tensor in one array pass instead of a Python
+    segment loop. ``batched_dp``/``batched_greedy`` are bit-identical
+    to their scalar oracles; ``batched_beam`` is bit-identical except
+    on exact floating-point cost ties (see its docstring)."""
     L = cost_model.profile.num_layers
     if not 1 <= n_devices <= L:
         raise ValueError(f"n_devices={n_devices} out of range for L={L}")
+    if solver in SW.BATCHED_SOLVERS:
+        return plan_split_batch([cost_model], n_devices, solver=solver,
+                                **solver_kwargs)[0]
     fn = S.SOLVERS[solver]
     result = fn(
         cost_model.cost_segment_fn(),
@@ -114,6 +128,58 @@ def plan_split(
         **solver_kwargs,
     )
     return _build_plan(cost_model, result, n_devices)
+
+
+def plan_split_batch(
+    cost_models: Sequence[SplitCostModel],
+    n_devices: int,
+    solver: str = "batched_dp",
+    backend: str = "numpy",
+    **solver_kwargs,
+) -> list[SplitPlan]:
+    """Plan many scenarios in one batched pass over stacked cost tensors.
+
+    All ``cost_models`` must share a layer count (same model graph;
+    links/devices/objectives may differ per scenario — the fleet
+    what-if case). Returns one :class:`SplitPlan` per input, in order.
+    The amortization is the point: S scenarios cost one tensor solve
+    instead of S Python-loop DP runs (see ``benchmarks/sweep_grid.py``)."""
+    if not cost_models:
+        return []
+    L = cost_models[0].profile.num_layers
+    if not 1 <= n_devices <= L:  # same contract as plan_split
+        raise ValueError(f"n_devices={n_devices} out of range for L={L}")
+    objectives = {m.objective for m in cost_models}
+    if len(objectives) != 1:
+        raise ValueError(f"cost_models mix objectives {sorted(objectives)}")
+    combine = "max" if cost_models[0].objective == "bottleneck" else "sum"
+    C = SW.stack_cost_tensors(cost_models, n_devices)
+    res = SW.solve_batched(C, solver=solver, combine=combine, backend=backend,
+                           **solver_kwargs)
+    return plans_from_batched(cost_models, res, n_devices,
+                              nodes_expanded=int(np.prod(C.shape[1:])))
+
+
+def plans_from_batched(
+    cost_models: Sequence[SplitCostModel],
+    res,  # sweep.BatchedSolverResult
+    n_devices: int,
+    nodes_expanded: int = 0,
+) -> list[SplitPlan]:
+    """Materialize per-scenario :class:`SplitPlan`\\ s from one batched
+    solver result (shared by the planner and the adaptive manager)."""
+    wall = res.wall_time_s / max(1, len(cost_models))
+    plans = []
+    for i, m in enumerate(cost_models):
+        sr = S.SolverResult(
+            solver=res.solver,
+            splits=res.splits_tuple(i),
+            cost_s=float(res.cost_s[i]),
+            wall_time_s=wall,
+            nodes_expanded=nodes_expanded,
+        )
+        plans.append(_build_plan(m, sr, n_devices))
+    return plans
 
 
 def compare_solvers(

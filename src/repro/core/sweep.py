@@ -1,0 +1,836 @@
+"""Vectorized fleet-scale scenario sweeps over stacked cost tensors.
+
+The scalar planner answers one question at a time: *given* a model, a
+protocol, a fleet size, and a link state, where do we cut? Fleet
+operation asks thousands of these questions continuously — every
+protocol × loss-rate × bandwidth × fleet-size combination is a what-if
+the controller must price before committing (COMSPLIT-style
+communication-aware re-planning). This module amortizes them:
+
+* :func:`batched_optimal_dp` — the exact O(L² N) split DP, run over a
+  stacked scenario axis in one array pass (NumPy float64, bit-identical
+  to :func:`repro.core.solvers.optimal_dp`; optional JAX
+  ``vmap``/``lax.scan`` backend for accelerators).
+* :func:`batched_beam_search` / :func:`batched_greedy_search` — the
+  paper's Algorithm 1/2 heuristics vectorized over scenarios,
+  semantics-faithful to the scalar implementations (same pruning,
+  dominance, and windows; greedy is bit-identical always, beam is
+  bit-identical except under exact floating-point cost ties, where
+  truncation may keep a different equally-ranked candidate).
+* :func:`batched_total_cost` — score candidate split *sets* across every
+  scenario at once (plan-portfolio evaluation / warm starts).
+* :class:`ScenarioGrid` / :func:`sweep` — the fleet API: declare a grid
+  of (model × link × fleet size × loss × rate) scenarios, get back a
+  :class:`SweepResult` table of per-scenario best splits, cost
+  breakdowns, and solver wall time.
+
+Conventions
+-----------
+A stacked cost tensor ``C`` has shape ``(S, N, L, L)`` with
+``C[s, k-1, a-1, b-1] = CostSegment(a, b, k)`` for scenario ``s``
+(+inf marks invalid or memory-infeasible segments) — exactly what
+:meth:`repro.core.latency.SplitCostModel.segment_cost_tensor` exports.
+Split points are 1-indexed layer boundaries, matching the scalar
+solvers.
+
+The scalar solvers remain the oracle: every batched solver here is
+property-tested to return bit-identical best splits (see
+``tests/test_sweep.py``).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, replace
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.core.latency import (
+    DeviceProfile,
+    LinkProfile,
+    ModelCostProfile,
+    SplitCostModel,
+)
+from repro.core import solvers as S
+
+INF = float("inf")
+
+__all__ = [
+    "BatchedSolverResult",
+    "Scenario",
+    "ScenarioGrid",
+    "SweepResult",
+    "SweepRow",
+    "batched_beam_search",
+    "batched_greedy_search",
+    "batched_optimal_dp",
+    "batched_total_cost",
+    "stack_cost_tensors",
+    "sweep",
+    "sweep_scalar",
+]
+
+
+# ---------------------------------------------------------------------------
+# Tensor utilities
+# ---------------------------------------------------------------------------
+
+
+def stack_cost_tensors(models: Sequence[SplitCostModel], n_devices: int) -> np.ndarray:
+    """Stack per-scenario cost tensors into ``(S, N, L, L)``.
+
+    All models must share the same layer count ``L`` (same model graph;
+    links/devices may differ) — that is what makes the scenario axis
+    dense."""
+    tensors = [m.segment_cost_tensor(n_devices) for m in models]
+    Ls = {t.shape[-1] for t in tensors}
+    if len(Ls) != 1:
+        raise ValueError(f"scenario tensors disagree on L: {sorted(Ls)}")
+    return np.stack(tensors, axis=0)
+
+
+def _combine_ufunc(combine: str):
+    if combine == "sum":
+        return np.add
+    if combine == "max":
+        return np.maximum
+    raise ValueError(f"unknown combine {combine!r}")
+
+
+def batched_total_cost(
+    C: np.ndarray, splits: np.ndarray, combine: str = "sum"
+) -> np.ndarray:
+    """Score candidate split sets across every scenario at once.
+
+    ``C``: (S, N, L, L) stacked cost tensor; ``splits``: (M, N-1) int
+    array of candidate configurations (1-indexed boundaries). Returns
+    (S, M) combined costs, +inf for invalid/infeasible candidates —
+    the batched counterpart of :func:`repro.core.solvers.total_cost`."""
+    Sn, N, L, _ = C.shape
+    splits = np.asarray(splits, dtype=np.int64)
+    if splits.ndim == 1:
+        splits = splits[None, :]
+    M = splits.shape[0]
+    if splits.shape[1] != N - 1:
+        raise ValueError(f"splits must have N-1={N - 1} columns, got {splits.shape}")
+    bounds = np.concatenate(
+        [np.zeros((M, 1), np.int64), splits, np.full((M, 1), L, np.int64)], axis=1
+    )  # (M, N+1)
+    valid = np.all(bounds[:, 1:] > bounds[:, :-1], axis=1)  # strictly increasing
+    safe = np.clip(bounds, 0, L)
+    k_idx = np.arange(N)[None, :]  # (1, N)
+    a_idx = np.clip(safe[:, :-1], 0, L - 1)  # segment start boundary (a-1 index)
+    b_idx = np.clip(safe[:, 1:] - 1, 0, L - 1)
+    seg = C[:, k_idx, a_idx, b_idx]  # (S, M, N)
+    if combine == "sum":
+        total = np.cumsum(seg, axis=2)[:, :, -1]  # sequential, matches scalar sum
+    else:
+        total = np.max(seg, axis=2)
+    total = np.where(valid[None, :], total, INF)
+    return total
+
+
+def _per_scenario_total_cost(
+    C: np.ndarray, splits: np.ndarray, combine: str = "sum"
+) -> np.ndarray:
+    """Combined cost of scenario ``s``'s OWN configuration ``splits[s]``
+    (shape (S, N-1) -> (S,)); +inf for non-increasing bounds."""
+    Sn, N, L, _ = C.shape
+    bounds = np.concatenate(
+        [np.zeros((Sn, 1), np.int64), np.asarray(splits, np.int64),
+         np.full((Sn, 1), L, np.int64)], axis=1,
+    )
+    valid = np.all(bounds[:, 1:] > bounds[:, :-1], axis=1)
+    a_idx = np.clip(bounds[:, :-1], 0, L - 1)
+    b_idx = np.clip(bounds[:, 1:] - 1, 0, L - 1)
+    seg = C[np.arange(Sn)[:, None], np.arange(N)[None, :], a_idx, b_idx]  # (S, N)
+    total = np.cumsum(seg, axis=1)[:, -1] if combine == "sum" else seg.max(axis=1)
+    return np.where(valid, total, INF)
+
+
+# ---------------------------------------------------------------------------
+# Batched exact DP
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BatchedSolverResult:
+    """Result of one batched solve over ``S`` stacked scenarios."""
+
+    solver: str
+    backend: str
+    n_devices: int
+    splits: np.ndarray  # (S, N-1) int64, -1 where infeasible
+    cost_s: np.ndarray  # (S,) float64 combined objective cost
+    feasible: np.ndarray  # (S,) bool
+    wall_time_s: float  # one batched pass for ALL scenarios
+
+    @property
+    def n_scenarios(self) -> int:
+        return int(self.cost_s.shape[0])
+
+    def splits_tuple(self, s: int) -> tuple[int, ...]:
+        """Scenario ``s``'s splits in scalar-solver form.
+
+        () when the solver produced no configuration; like the scalar
+        greedy, a full configuration whose total is +inf keeps its split
+        points (``feasible[s]`` is the authoritative flag)."""
+        if self.splits.shape[1] and (self.splits[s] < 0).any():
+            return ()
+        return tuple(int(x) for x in self.splits[s])
+
+
+def _reconstruct_splits(
+    parents: np.ndarray, cost: np.ndarray, L: int, n_devices: int
+) -> tuple[np.ndarray, np.ndarray]:
+    """Walk DP parent pointers back from boundary L (batched)."""
+    Sn = cost.shape[0]
+    feas = np.isfinite(cost)
+    splits = np.full((Sn, max(n_devices - 1, 0)), -1, dtype=np.int64)
+    b = np.full(Sn, L, dtype=np.int64)
+    rows = np.arange(Sn)
+    for k in range(n_devices, 1, -1):
+        a = parents[rows, k - 2, np.clip(b - 1, 0, L - 1)]
+        a = np.where(feas, a, -1)
+        splits[:, k - 2] = a
+        b = np.clip(np.where(feas, a, 1), 1, L)
+    return splits, feas
+
+
+def _dp_numpy(C: np.ndarray, combine: str):
+    """(dp_per_k, parents): dp_per_k[k-1] is the (S, L) DP table after k
+    devices; parents[s, k-2, b-1] the argmin boundary. Bit-identical
+    arithmetic and tie-breaking (first minimum) to the scalar DP."""
+    Sn, N, L, _ = C.shape
+    comb = _combine_ufunc(combine)
+    dp = C[:, 0, 0, :].copy()  # k=1: layers [1..b] on device 1
+    dp_per_k = [dp]
+    parents = np.full((Sn, max(N - 1, 0), L), -1, dtype=np.int64)
+    for k in range(2, N + 1):
+        # cand[s, a-1, b-1] = comb(dp[s, a], C[s, k, a+1, b]) for a=1..L-1
+        cand = comb(dp[:, : L - 1, None], C[:, k - 1, 1:L, :])
+        ndp = cand.min(axis=1)
+        arg = cand.argmin(axis=1) + 1  # boundary a, 1-indexed
+        parents[:, k - 2, :] = np.where(np.isfinite(ndp), arg, -1)
+        dp = ndp
+        dp_per_k.append(dp)
+    return dp_per_k, parents
+
+
+def _dp_jax(C: np.ndarray, combine: str):
+    """JAX backend: ``vmap`` over the scenario axis, ``lax.scan`` over
+    devices. Float precision follows the active JAX config (float32 by
+    default) — use the NumPy backend when bit-exact parity with the
+    scalar float64 oracle is required."""
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    Sn, N, L, _ = C.shape
+
+    def one(Cs):  # (N, L, L) for one scenario
+        dp0 = Cs[0, 0, :]
+
+        def step(dp, Ck):
+            if combine == "sum":
+                cand = dp[: L - 1, None] + Ck[1:L, :]
+            else:
+                cand = jnp.maximum(dp[: L - 1, None], Ck[1:L, :])
+            ndp = jnp.min(cand, axis=0)
+            arg = jnp.where(jnp.isfinite(ndp), jnp.argmin(cand, axis=0) + 1, -1)
+            return ndp, (ndp, arg)
+
+        _, (dps, args) = lax.scan(step, dp0, Cs[1:N])
+        return dp0, dps, args
+
+    dp0, dps, args = jax.jit(jax.vmap(one))(jnp.asarray(C))
+    dp0 = np.asarray(dp0, dtype=np.float64)
+    dp_per_k = [dp0] + [np.asarray(dps[:, i], dtype=np.float64) for i in range(N - 1)]
+    parents = np.asarray(args, dtype=np.int64)  # (S, N-1, L) from the vmapped scan
+    if N == 1:
+        parents = np.full((Sn, 0, L), -1, dtype=np.int64)
+    return dp_per_k, parents
+
+
+def batched_optimal_dp(
+    C: np.ndarray,
+    combine: str = "sum",
+    backend: str = "numpy",
+    return_all_k: bool = False,
+):
+    """Exact split DP over a stacked cost tensor — one pass, every scenario.
+
+    ``C``: (S, N, L, L). Returns a :class:`BatchedSolverResult` for
+    ``N`` devices, or (when ``return_all_k``) a dict ``{n: result}`` for
+    every fleet size ``n = 1..N`` — the DP table at device ``k`` already
+    answers the ``k``-device question, so a whole fleet-size axis costs
+    one solve.
+
+    ``backend="numpy"`` is bit-identical to the scalar
+    :func:`repro.core.solvers.optimal_dp` (same float64 operation order,
+    same first-minimum tie-breaking). ``backend="jax"`` runs the same
+    recurrence as a ``vmap``-ed ``lax.scan`` for accelerator execution."""
+    if C.ndim != 4:
+        raise ValueError(f"C must be (S, N, L, L), got shape {C.shape}")
+    Sn, N, L, L2 = C.shape
+    if L != L2:
+        raise ValueError(f"C must be square in (a, b), got {C.shape}")
+    t0 = time.perf_counter()
+    if backend == "numpy":
+        dp_per_k, parents = _dp_numpy(C, combine)
+    elif backend == "jax":
+        dp_per_k, parents = _dp_jax(C, combine)
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+    wall = time.perf_counter() - t0
+
+    def result_for(n: int) -> BatchedSolverResult:
+        cost = dp_per_k[n - 1][:, L - 1].astype(np.float64, copy=True)
+        splits, feas = _reconstruct_splits(parents, cost, L, n)
+        return BatchedSolverResult(
+            solver="batched_dp", backend=backend, n_devices=n,
+            splits=splits, cost_s=cost, feasible=feas, wall_time_s=wall,
+        )
+
+    if return_all_k:
+        return {n: result_for(n) for n in range(1, N + 1)}
+    return result_for(N)
+
+
+# ---------------------------------------------------------------------------
+# Feasibility lookahead (vectorized _min_devices_suffix)
+# ---------------------------------------------------------------------------
+
+
+def _min_devices_suffix_batched(C: np.ndarray) -> np.ndarray:
+    """need[s, j] = minimum devices that can host layers [j..L] feasibly
+    (+inf if none) — the vectorized twin of
+    :func:`repro.core.solvers._min_devices_suffix` (probe device k=2,
+    falling back to k=1 when only one device slice exists)."""
+    Sn, N, L, _ = C.shape
+    probe = min(1, N - 1)  # k=2 slice when available
+    feas = np.isfinite(C[:, probe])  # (S, L, L): [j-1, b-1]
+    need = np.full((Sn, L + 2), INF)
+    need[:, L + 1] = 0.0
+    rows = np.arange(Sn)
+    for j in range(L, 0, -1):
+        row = feas[:, j - 1, :]  # (S, L), feasibility of [j..b]
+        any_feas = row.any(axis=1)
+        b_max = L - 1 - np.argmax(row[:, ::-1], axis=1)  # 0-indexed; junk if none
+        greedy_next = need[rows, np.clip(b_max + 2, 0, L + 1)]
+        greedy_ok = any_feas & np.isfinite(greedy_next)
+        # fallback: scan all feasible extents b in [j, L]
+        nxt = need[:, j + 1 : L + 2]  # (S, L-j+1), need[b+1] for b=j..L
+        ext = np.where(row[:, j - 1 :] & np.isfinite(nxt), 1.0 + nxt, INF)
+        fb = ext.min(axis=1)
+        need[:, j] = np.where(greedy_ok, 1.0 + greedy_next, fb)
+    return need
+
+
+# ---------------------------------------------------------------------------
+# Batched Algorithm 2 — Greedy
+# ---------------------------------------------------------------------------
+
+
+def batched_greedy_search(
+    C: np.ndarray,
+    combine: str = "sum",
+    feasibility_lookahead: bool = True,
+) -> BatchedSolverResult:
+    """Algorithm 2 vectorized over the scenario axis; semantics-faithful
+    to :func:`repro.core.solvers.greedy_search` (same window, lookahead
+    pruning, and lowest-index tie-breaking)."""
+    Sn, N, L, _ = C.shape
+    t0 = time.perf_counter()
+    need = _min_devices_suffix_batched(C) if feasibility_lookahead else None
+    rows = np.arange(Sn)
+    pos = np.zeros(Sn, dtype=np.int64)  # last chosen boundary (0 = start)
+    alive = np.ones(Sn, dtype=bool)
+    splits = np.full((Sn, max(N - 1, 0)), -1, dtype=np.int64)
+    j_idx = np.arange(L)[None, :]
+    for k in range(1, N):
+        row = C[rows, k - 1, np.clip(pos, 0, L - 1), :]  # (S, L): nxt = j+1
+        mask = j_idx > (L - 1 - (N - k))  # nxt > L-(N-k)
+        if need is not None:
+            mask = mask | (need[:, 2:] > N - k)  # need[nxt+1] vs devices left
+        row = np.where(mask, INF, row)
+        best = row.min(axis=1)
+        nxt = row.argmin(axis=1) + 1  # first minimum = lowest nxt, like scalar
+        alive = alive & np.isfinite(best)
+        splits[:, k - 1] = np.where(alive, nxt, -1)
+        pos = np.where(alive, nxt, pos)
+    cost = np.where(alive, _per_scenario_total_cost(C, np.maximum(splits, 1), combine), INF)
+    feas = np.isfinite(cost)
+    return BatchedSolverResult(
+        solver="batched_greedy", backend="numpy", n_devices=N,
+        splits=splits, cost_s=cost, feasible=feas,
+        wall_time_s=time.perf_counter() - t0,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batched Algorithm 1 — Beam Search
+# ---------------------------------------------------------------------------
+
+
+def batched_beam_search(
+    C: np.ndarray,
+    beam_width: int = 8,
+    combine: str = "sum",
+    feasibility_lookahead: bool = True,
+) -> BatchedSolverResult:
+    """Algorithm 1 vectorized over the scenario axis.
+
+    Faithful to :func:`repro.core.solvers.beam_search`: the same
+    admissible completion bound ranks candidates before truncation, the
+    same per-position dominance collapses ties (first-seen beam order
+    wins), and the suffix-packability lookahead prunes dead ends. On
+    instances without exact floating-point cost ties it returns
+    bit-identical splits to the scalar solver; under exact ties the
+    truncation order differs (landing-position vs generation order) and
+    either beam may keep the luckier candidate — only ``batched_dp``
+    carries an unconditional bit-parity guarantee."""
+    Sn, N, L, _ = C.shape
+    t0 = time.perf_counter()
+    comb = _combine_ufunc(combine)
+    need = _min_devices_suffix_batched(C) if feasibility_lookahead else None
+    W = beam_width
+    rows = np.arange(Sn)
+
+    # beam state: slot arrays ordered by the scalar solver's ranking
+    cost = np.full((Sn, 1), 0.0)
+    pos = np.zeros((Sn, 1), dtype=np.int64)
+    hist = np.full((Sn, 1, N), -1, dtype=np.int64)  # chosen boundaries per slot
+
+    for k in range(1, N + 1):
+        w_cur = cost.shape[1]
+        # extension costs E[s, w, j]: segment (pos+1 .. j+1) on device k
+        Ck = C[:, k - 1]  # (S, L, L)
+        seg = np.take_along_axis(Ck, np.clip(pos, 0, L - 1)[:, :, None], axis=1)
+        E = comb(cost[:, :, None], seg)  # (S, w, L)
+        E = np.where(np.isfinite(cost)[:, :, None], E, INF)
+        j_idx = np.arange(L)[None, None, :]
+        if k == N:
+            E = np.where(j_idx == L - 1, E, INF)  # s_N = L pinned
+        else:
+            E = np.where(j_idx > L - 1 - (N - k), INF, E)
+            if need is not None:
+                E = np.where(need[:, None, 2:] > N - k, INF, E)
+        # dominance: best slot per landing position (ties -> lowest slot,
+        # i.e. scalar generation order)
+        D = E.min(axis=1)  # (S, L)
+        back = E.argmin(axis=1)  # (S, L)
+        # ranking: admissible completion bound (scalar's truncation key)
+        if k < N:
+            # scalar's completion_bound(nxt, k): the whole suffix [nxt+1..L]
+            # as ONE segment on device min(k+1, N) lower-bounds any further
+            # segmentation (superadditive costs); INF -> 0 (feasibility is
+            # the lookahead's job). Candidate j lands at boundary nxt=j+1,
+            # so its suffix starts at layer j+2 -> start index j+1.
+            whole = C[:, min(k, N - 1), :, L - 1]  # (S, L) indexed by start-1
+            bound = np.where(np.isfinite(whole), whole, 0.0)
+            bshift = np.concatenate([bound[:, 1:], np.zeros((Sn, 1))], axis=1)
+            bshift[:, L - 1] = 0.0  # nxt = L: empty suffix
+            if combine == "max":
+                key = np.maximum(D, bshift / (N - k))
+            else:
+                key = D + bshift
+            key = np.where(np.isfinite(D), key, INF)
+        else:
+            key = D
+        order = np.argsort(key, axis=1, kind="stable")[:, :W]  # (S, <=W)
+        new_cost = np.take_along_axis(D, order, axis=1)
+        new_pos = order + 1  # boundary after layer j+1 (1-indexed)
+        slot = np.take_along_axis(back, order, axis=1)  # predecessor slot
+        new_hist = hist[rows[:, None], slot]  # (S, W', N)
+        new_hist = new_hist.copy()
+        new_hist[:, :, k - 1] = np.where(np.isfinite(new_cost), new_pos, -1)
+        dead = ~np.isfinite(new_cost)
+        cost = np.where(dead, INF, new_cost)
+        pos = np.where(dead, 0, new_pos)
+        hist = new_hist
+
+    best_cost = cost[:, 0]
+    feas = np.isfinite(best_cost)
+    splits = np.where(feas[:, None], hist[:, 0, : N - 1], -1)
+    return BatchedSolverResult(
+        solver="batched_beam", backend="numpy", n_devices=N,
+        splits=splits, cost_s=np.where(feas, best_cost, INF),
+        feasible=feas, wall_time_s=time.perf_counter() - t0,
+    )
+
+
+BATCHED_SOLVERS: dict[str, Callable[..., BatchedSolverResult]] = {
+    "batched_dp": batched_optimal_dp,
+    "batched_beam": batched_beam_search,
+    "batched_greedy": batched_greedy_search,
+}
+
+
+def solve_batched(
+    C: np.ndarray,
+    solver: str = "batched_dp",
+    combine: str = "sum",
+    backend: str = "numpy",
+    **solver_kwargs,
+) -> BatchedSolverResult:
+    """The single dispatch point for batched solves over a stacked tensor
+    (used by :func:`sweep`, ``planner.plan_split_batch``, and the
+    adaptive manager — one place to extend when adding a solver)."""
+    if solver == "batched_dp":
+        return batched_optimal_dp(C, combine=combine, backend=backend,
+                                  **solver_kwargs)
+    if solver in ("batched_beam", "batched_greedy"):
+        if backend != "numpy":
+            raise ValueError(f"{solver} supports backend='numpy' only")
+        fn = batched_beam_search if solver == "batched_beam" else batched_greedy_search
+        return fn(C, combine=combine, **solver_kwargs)
+    raise ValueError(f"unknown batched solver {solver!r}; "
+                     f"options: {sorted(BATCHED_SOLVERS)}")
+
+# batched solver name -> the scalar oracle it must match bit-for-bit
+SCALAR_ORACLES: dict[str, str] = {
+    "batched_dp": "optimal_dp",
+    "batched_beam": "beam",
+    "batched_greedy": "greedy",
+}
+
+
+# ---------------------------------------------------------------------------
+# ScenarioGrid — the fleet-sweep API
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One point of a :class:`ScenarioGrid` (a what-if the planner prices)."""
+
+    model: str
+    protocol: str
+    n_devices: int
+    loss_p: float | None  # None -> protocol default
+    rate_scale: float  # multiplier on the link serialization rate
+
+    def describe(self) -> str:
+        loss = "base" if self.loss_p is None else f"p={self.loss_p:g}"
+        return (f"{self.model}/{self.protocol} N={self.n_devices} "
+                f"{loss} rate×{self.rate_scale:g}")
+
+
+@dataclass(frozen=True)
+class ScenarioGrid:
+    """A dense grid of split-planning scenarios:
+    models × links × fleet sizes × loss rates × rate scales.
+
+    ``models`` maps names to :class:`ModelCostProfile`; ``links`` maps
+    protocol names to :class:`LinkProfile`. ``devices`` is the device
+    profile tuple shared by all scenarios (a single profile broadcasts
+    over any fleet size, as in the paper's homogeneous ESP32 fleet)."""
+
+    models: Mapping[str, ModelCostProfile]
+    links: Mapping[str, LinkProfile]
+    n_devices: tuple[int, ...]
+    loss_p: tuple[float | None, ...] = (None,)
+    rate_scale: tuple[float, ...] = (1.0,)
+    devices: tuple[DeviceProfile, ...] = ()
+    objective: str = "sum"
+
+    def __post_init__(self):
+        if not self.devices:
+            raise ValueError("ScenarioGrid requires at least one DeviceProfile")
+        for field_name in ("n_devices", "loss_p", "rate_scale"):
+            object.__setattr__(self, field_name, tuple(getattr(self, field_name)))
+        object.__setattr__(self, "models", dict(self.models))
+        object.__setattr__(self, "links", dict(self.links))
+
+    @property
+    def size(self) -> int:
+        return (len(self.models) * len(self.links) * len(self.n_devices)
+                * len(self.loss_p) * len(self.rate_scale))
+
+    def scenarios(self) -> list[Scenario]:
+        """Deterministic enumeration order: model-major, then fleet size,
+        then protocol × loss × rate (the link axes batch densely)."""
+        return [
+            Scenario(m, p, n, lp, rs)
+            for m in self.models
+            for n in self.n_devices
+            for p in self.links
+            for lp in self.loss_p
+            for rs in self.rate_scale
+        ]
+
+    def link_variant(self, sc: Scenario) -> LinkProfile:
+        link = self.links[sc.protocol]
+        changes: dict = {}
+        if sc.loss_p is not None:
+            changes["loss_p"] = sc.loss_p
+        if sc.rate_scale != 1.0:
+            changes["rate_bytes_per_s"] = link.rate_bytes_per_s * sc.rate_scale
+        return replace(link, **changes) if changes else link
+
+    def cost_model(self, sc: Scenario) -> SplitCostModel:
+        """The scalar-oracle :class:`SplitCostModel` for one scenario."""
+        return SplitCostModel(
+            profile=self.models[sc.model], devices=self.devices,
+            link=self.link_variant(sc), objective=self.objective,
+        )
+
+
+@dataclass(frozen=True)
+class SweepRow:
+    """Per-scenario best plan from a sweep."""
+
+    scenario: Scenario
+    splits: tuple[int, ...]
+    feasible: bool
+    objective_cost_s: float  # solver objective (no setup/feedback)
+    total_latency_s: float  # Eq. 8 incl. link setup + feedback overheads
+    device_s: float  # summed device-local segment latency
+    transmission_s: float  # summed cut transmission latency
+    solver_wall_s: float  # this scenario's share of the batched solve
+
+    def to_dict(self) -> dict:
+        d = dict(self.scenario.__dict__)
+        d.update(
+            splits=list(self.splits), feasible=self.feasible,
+            objective_cost_s=self.objective_cost_s,
+            total_latency_s=self.total_latency_s,
+            device_s=self.device_s, transmission_s=self.transmission_s,
+            solver_wall_s=self.solver_wall_s,
+        )
+        return d
+
+
+@dataclass(frozen=True)
+class SweepResult:
+    """Dense sweep output: one row per scenario, grid order preserved."""
+
+    rows: tuple[SweepRow, ...]
+    solver: str
+    backend: str
+    solve_time_s: float  # batched solver passes only
+    build_time_s: float  # cost-tensor assembly
+
+    @property
+    def n_scenarios(self) -> int:
+        return len(self.rows)
+
+    @property
+    def scenarios_per_sec(self) -> float:
+        total = self.solve_time_s + self.build_time_s
+        return self.n_scenarios / total if total > 0 else INF
+
+    def best(self, **filters) -> SweepRow:
+        """Lowest-latency feasible row among those matching scenario-field
+        filters, e.g. ``best(model="mobilenet_v2", n_devices=4)``."""
+        pool = [
+            r for r in self.rows
+            if r.feasible
+            and all(getattr(r.scenario, k) == v for k, v in filters.items())
+        ]
+        if not pool:
+            raise LookupError(f"no feasible scenario matches {filters!r}")
+        return min(pool, key=lambda r: r.total_latency_s)
+
+    def to_dicts(self) -> list[dict]:
+        return [r.to_dict() for r in self.rows]
+
+    def to_json(self, indent: int | None = None) -> str:
+        def _clean(v):
+            return None if isinstance(v, float) and not np.isfinite(v) else v
+
+        payload = {
+            "solver": self.solver, "backend": self.backend,
+            "n_scenarios": self.n_scenarios,
+            "solve_time_s": self.solve_time_s, "build_time_s": self.build_time_s,
+            "scenarios_per_sec": self.scenarios_per_sec,
+            "rows": [{k: _clean(v) for k, v in d.items()} for d in self.to_dicts()],
+        }
+        return json.dumps(payload, indent=indent)
+
+    def to_csv(self) -> str:
+        cols = ["model", "protocol", "n_devices", "loss_p", "rate_scale",
+                "feasible", "splits", "objective_cost_s", "total_latency_s",
+                "device_s", "transmission_s", "solver_wall_s"]
+        lines = [",".join(cols)]
+        for d in self.to_dicts():
+            d["splits"] = "|".join(str(x) for x in d["splits"])
+            lines.append(",".join(str(d[c]) for c in cols))
+        return "\n".join(lines) + "\n"
+
+
+def _group_tx_vectors(
+    grid: ScenarioGrid, profile: ModelCostProfile, group: list[Scenario]
+) -> np.ndarray:
+    """(S_g, L) transmission-cost vectors, amortizing packet counts per
+    protocol (K depends only on MTU) against per-scenario packet times."""
+    L = profile.num_layers
+    act = profile.segment_arrays.boundary_act_bytes[1:].astype(np.float64)
+    packets_by_mtu: dict[int, np.ndarray] = {}
+    out = np.empty((len(group), L))
+    for i, sc in enumerate(group):
+        link = grid.link_variant(sc)
+        K = packets_by_mtu.get(link.mtu_bytes)
+        if K is None:
+            K = np.where(act > 0, np.ceil(act / link.mtu_bytes), 0.0)
+            packets_by_mtu[link.mtu_bytes] = K
+        tx = K * link.packet_time_s()
+        tx[-1] = 0.0
+        out[i] = tx
+    return out
+
+
+def sweep(
+    grid: ScenarioGrid,
+    solver: str = "batched_dp",
+    backend: str = "numpy",
+    beam_width: int = 8,
+) -> SweepResult:
+    """Plan every scenario of ``grid`` in batched passes.
+
+    Scenarios are grouped by (model, fleet size); within a group the
+    device-local cost tensor is built once and the link axes (protocol ×
+    loss × rate) stack into one ``(S_g, N, L, L)`` tensor solved in a
+    single array pass. With ``solver="batched_dp"`` the returned splits
+    are bit-identical to running the scalar ``optimal_dp`` per scenario
+    (the property-test contract)."""
+    if solver not in BATCHED_SOLVERS:
+        raise ValueError(f"unknown batched solver {solver!r}; "
+                         f"options: {sorted(BATCHED_SOLVERS)}")
+    combine = "max" if grid.objective == "bottleneck" else "sum"
+    order = grid.scenarios()
+    # group scenarios (preserving order within groups) by (model, N)
+    groups: dict[tuple[str, int], list[int]] = {}
+    for idx, sc in enumerate(order):
+        groups.setdefault((sc.model, sc.n_devices), []).append(idx)
+
+    rows: dict[int, SweepRow] = {}
+    build_time = 0.0
+    solve_time = 0.0
+    # one device-local tensor per model at the LARGEST fleet size; smaller
+    # fleets are prefixes of it (device k's matrix does not depend on N)
+    max_n: dict[str, int] = {}
+    for model_name, n in groups:
+        max_n[model_name] = max(n, max_n.get(model_name, 0))
+    local_cache: dict[str, np.ndarray] = {}
+    for (model_name, n), idxs in groups.items():
+        profile = grid.models[model_name]
+        L = profile.num_layers
+        group = [order[i] for i in idxs]
+        t0 = time.perf_counter()
+        full = local_cache.get(model_name)
+        if full is None:
+            base_model = SplitCostModel(
+                profile=profile, devices=grid.devices,
+                link=next(iter(grid.links.values())), objective=grid.objective,
+            )
+            full = base_model.local_cost_tensor(max_n[model_name])
+            local_cache[model_name] = full
+        local = full[:n]
+        TX = _group_tx_vectors(grid, profile, group)  # (S_g, L)
+        C = local[None, :, :, :] + TX[:, None, None, :]
+        build_time += time.perf_counter() - t0
+
+        kwargs = {"beam_width": beam_width} if solver == "batched_beam" else {}
+        res = solve_batched(C, solver=solver, combine=combine,
+                            backend=backend if solver == "batched_dp" else "numpy",
+                            **kwargs)
+        solve_time += res.wall_time_s
+        per_scn_wall = res.wall_time_s / max(1, len(group))
+
+        # cost breakdowns from the same tensors (no scalar re-walks)
+        for gi, (idx, sc) in enumerate(zip(idxs, group)):
+            splits_t = res.splits_tuple(gi)
+            feasible = bool(res.feasible[gi])
+            link = grid.link_variant(sc)
+            if splits_t or n == 1:
+                bounds = [0, *splits_t, L] if feasible else None
+            else:
+                bounds = None
+            if feasible and bounds is not None:
+                tx_total = float(np.sum(TX[gi, [b - 1 for b in bounds[1:-1]]])) \
+                    if len(bounds) > 2 else 0.0
+                obj = float(res.cost_s[gi])
+                # device/transmission totals summed over all segments; for
+                # the "sum" objective device_s + transmission_s == objective
+                seg_sum = float(sum(C[gi, i, bounds[i], bounds[i + 1] - 1]
+                                    for i in range(len(bounds) - 1)))
+                device_s = seg_sum - tx_total
+                total = obj + link.t_setup_s + link.t_feedback_s
+                rows[idx] = SweepRow(
+                    scenario=sc, splits=splits_t, feasible=True,
+                    objective_cost_s=obj, total_latency_s=total,
+                    device_s=device_s, transmission_s=tx_total,
+                    solver_wall_s=per_scn_wall,
+                )
+            else:
+                rows[idx] = SweepRow(
+                    scenario=sc, splits=splits_t, feasible=False,
+                    objective_cost_s=INF, total_latency_s=INF,
+                    device_s=INF, transmission_s=INF,
+                    solver_wall_s=per_scn_wall,
+                )
+    ordered = tuple(rows[i] for i in range(len(order)))
+    return SweepResult(rows=ordered, solver=solver, backend=backend,
+                       solve_time_s=solve_time, build_time_s=build_time)
+
+
+def sweep_scalar(grid: ScenarioGrid, solver: str = "optimal_dp") -> SweepResult:
+    """The un-batched reference: one scalar solve per scenario (the
+    per-scenario Python loop the batched engine replaces). Used as the
+    parity oracle in tests and the baseline in benchmark speedup
+    reporting."""
+    combine = "max" if grid.objective == "bottleneck" else "sum"
+    rows = []
+    solve_time = 0.0
+    build_time = 0.0
+    for sc in grid.scenarios():
+        t0 = time.perf_counter()
+        m = grid.cost_model(sc)
+        L = m.profile.num_layers
+        fn = m.cost_segment_fn()
+        build_time += time.perf_counter() - t0
+        res = S.SOLVERS[solver](fn, L, sc.n_devices, combine=combine)
+        solve_time += res.wall_time_s
+        feasible = res.feasible
+        if feasible:
+            link = grid.link_variant(sc)
+            bounds = [0, *res.splits, L]
+            tx_total = sum(
+                link.transmission_latency_s(m.profile.boundary_act_bytes(b))
+                for b in bounds[1:-1]
+            )
+            obj = res.cost_s
+            seg_sum = S.total_cost(fn, res.splits, L, "sum")
+            device_s = seg_sum - tx_total
+            rows.append(SweepRow(
+                scenario=sc, splits=res.splits, feasible=True,
+                objective_cost_s=obj,
+                total_latency_s=obj + link.t_setup_s + link.t_feedback_s,
+                device_s=device_s, transmission_s=tx_total,
+                solver_wall_s=res.wall_time_s,
+            ))
+        else:
+            rows.append(SweepRow(
+                scenario=sc, splits=res.splits, feasible=False,
+                objective_cost_s=INF, total_latency_s=INF, device_s=INF,
+                transmission_s=INF, solver_wall_s=res.wall_time_s,
+            ))
+    return SweepResult(rows=tuple(rows), solver=solver, backend="scalar",
+                       solve_time_s=solve_time, build_time_s=build_time)
+
+
+def parity_report(batched: SweepResult, scalar: SweepResult) -> list[str]:
+    """Human-readable mismatch list between two sweeps of the same grid
+    (empty = bit-identical splits everywhere, the acceptance contract)."""
+    if batched.n_scenarios != scalar.n_scenarios:
+        return [f"scenario count differs: {batched.n_scenarios} vs {scalar.n_scenarios}"]
+    out = []
+    for rb, rs in zip(batched.rows, scalar.rows):
+        if tuple(rb.splits) != tuple(rs.splits) or rb.feasible != rs.feasible:
+            out.append(f"{rb.scenario.describe()}: batched {rb.splits} "
+                       f"vs scalar {rs.splits}")
+    return out

@@ -134,27 +134,32 @@ class Trainer:
         params, opt, start = self.restore_or_init()
         total = self.loop_cfg.total_steps if max_steps is None else start + max_steps
         ewma = None
-        for step in range(start, total):
-            if self.failure_hook is not None:
-                self.failure_hook(step)  # may raise — simulated node failure
-            t0 = time.monotonic()
-            batch = self.data.batch_at(step)
-            params, opt, metrics = self._step_fn(params, opt, batch)
-            loss = float(metrics["loss"])
-            wall = time.monotonic() - t0
-            ewma = wall if ewma is None else 0.9 * ewma + 0.1 * wall
-            straggler = (
-                wall > self.loop_cfg.straggler_factor * ewma
-                or (self.loop_cfg.step_deadline_s is not None
-                    and wall > self.loop_cfg.step_deadline_s)
-            )
-            rec = StepRecord(step, loss, float(metrics["grad_norm"]), wall, straggler)
-            self.history.append(rec)
-            if straggler and self.straggler_hook is not None:
-                self.straggler_hook(rec)
-            if (step + 1) % self.loop_cfg.ckpt_every == 0 or step + 1 == total:
-                self.store.save_async(step + 1, (params, opt),
-                                      extra={"next_step": step + 1})
-        self.store.wait()
+        try:
+            for step in range(start, total):
+                if self.failure_hook is not None:
+                    self.failure_hook(step)  # may raise — simulated node failure
+                t0 = time.monotonic()
+                batch = self.data.batch_at(step)
+                params, opt, metrics = self._step_fn(params, opt, batch)
+                loss = float(metrics["loss"])
+                wall = time.monotonic() - t0
+                ewma = wall if ewma is None else 0.9 * ewma + 0.1 * wall
+                straggler = (
+                    wall > self.loop_cfg.straggler_factor * ewma
+                    or (self.loop_cfg.step_deadline_s is not None
+                        and wall > self.loop_cfg.step_deadline_s)
+                )
+                rec = StepRecord(step, loss, float(metrics["grad_norm"]), wall, straggler)
+                self.history.append(rec)
+                if straggler and self.straggler_hook is not None:
+                    self.straggler_hook(rec)
+                if (step + 1) % self.loop_cfg.ckpt_every == 0 or step + 1 == total:
+                    self.store.save_async(step + 1, (params, opt),
+                                          extra={"next_step": step + 1})
+        finally:
+            # flush the in-flight async checkpoint even when a step raises:
+            # its snapshot was already taken, and losing it on a crash is
+            # exactly the failure mode checkpointing exists to prevent
+            self.store.wait()
         self._final = (params, opt)
         return self.history

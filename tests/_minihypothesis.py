@@ -1,0 +1,177 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface
+this test suite uses.
+
+The real ``hypothesis`` is declared in ``pyproject.toml`` under the
+``test`` extra and is preferred whenever importable; ``conftest.py``
+installs this fallback into ``sys.modules`` only when the import fails
+(hermetic containers, air-gapped CI). The fallback keeps the tests
+*property-style* — each ``@given`` test still runs against
+``max_examples`` randomized draws — but with a deterministic per-test
+seed and no shrinking.
+
+Supported surface (exactly what the suite imports):
+  given, settings, strategies.{integers, floats, booleans, sampled_from,
+  sets, lists, tuples, data, composite}
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+_DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    """A lazily-drawn value generator (mirrors hypothesis' SearchStrategy)."""
+
+    def __init__(self, draw_fn, label="strategy"):
+        self._draw = draw_fn
+        self._label = label
+
+    def __repr__(self):  # pragma: no cover - debugging aid
+        return f"<{self._label}>"
+
+
+def integers(min_value, max_value):
+    return Strategy(lambda rng: rng.randint(min_value, max_value),
+                    f"integers({min_value}, {max_value})")
+
+
+def floats(min_value, max_value, allow_nan=False, allow_infinity=False, **_kw):
+    del allow_nan, allow_infinity  # bounded draws are always finite
+    return Strategy(lambda rng: rng.uniform(min_value, max_value),
+                    f"floats({min_value}, {max_value})")
+
+
+def booleans():
+    return Strategy(lambda rng: bool(rng.getrandbits(1)), "booleans()")
+
+
+def sampled_from(elements):
+    pool = list(elements)
+    if not pool:
+        raise ValueError("sampled_from requires a non-empty collection")
+    return Strategy(lambda rng: pool[rng.randrange(len(pool))],
+                    f"sampled_from(<{len(pool)}>)")
+
+
+def lists(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 8
+
+    def draw(rng):
+        return [elements._draw(rng) for _ in range(rng.randint(min_size, hi))]
+
+    return Strategy(draw, "lists(...)")
+
+
+def tuples(*strategies):
+    return Strategy(lambda rng: tuple(s._draw(rng) for s in strategies),
+                    "tuples(...)")
+
+
+def sets(elements, min_size=0, max_size=None):
+    hi = max_size if max_size is not None else min_size + 8
+
+    def draw(rng):
+        target = rng.randint(min_size, hi)
+        out: set = set()
+        # Bounded retry loop: small element domains may not be able to
+        # reach ``target`` distinct values.
+        for _ in range(200 * max(1, target)):
+            if len(out) >= target:
+                break
+            out.add(elements._draw(rng))
+        if len(out) < min_size:
+            raise ValueError(
+                f"could not draw a set of >= {min_size} distinct elements")
+        return out
+
+    return Strategy(draw, "sets(...)")
+
+
+class _DataObject:
+    """Interactive draw handle (``st.data()``)."""
+
+    def __init__(self, rng):
+        self._rng = rng
+
+    def draw(self, strategy, label=None):
+        del label
+        return strategy._draw(self._rng)
+
+
+def data():
+    return Strategy(lambda rng: _DataObject(rng), "data()")
+
+
+def composite(fn):
+    """``@st.composite`` — the wrapped function receives a ``draw`` callable."""
+
+    @functools.wraps(fn)
+    def builder(*args, **kwargs):
+        def draw_value(rng):
+            return fn(lambda strat: strat._draw(rng), *args, **kwargs)
+
+        return Strategy(draw_value, f"composite({fn.__name__})")
+
+    return builder
+
+
+class settings:
+    """Decorator recording per-test example counts; other knobs ignored."""
+
+    def __init__(self, max_examples=_DEFAULT_MAX_EXAMPLES, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._mh_max_examples = self.max_examples
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    def decorate(fn):
+        max_examples = getattr(fn, "_mh_max_examples", _DEFAULT_MAX_EXAMPLES)
+        # Deterministic per-test seed: stable across runs and machines.
+        seed = zlib.crc32(fn.__qualname__.encode())
+
+        # Positional strategies bind to the RIGHTMOST parameters (as in
+        # hypothesis); everything is passed by keyword so pytest fixtures
+        # (which arrive as kwargs) never collide with drawn values.
+        sig0 = inspect.signature(fn)
+        non_kw = [p.name for p in sig0.parameters.values()
+                  if p.name not in kw_strategies]
+        pos_names = non_kw[len(non_kw) - len(arg_strategies):] \
+            if arg_strategies else []
+
+        @functools.wraps(fn)
+        def wrapper(*call_args, **call_kwargs):
+            rng = random.Random(seed)
+            for example in range(max_examples):
+                drawn = {name: s._draw(rng)
+                         for name, s in zip(pos_names, arg_strategies)}
+                drawn.update((k, s._draw(rng)) for k, s in kw_strategies.items())
+                try:
+                    fn(*call_args, **call_kwargs, **drawn)
+                except Exception as exc:  # annotate, no shrinking
+                    raise AssertionError(
+                        f"falsifying example #{example}: {drawn!r}"
+                    ) from exc
+
+        # Hide the strategy-filled parameters from pytest's fixture
+        # resolution: like hypothesis, positional strategies consume the
+        # RIGHTMOST params (pytest fixtures stay on the left); keyword
+        # strategies consume params by name.
+        sig = inspect.signature(fn)
+        params = [p for p in sig.parameters.values() if p.name not in kw_strategies]
+        n_pos = len(arg_strategies)
+        keep = params[: len(params) - n_pos] if n_pos else params
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__  # stop inspect from seeing fn's params
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        wrapper.hypothesis_fallback = True
+        return wrapper
+
+    return decorate

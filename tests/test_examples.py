@@ -1,5 +1,6 @@
 """Examples must stay runnable — subprocess smoke tests (marked slow)."""
 
+import os
 import subprocess
 import sys
 
@@ -7,9 +8,16 @@ import pytest
 
 
 def _run(script, *args, timeout=420):
+    env = {
+        "PYTHONPATH": "src",
+        "PATH": "/usr/bin:/bin",
+        # examples are CPU smoke tests; without this, hosts with libtpu
+        # installed hang in TPU backend discovery inside the subprocess
+        "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS") or "cpu",
+    }
     res = subprocess.run(
         [sys.executable, script, *args], capture_output=True, text=True,
-        timeout=timeout, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+        timeout=timeout, env=env)
     assert res.returncode == 0, res.stderr[-2000:]
     return res.stdout
 

@@ -2,6 +2,7 @@
 planner splits) — requires >1 local device, so these tests spawn a
 subprocess with forced host devices."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -51,5 +52,9 @@ SCRIPT = textwrap.dedent("""
 def test_pipeline_parallel_exactness():
     res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                          text=True, timeout=300,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                              # hosts with libtpu installed otherwise hang in
+                              # TPU discovery; this test forces host devices
+                              "JAX_PLATFORMS":
+                                  os.environ.get("JAX_PLATFORMS") or "cpu"})
     assert "PIPELINE_OK" in res.stdout, res.stderr[-2000:]

@@ -1,0 +1,391 @@
+"""Sweep-engine tests: cost-tensor export exactness, batched-vs-scalar
+solver parity (property-style, randomized grids), and the ScenarioGrid
+fleet API."""
+
+import math
+from dataclasses import replace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import solvers as S
+from repro.core import sweep as SW
+from repro.core.latency import (
+    DeviceProfile,
+    LayerCost,
+    LinkProfile,
+    ModelCostProfile,
+    SplitCostModel,
+)
+from repro.core.planner import plan_split, plan_split_batch
+
+INF = float("inf")
+
+
+# ---------------------------------------------------------------------------
+# Instance generators
+# ---------------------------------------------------------------------------
+
+
+def synthetic_model(draw, L):
+    layers = tuple(
+        LayerCost(
+            name=f"l{i}",
+            t_infer_s=draw(st.floats(1e-4, 0.5)),
+            act_bytes=draw(st.integers(0, 20_000)),
+            param_bytes=draw(st.integers(0, 200_000)),
+            work_bytes=draw(st.integers(0, 50_000)),
+            flops=draw(st.floats(0.0, 1e9)),
+        )
+        for i in range(L)
+    )
+    return ModelCostProfile(name="synth", layers=layers,
+                            input_bytes=draw(st.integers(0, 5_000)))
+
+
+def synthetic_link(draw):
+    return LinkProfile(
+        name="lk",
+        mtu_bytes=draw(st.integers(64, 2048)),
+        rate_bytes_per_s=draw(st.floats(1e4, 1e7)),
+        loss_p=draw(st.floats(0.0, 0.3)),
+        t_prop_s=draw(st.floats(0.0, 1e-3)),
+        t_ack_s=draw(st.floats(0.0, 5e-3)),
+        t_setup_s=draw(st.floats(0.0, 1.0)),
+        t_feedback_s=draw(st.floats(0.0, 0.05)),
+    )
+
+
+def synthetic_device(draw, constrain_mem):
+    mem = draw(st.integers(150_000, 400_000)) if constrain_mem else None
+    return DeviceProfile(
+        name="dev",
+        compute_scale=draw(st.floats(0.5, 2.0)),
+        t_model_load_s=draw(st.floats(0.0, 1e-3)),
+        model_load_s_per_byte=draw(st.floats(0.0, 1e-9)),
+        t_input_load_s=draw(st.floats(0.0, 1e-2)),
+        t_tensor_alloc_s=draw(st.floats(0.0, 1e-2)),
+        tensor_alloc_s_per_byte=draw(st.floats(0.0, 1e-7)),
+        t_buffer_s=draw(st.floats(0.0, 1e-3)),
+        buffer_s_per_byte=draw(st.floats(0.0, 1e-8)),
+        mem_limit_bytes=mem,
+    )
+
+
+@st.composite
+def cost_models(draw):
+    L = draw(st.integers(3, 12))
+    prof = synthetic_model(draw, L)
+    dev = synthetic_device(draw, constrain_mem=draw(st.integers(0, 1)) == 1)
+    link = synthetic_link(draw)
+    return SplitCostModel(profile=prof, devices=(dev,), link=link)
+
+
+@st.composite
+def random_tensors(draw):
+    """Raw stacked cost tensors with sprinkled +inf (device-independent
+    of any physical model — pure solver-contract instances)."""
+    L = draw(st.integers(3, 10))
+    N = draw(st.integers(1, min(5, L)))
+    Sn = draw(st.integers(2, 6))
+    seed = draw(st.integers(0, 2**31 - 1))
+    inf_frac = draw(st.floats(0.0, 0.35))
+    rng = np.random.RandomState(seed)
+    C = rng.uniform(0.01, 100.0, size=(Sn, N, L, L))
+    C[rng.uniform(size=C.shape) < inf_frac] = INF
+    C[:, :, np.tril(np.ones((L, L), bool), k=-1)] = INF
+    return C
+
+
+def cost_fn_from(Cs):
+    """Scalar cost_fn view of one scenario's tensor (broadcast device
+    semantics: k beyond the tensor's device axis clamps to the last)."""
+    Nn, L = Cs.shape[0], Cs.shape[-1]
+
+    def fn(a, b, k):
+        if not (1 <= a <= b <= L):
+            return INF
+        return float(Cs[min(k, Nn) - 1, a - 1, b - 1])
+
+    return fn
+
+
+def assert_scenario_matches(scalar_res, batched_res, s):
+    assert scalar_res.splits == batched_res.splits_tuple(s)
+    if math.isinf(scalar_res.cost_s):
+        assert math.isinf(batched_res.cost_s[s])
+    else:
+        # bit-identical, not approx — the engine's core contract
+        assert scalar_res.cost_s == batched_res.cost_s[s]
+
+
+# ---------------------------------------------------------------------------
+# Cost tensor export
+# ---------------------------------------------------------------------------
+
+
+class TestCostTensor:
+    @given(cost_models(), st.integers(1, 5))
+    @settings(max_examples=30, deadline=None)
+    def test_tensor_matches_scalar_bitwise(self, m, N):
+        L = m.profile.num_layers
+        C = m.segment_cost_tensor(N)
+        for k in range(1, N + 1):
+            for a in range(1, L + 1):
+                for b in range(1, L + 1):
+                    want = m.segment_cost_s(a, b, k)
+                    got = C[k - 1, a - 1, b - 1]
+                    if math.isinf(want):
+                        assert math.isinf(got), (k, a, b)
+                    else:
+                        assert want == got, (k, a, b)  # bit-identical
+
+    @given(cost_models(), st.integers(1, 4))
+    @settings(max_examples=20, deadline=None)
+    def test_shape_and_dtype(self, m, N):
+        L = m.profile.num_layers
+        C = m.segment_cost_tensor(N)
+        assert C.shape == (N, L, L)
+        assert C.dtype == np.float64
+        # a > b is always invalid
+        tril = np.tril(np.ones((L, L), bool), k=-1)
+        assert np.isinf(C[:, tril]).all()
+        # local + tx decomposition reassembles the full tensor
+        local = m.local_cost_tensor(N)
+        tx = m.transmission_cost_vector()
+        assert tx.shape == (L,)
+        assert tx[-1] == 0.0
+        reassembled = local + tx[None, None, :]
+        both = np.isfinite(C) & np.isfinite(reassembled)
+        assert np.array_equal(np.isfinite(C), np.isfinite(reassembled))
+        assert (C[both] == reassembled[both]).all()
+
+    def test_include_setup_charged_per_cut(self):
+        layers = tuple(LayerCost(f"l{i}", 0.01, 1000, 10) for i in range(4))
+        prof = ModelCostProfile("t", layers)
+        link = LinkProfile("lk", 500, 1e5, t_setup_s=0.25)
+        base = SplitCostModel(prof, (DeviceProfile("d"),), link)
+        with_setup = replace(base, include_setup=True)
+        d = with_setup.transmission_cost_vector() - base.transmission_cost_vector()
+        assert d[:-1] == pytest.approx([0.25] * 3)
+        assert d[-1] == 0.0
+
+    def test_segment_arrays_cached(self):
+        layers = tuple(LayerCost(f"l{i}", 0.01, 100, 10) for i in range(3))
+        prof = ModelCostProfile("t", layers)
+        assert prof.segment_arrays is prof.segment_arrays
+
+
+# ---------------------------------------------------------------------------
+# Batched solver parity vs the scalar oracle
+# ---------------------------------------------------------------------------
+
+
+class TestBatchedParity:
+    """Each @given case checks every stacked scenario against the scalar
+    solver — ≥ 40 examples × 2-6 scenarios ≫ 100 randomized scenarios."""
+
+    @given(random_tensors(), st.sampled_from(["sum", "max"]))
+    @settings(max_examples=40, deadline=None)
+    def test_dp_matches_scalar(self, C, combine):
+        Sn, N, L, _ = C.shape
+        res = SW.batched_optimal_dp(C, combine=combine)
+        for s in range(Sn):
+            assert_scenario_matches(
+                S.optimal_dp(cost_fn_from(C[s]), L, N, combine=combine), res, s)
+
+    @given(random_tensors(), st.sampled_from(["sum", "max"]),
+           st.sampled_from([1, 2, 4, 8, 64]))
+    @settings(max_examples=40, deadline=None)
+    def test_beam_matches_scalar(self, C, combine, width):
+        Sn, N, L, _ = C.shape
+        res = SW.batched_beam_search(C, beam_width=width, combine=combine)
+        for s in range(Sn):
+            assert_scenario_matches(
+                S.beam_search(cost_fn_from(C[s]), L, N,
+                              beam_width=width, combine=combine), res, s)
+
+    @given(random_tensors(), st.sampled_from(["sum", "max"]))
+    @settings(max_examples=40, deadline=None)
+    def test_greedy_matches_scalar(self, C, combine):
+        Sn, N, L, _ = C.shape
+        res = SW.batched_greedy_search(C, combine=combine)
+        for s in range(Sn):
+            assert_scenario_matches(
+                S.greedy_search(cost_fn_from(C[s]), L, N, combine=combine), res, s)
+
+    @given(cost_models(), st.integers(2, 5))
+    @settings(max_examples=25, deadline=None)
+    def test_dp_parity_on_physical_models(self, m, N):
+        """End-to-end: profile -> tensor -> batched DP == scalar DP."""
+        L = m.profile.num_layers
+        N = min(N, L)
+        res = SW.batched_optimal_dp(m.segment_cost_tensor(N)[None])
+        assert_scenario_matches(
+            S.optimal_dp(m.cost_segment_fn(), L, N), res, 0)
+
+    @given(random_tensors())
+    @settings(max_examples=20, deadline=None)
+    def test_return_all_k_matches_per_k_solves(self, C):
+        Sn, N, L, _ = C.shape
+        all_k = SW.batched_optimal_dp(C, return_all_k=True)
+        for n in range(1, N + 1):
+            single = SW.batched_optimal_dp(C[:, :n], combine="sum")
+            assert np.array_equal(all_k[n].splits, single.splits)
+            fin = np.isfinite(single.cost_s)
+            assert np.array_equal(fin, np.isfinite(all_k[n].cost_s))
+            assert (all_k[n].cost_s[fin] == single.cost_s[fin]).all()
+
+    @given(random_tensors(), st.sampled_from(["sum", "max"]))
+    @settings(max_examples=25, deadline=None)
+    def test_batched_total_cost_matches_scalar(self, C, combine):
+        Sn, N, L, _ = C.shape
+        rng = np.random.RandomState(7)
+        cands = np.sort(
+            np.stack([rng.choice(np.arange(1, L), size=max(N - 1, 0),
+                                 replace=False)
+                      for _ in range(5)]) if N > 1
+            else np.zeros((5, 0), np.int64), axis=-1)
+        costs = SW.batched_total_cost(C, cands, combine=combine)
+        assert costs.shape == (Sn, len(cands))
+        for s in range(Sn):
+            fn = cost_fn_from(C[s])
+            for m_i, cand in enumerate(cands):
+                want = S.total_cost(fn, tuple(int(x) for x in cand), L, combine)
+                got = costs[s, m_i]
+                assert (want == got) or (math.isinf(want) and math.isinf(got))
+
+    def test_jax_backend_matches_numpy_on_separated_costs(self):
+        rng = np.random.RandomState(3)
+        C = rng.randint(1, 10_000, size=(8, 4, 10, 10)).astype(np.float64)
+        C[:, :, np.tril(np.ones((10, 10), bool), k=-1)] = INF
+        a = SW.batched_optimal_dp(C, backend="numpy")
+        b = SW.batched_optimal_dp(C, backend="jax")
+        assert np.array_equal(a.splits, b.splits)
+        assert a.cost_s == pytest.approx(b.cost_s, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ScenarioGrid / sweep API
+# ---------------------------------------------------------------------------
+
+
+def tiny_grid(n_scenarios_axis=2):
+    layers = tuple(
+        LayerCost(f"l{i}", 0.01 * (i + 1), 400 * (i + 1), 50 * (i + 1), 100)
+        for i in range(8)
+    )
+    prof = ModelCostProfile("toy", layers, input_bytes=128)
+    links = {
+        "fast": LinkProfile("fast", 512, 1e6, t_setup_s=0.1, t_feedback_s=0.01),
+        "slow": LinkProfile("slow", 256, 1e5, t_ack_s=1e-3, t_setup_s=0.02),
+    }
+    return SW.ScenarioGrid(
+        models={"toy": prof},
+        links=links,
+        n_devices=(2, 3),
+        loss_p=(None, 0.1)[:n_scenarios_axis],
+        rate_scale=(1.0, 0.5)[:n_scenarios_axis],
+        devices=(DeviceProfile("d", t_tensor_alloc_s=1e-3),),
+    )
+
+
+class TestScenarioGridSweep:
+    def test_grid_enumeration_and_size(self):
+        grid = tiny_grid()
+        scs = grid.scenarios()
+        assert len(scs) == grid.size == 1 * 2 * 2 * 2 * 2
+        assert len({(s.model, s.protocol, s.n_devices, s.loss_p, s.rate_scale)
+                    for s in scs}) == len(scs)
+
+    def test_sweep_rows_match_scalar_plans(self):
+        grid = tiny_grid()
+        result = SW.sweep(grid, solver="batched_dp")
+        assert result.n_scenarios == grid.size
+        for row in result.rows:
+            plan = plan_split(grid.cost_model(row.scenario),
+                              row.scenario.n_devices, solver="optimal_dp")
+            assert row.splits == plan.splits
+            assert row.total_latency_s == pytest.approx(plan.total_latency_s)
+            assert row.device_s + row.transmission_s == pytest.approx(
+                row.objective_cost_s)
+
+    def test_sweep_scalar_parity_report_empty(self):
+        grid = tiny_grid()
+        assert SW.parity_report(SW.sweep(grid), SW.sweep_scalar(grid)) == []
+
+    def test_batched_beam_sweep_matches_scalar_beam(self):
+        grid = tiny_grid()
+        batched = SW.sweep(grid, solver="batched_beam", beam_width=4)
+        scalar = SW.sweep_scalar(grid, solver="beam")
+        assert SW.parity_report(batched, scalar) == []
+
+    def test_best_filters(self):
+        grid = tiny_grid()
+        result = SW.sweep(grid)
+        best = result.best(n_devices=2)
+        assert best.scenario.n_devices == 2
+        assert all(best.total_latency_s <= r.total_latency_s
+                   for r in result.rows
+                   if r.feasible and r.scenario.n_devices == 2)
+        with pytest.raises(LookupError):
+            result.best(model="nope")
+
+    def test_serialization_round_trips(self):
+        import json
+
+        result = SW.sweep(tiny_grid())
+        payload = json.loads(result.to_json())
+        assert payload["n_scenarios"] == result.n_scenarios
+        assert len(payload["rows"]) == result.n_scenarios
+        csv = result.to_csv()
+        assert len(csv.strip().splitlines()) == result.n_scenarios + 1
+
+    def test_plan_split_batch_matches_singletons(self):
+        grid = tiny_grid()
+        models = [grid.cost_model(sc) for sc in grid.scenarios()
+                  if sc.n_devices == 3]
+        plans = plan_split_batch(models, 3, solver="batched_dp")
+        for m, p in zip(models, plans):
+            ref = plan_split(m, 3, solver="optimal_dp")
+            assert p.splits == ref.splits
+            assert p.total_latency_s == pytest.approx(ref.total_latency_s)
+
+    def test_plan_split_accepts_batched_solver_names(self):
+        grid = tiny_grid()
+        m = grid.cost_model(grid.scenarios()[0])
+        a = plan_split(m, 2, solver="batched_dp")
+        b = plan_split(m, 2, solver="optimal_dp")
+        assert a.splits == b.splits
+        assert a.solver == "batched_dp"
+
+    def test_stack_rejects_mixed_layer_counts(self):
+        grid = tiny_grid()
+        m1 = grid.cost_model(grid.scenarios()[0])
+        layers = tuple(LayerCost(f"l{i}", 0.01, 10, 10) for i in range(5))
+        m2 = SplitCostModel(ModelCostProfile("other", layers),
+                            (DeviceProfile("d"),), m1.link)
+        with pytest.raises(ValueError):
+            SW.stack_cost_tensors([m1, m2], 2)
+
+    def test_infeasible_scenarios_reported_not_dropped(self):
+        # memory limit below any single layer's weight -> nothing fits
+        layers = tuple(
+            LayerCost(f"l{i}", 0.01, act_bytes=100, param_bytes=10_000)
+            for i in range(5)
+        )
+        prof = ModelCostProfile("big", layers)
+        grid = SW.ScenarioGrid(
+            models={"big": prof},
+            links={"lk": LinkProfile("lk", 512, 1e6)},
+            n_devices=(2,),
+            devices=(DeviceProfile("d", mem_limit_bytes=5_000),),
+        )
+        result = SW.sweep(grid)
+        assert result.n_scenarios == 1
+        assert not result.rows[0].feasible
+        assert math.isinf(result.rows[0].total_latency_s)
+        with pytest.raises(LookupError):
+            result.best()
