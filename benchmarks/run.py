@@ -15,6 +15,7 @@ def main() -> None:
         fig4_beam_vs_brute,
         planner_tpu,
         roofline,
+        surface_replan,
         sweep_grid,
         table2_transmission,
         table3_processing,
@@ -59,6 +60,17 @@ def main() -> None:
     print(f"\n=== sweep_grid (smoke): {sweep_report['n_scenarios']} scenarios, "
           f"{sweep_report['speedup_x']}x over scalar loop, "
           f"parity={sweep_report['parity_ok']} ===")
+    # surface replanning: one summary row (observe() throughput of the
+    # precomputed degradation surface vs the per-observe re-solve path)
+    surf_report = surface_replan.run(smoke=True)
+    csv_lines.append(
+        f"surface_replan[0],{surf_report['observe_us_surface']},"
+        f"speedup={surf_report['speedup_x']}x"
+        f"_nodes={surf_report['n_nodes']}"
+        f"_parity={surf_report['parity_ok']}")
+    print(f"=== surface_replan (smoke): {surf_report['n_nodes']} nodes, "
+          f"{surf_report['speedup_x']}x observe() speedup, "
+          f"parity={surf_report['parity_ok']} ===")
     try:
         timed("roofline", roofline,
               lambda r: f"{r['arch']}/{r['shape']}_dom={r['dominant']}"

@@ -1,0 +1,132 @@
+"""Surface-driven adaptive replanning benchmark — observe() throughput
+of the precomputed DegradationSurface lookup vs the per-observe
+batched re-solve it replaces, on a 5-device fleet.
+
+Also certifies the surface against the re-solve oracle: at every grid
+node the stored (splits, chunk, latency) must equal the exact re-solve
+decision for the same estimator state — exact ``==`` on the NumPy
+float64 path (the PR-1 bit-exactness contract extended to the surface).
+
+Usage:
+  PYTHONPATH=src python benchmarks/surface_replan.py            # full grid
+  PYTHONPATH=src python benchmarks/surface_replan.py --smoke    # CI smoke
+  ... [--json BENCH_surface.json]
+
+The JSON artifact (``BENCH_surface.json``) is the machine-readable perf
+record CI uploads alongside ``BENCH_sweep.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+from repro.core.adaptive import AdaptiveSplitManager, surface_parity_report
+from repro.core.profiles import ESP_NOW, PROTOCOLS, paper_cost_model
+
+N_DEVICES = 5
+SPEEDUP_TARGET = 50.0
+
+# drifting-link trace: (packet-time factor over nominal, observes)
+TRACE = ((1, 50), (20, 100), (100, 150), (400, 200), (30, 100), (1, 100))
+
+
+def _managers(smoke: bool):
+    grid = {"pt_scale": (1.0, 4.0, 16.0, 64.0, 256.0, 512.0),
+            "loss_p": (0.0, 0.1, 0.3)} if smoke else {}
+    cost_model = paper_cost_model("mobilenet_v2", "esp_now")
+    surface_mgr = AdaptiveSplitManager(
+        cost_model=cost_model, protocols=dict(PROTOCOLS),
+        n_devices=N_DEVICES, solver="optimal_dp", surface_grid=grid)
+    resolve_mgr = AdaptiveSplitManager(
+        cost_model=cost_model, protocols=dict(PROTOCOLS),
+        n_devices=N_DEVICES, solver="optimal_dp", surface=None)
+    return surface_mgr, resolve_mgr
+
+
+def _drive(mgr, repeats: int = 1) -> float:
+    """Replay the drifting trace; returns wall seconds per observe."""
+    nbytes = 5488
+    n = 0
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        for factor, steps in TRACE:
+            lat = factor * ESP_NOW.transmission_latency_s(nbytes)
+            for _ in range(steps):
+                mgr.observe("esp_now", nbytes, lat)
+                n += 1
+    return (time.perf_counter() - t0) / n
+
+
+def run(smoke: bool = True) -> dict:
+    surface_mgr, resolve_mgr = _managers(smoke)
+    surf = surface_mgr.surface
+
+    resolve_s = _drive(resolve_mgr, repeats=1)
+    surface_s = _drive(surface_mgr, repeats=3 if smoke else 10)
+    # the same node-by-node oracle check tier-1 runs (tests/test_surface.py)
+    mismatches = surface_parity_report(surface_mgr)
+
+    total = surface_mgr.surface_hits + surface_mgr.exact_fallbacks
+    return {
+        "benchmark": "surface_replan",
+        "mode": "smoke" if smoke else "full",
+        "n_devices": N_DEVICES,
+        "n_protocols": len(surf.protocols),
+        "n_nodes": surf.n_nodes,
+        "n_switch_points": len(surf.switch_points()),
+        "surface_build_s": round(surf.build_time_s, 4),
+        "surface_solve_s": round(surf.solve_time_s, 4),
+        "observe_us_surface": round(surface_s * 1e6, 2),
+        "observe_us_resolve": round(resolve_s * 1e6, 2),
+        "speedup_x": round(resolve_s / surface_s, 1),
+        "surface_hit_rate": round(surface_mgr.surface_hits / max(1, total), 4),
+        "exact_fallbacks": surface_mgr.exact_fallbacks,
+        "plans_agree_end_of_trace":
+            surface_mgr.current.splits == resolve_mgr.current.splits
+            and surface_mgr.current.protocol == resolve_mgr.current.protocol,
+        "parity_ok": not mismatches,
+        "parity_mismatches": mismatches[:10],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized grid (fewer surface nodes)")
+    ap.add_argument("--json", default="BENCH_surface.json",
+                    help="path for the machine-readable result (empty to skip)")
+    args = ap.parse_args()
+
+    print("\n=== surface_replan: O(1) surface lookup vs per-observe re-solve ===")
+    report = run(smoke=args.smoke)
+    print(f"surface: {report['n_nodes']} nodes / {report['n_protocols']} "
+          f"protocols, {report['n_switch_points']} switch points, "
+          f"built in {report['surface_build_s']}s "
+          f"(solver {report['surface_solve_s']}s)")
+    print(f"observe(): surface {report['observe_us_surface']} us  "
+          f"re-solve {report['observe_us_resolve']} us  "
+          f"-> {report['speedup_x']}x")
+    print(f"surface hit rate {report['surface_hit_rate']}, "
+          f"{report['exact_fallbacks']} envelope fallbacks; "
+          f"end-of-trace plans agree: {report['plans_agree_end_of_trace']}")
+    print(f"node parity vs re-solve oracle (exact ==): {report['parity_ok']}")
+    if not report["parity_ok"]:
+        for m in report["parity_mismatches"]:
+            print("  MISMATCH:", m)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+    assert report["parity_ok"], "surface diverged from the re-solve oracle"
+    if report["speedup_x"] < SPEEDUP_TARGET:
+        print(f"WARNING: speedup {report['speedup_x']}x below the "
+              f"{SPEEDUP_TARGET}x target")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,6 +7,9 @@ Public API:
                plan_split_batch (vectorized fleet planning)
   sweep      — batched solvers over stacked C[k,a,b] cost tensors +
                ScenarioGrid fleet sweeps (protocol x fleet x loss x rate)
+  surface    — precomputed degradation surfaces (per-protocol packet-time
+               x loss grids -> best plan + switch points + interpolation)
+               for O(1) adaptive replanning
   profiles   — paper-calibrated ESP32 + protocol tables; TPU v5e constants
   executor   — run_split / run_unsplit segment execution with wire simulation
   quantization — int8 PTQ + activation wire format
@@ -28,8 +31,19 @@ from repro.core.planner import (  # noqa: F401
     plan_pipeline,
     plan_split,
     plan_split_batch,
+    plan_surface,
     tpu_cost_profile,
     uniform_split,
+)
+# NOTE: like sweep below, `repro.core.surface` must keep resolving to the
+# submodule — only names are re-exported here, never a shadowing function.
+from repro.core.surface import (  # noqa: F401
+    DegradationSurface,
+    ProtocolSurface,
+    SurfaceLookup,
+    SwitchPoint,
+    build_surface,
+    refit_link,
 )
 # NOTE: the sweep() entry point itself is deliberately NOT re-exported
 # here — `repro.core.sweep` must keep resolving to the submodule

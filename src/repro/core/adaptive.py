@@ -17,34 +17,63 @@ Three pieces:
   1460-vs-1200 inversion).
 
 * :class:`AdaptiveSplitManager` — holds the current plan; every
-  ``observe()`` feeds hop measurements to the estimator; when the
-  estimated end-to-end latency of the current plan drifts more than
-  ``replan_threshold`` from the best achievable plan (re-solved with Beam
-  Search over protocols x chunk sizes), it re-plans. Hysteresis prevents
-  plan thrash; every decision is recorded for audit.
+  ``observe()`` feeds hop measurements to the estimator. The hot loop is
+  an O(1) lookup into a precomputed
+  :class:`~repro.core.surface.DegradationSurface` (best plan + tuned
+  chunk per (packet-time × loss) node, latency bilinearly interpolated
+  between nodes) followed by a hysteresis check; an exact Beam-Search
+  re-solve runs only when an estimate leaves the surface's precomputed
+  envelope (or when no surface is configured). Hysteresis prevents plan
+  thrash; every decision is recorded for audit.
 """
 
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field, replace
-from typing import Sequence
 
 import numpy as np
 
+from repro.core import solvers as S
 from repro.core import sweep as SW
 from repro.core.latency import LinkProfile, SplitCostModel
-from repro.core.planner import SplitPlan, plan_split, plans_from_batched
+from repro.core.planner import SplitPlan, _build_plan, plan_split, plans_from_batched
+from repro.core.surface import (  # noqa: F401  (optimize_chunk_size re-exported)
+    DegradationSurface,
+    build_surface,
+    optimize_chunk_size,
+    refit_link,
+)
 
 
 class LinkEstimator:
-    """EWMA estimate of a link's effective per-packet time and loss."""
+    """EWMA estimate of a link's effective per-packet time and loss.
 
-    def __init__(self, base: LinkProfile, alpha: float = 0.2):
+    ``loss_warmup`` seeds the loss EWMA with that many *virtual prior
+    observations*: the effective step size ramps from
+    ``alpha/(1+loss_warmup)`` up to ``alpha`` as real observations
+    accumulate, so one lucky retry-free hop early in the run cannot
+    erase a calibrated loss prior (it used to decay the prior by a full
+    ``alpha`` fraction on the very first observation)."""
+
+    def __init__(self, base: LinkProfile, alpha: float = 0.2,
+                 loss_warmup: int = 5):
         self.base = base
         self.alpha = alpha
+        self.loss_warmup = loss_warmup
         self._packet_time_s = base.packet_time_s()
         self._loss = base.loss_p
         self.n_obs = 0
+
+    @property
+    def packet_time_estimate(self) -> float:
+        """Current per-packet-time estimate (the surface's first axis)."""
+        return self._packet_time_s
+
+    @property
+    def loss_estimate(self) -> float:
+        """Current loss estimate (the surface's second axis)."""
+        return self._loss
 
     def observe_hop(self, nbytes: int, latency_s: float, retries: int = 0):
         """One observed transfer: ``nbytes`` took ``latency_s`` with
@@ -54,40 +83,19 @@ class LinkEstimator:
         self._packet_time_s = (1 - self.alpha) * self._packet_time_s \
             + self.alpha * per_packet
         obs_loss = retries / (k + retries) if retries else 0.0
-        self._loss = (1 - self.alpha) * self._loss + self.alpha * obs_loss
+        # warm-up-damped step: the prior counts as `loss_warmup` virtual
+        # observations until enough real ones accumulate
+        a = self.alpha * (self.n_obs + 1) / (self.n_obs + 1 + self.loss_warmup)
+        self._loss = (1 - a) * self._loss + a * obs_loss
         self.n_obs += 1
 
     def current_profile(self) -> LinkProfile:
         """The base profile re-fitted to the observed per-packet time.
         The serialization term keeps the base rate; the residual moves
-        into the ack/overhead term (and the loss estimate)."""
-        serial = self.base.mtu_bytes / (
-            self.base.rate_bytes_per_s * (1.0 - max(self._loss, 0.0)))
-        t_ack = max(0.0, self._packet_time_s - serial - self.base.t_prop_s)
-        return replace(self.base, t_ack_s=t_ack, loss_p=min(self._loss, 0.9))
-
-
-def optimize_chunk_size(
-    link: LinkProfile,
-    cut_bytes: Sequence[int],
-    chunk_candidates: Sequence[int] | None = None,
-) -> tuple[int, float]:
-    """Best activation chunk size for a set of cut sizes (Eq. 7 summed
-    over the plan's hops). Candidates default to divisors-of-MTU-ish
-    steps below the protocol MTU."""
-    if chunk_candidates is None:
-        mtu = link.mtu_bytes
-        chunk_candidates = sorted({mtu, mtu * 3 // 4, mtu // 2, 1200, 250}
-                                  & set(range(1, mtu + 1))
-                                  | {mtu})
-        chunk_candidates = [c for c in chunk_candidates if 0 < c <= mtu]
-    best = (link.mtu_bytes, float("inf"))
-    for chunk in chunk_candidates:
-        trial = replace(link, mtu_bytes=chunk)
-        total = sum(trial.transmission_latency_s(b) for b in cut_bytes)
-        if total < best[1]:
-            best = (chunk, total)
-    return best
+        into the ack/overhead term (and the loss estimate). Shared with
+        surface construction via :func:`repro.core.surface.refit_link`
+        so surface nodes reproduce this mapping bit-for-bit."""
+        return refit_link(self.base, self._packet_time_s, self._loss)
 
 
 @dataclass
@@ -102,13 +110,26 @@ class PlanDecision:
 
 @dataclass
 class AdaptiveSplitManager:
-    """Runtime re-planning over (protocol x chunk size x split points)."""
+    """Runtime re-planning over (protocol x chunk size x split points).
+
+    ``surface`` controls the ``observe()`` hot path:
+
+    * ``"auto"`` (default) — precompute a
+      :class:`~repro.core.surface.DegradationSurface` at construction;
+      ``observe()`` is then a surface lookup + hysteresis check, with an
+      exact re-solve only when an estimate leaves the surface envelope.
+    * a prebuilt :class:`DegradationSurface` — use it as-is.
+    * ``None`` — legacy behavior: a full batched re-solve on every
+      ``observe()`` (the benchmark baseline).
+    """
 
     cost_model: SplitCostModel  # device/profile side (protocol swapped in)
     protocols: dict[str, LinkProfile]
     n_devices: int
     replan_threshold: float = 0.10  # re-plan when >10% better is available
     solver: str = "beam"
+    surface: DegradationSurface | str | None = "auto"
+    surface_grid: dict | None = None  # extra kwargs for build_surface
     history: list[PlanDecision] = field(default_factory=list)
 
     def __post_init__(self):
@@ -119,53 +140,112 @@ class AdaptiveSplitManager:
                            for name, link in self.protocols.items()}
         self._step = 0
         self._local_tensor = None  # built lazily; link-independent
+        self._fast = None  # precomputed current-plan latency coefficients
+        self.surface_hits = 0
+        self.exact_fallbacks = 0
+        if self.surface == "auto":
+            batched = self._batched_solver_name()
+            if batched in SW.BATCHED_SOLVERS:
+                self.surface = build_surface(
+                    self.cost_model, self.protocols, self.n_devices,
+                    solver=batched, **(self.surface_grid or {}),
+                )
+            else:
+                # scalar-only solvers (first_fit, random_fit, ...) have no
+                # batched twin to precompute with: keep the legacy
+                # re-solve-per-observe path instead of refusing to start
+                self.surface = None
         self.current: PlanDecision | None = None
         self._replan("initial")
 
     # -- runtime feedback ------------------------------------------------------
     def observe(self, protocol: str, nbytes: int, latency_s: float,
                 retries: int = 0):
-        """Feed one observed hop; may trigger a re-plan."""
+        """Feed one observed hop; may trigger a re-plan.
+
+        With a surface this is O(1): per-protocol grid lookups + one
+        hysteresis comparison. The solver only runs when an estimate
+        leaves the surface envelope (``exact_fallbacks`` counts those)."""
         self._step += 1
         self.estimators[protocol].observe_hop(nbytes, latency_s, retries)
-        best_name, best_plan, best_chunk, best_lat = self._best_available()
+        if self.surface is None:
+            self._observe_resolve()
+            return
+        states = {name: (est._packet_time_s, est._loss)
+                  for name, est in self.estimators.items()}
+        hit = self.surface.best_lookup(states)
+        if hit is None:  # outside the envelope (or nothing feasible on it)
+            self.exact_fallbacks += 1
+            self._observe_resolve(reason_suffix=" [envelope re-solve]")
+            return
+        self.surface_hits += 1
         if self.current is None:
-            self._adopt(best_name, best_plan, best_chunk, best_lat, "initial")
+            self._adopt(hit.protocol, hit.splits, hit.chunk_bytes,
+                        hit.latency_s, "initial")
+            return
+        cur = self.current
+        if (hit.protocol == cur.protocol and hit.splits == cur.splits
+                and hit.chunk_bytes == cur.chunk_bytes):
+            # already on the surface's decision: nothing to adopt (and the
+            # interpolated latency may disagree with the exact current-plan
+            # estimate mid-cell, which must not re-record the same plan)
+            return
+        pt, lp = states[cur.protocol]
+        cur_lat = self._fast_current_latency(pt, lp)
+        if hit.latency_s < cur_lat * (1 - self.replan_threshold):
+            self._adopt(hit.protocol, hit.splits, hit.chunk_bytes,
+                        hit.latency_s,
+                        f"estimated {cur_lat:.3f}s -> {hit.latency_s:.3f}s "
+                        f"available")
+
+    def _observe_resolve(self, reason_suffix: str = ""):
+        """The legacy per-observe path: full batched re-solve."""
+        best_name, best_splits, best_chunk, best_lat = self._best_available()
+        if best_name is None:
+            return
+        if self.current is None:
+            self._adopt(best_name, best_splits, best_chunk, best_lat, "initial")
             return
         cur_lat = self._current_latency_under_estimates()
         if best_lat < cur_lat * (1 - self.replan_threshold):
-            self._adopt(best_name, best_plan, best_chunk, best_lat,
-                        f"estimated {cur_lat:.3f}s -> {best_lat:.3f}s available")
+            self._adopt(best_name, best_splits, best_chunk, best_lat,
+                        f"estimated {cur_lat:.3f}s -> {best_lat:.3f}s "
+                        f"available{reason_suffix}")
 
     # -- internals ---------------------------------------------------------------
+    def _batched_solver_name(self) -> str:
+        return {"beam": "batched_beam", "optimal_dp": "batched_dp",
+                "greedy": "batched_greedy"}.get(self.solver, self.solver)
+
     def _model_for(self, link: LinkProfile) -> SplitCostModel:
         return replace(self.cost_model, link=link)
+
+    def _ensure_local_tensor(self) -> np.ndarray:
+        if self._local_tensor is None:
+            self._local_tensor = self.cost_model.local_cost_tensor(self.n_devices)
+        return self._local_tensor
 
     def _batched_plans(self, links, solver: str) -> list[SplitPlan]:
         """One batched solve across all protocols, reusing the
         link-independent device-local tensor (built once per manager —
-        ``observe()`` is the hot loop, and only the transmission vector
-        changes as the estimators drift)."""
-        if self._local_tensor is None:
-            self._local_tensor = self.cost_model.local_cost_tensor(self.n_devices)
+        only the transmission vector changes as the estimators drift)."""
+        local = self._ensure_local_tensor()
         models = [self._model_for(lk) for lk in links]
         TX = np.stack([m.transmission_cost_vector() for m in models])
-        C = self._local_tensor[None, :, :, :] + TX[:, None, None, :]
+        C = local[None, :, :, :] + TX[:, None, None, :]
         combine = "max" if self.cost_model.objective == "bottleneck" else "sum"
         res = SW.solve_batched(C, solver=solver, combine=combine)
         return plans_from_batched(models, res, self.n_devices)
 
     def _best_available(self):
         """Re-plan every protocol in ONE batched tensor pass (the sweep
-        engine), then tune each winner's activation chunk size. The
-        per-protocol scalar re-solve this replaces was the hot loop of
-        ``observe()`` — fleet controllers call it on every measurement."""
-        best = (None, None, 0, float("inf"))
+        engine), then tune each winner's activation chunk size. This is
+        the exact path the degradation surface precomputes; at surface
+        grid nodes both produce identical decisions."""
+        best = (None, (), 0, float("inf"))
         names = list(self.estimators.keys())
         links = [self.estimators[n].current_profile() for n in names]
-        solver = ("batched_beam" if self.solver == "beam"
-                  else "batched_dp" if self.solver == "optimal_dp"
-                  else self.solver)
+        solver = self._batched_solver_name()
         if solver in ("batched_beam", "batched_dp", "batched_greedy"):
             plans = self._batched_plans(links, solver)
         else:  # fall back to the scalar oracle path
@@ -179,7 +259,7 @@ class AdaptiveSplitManager:
             tuned = replace(link, mtu_bytes=chunk)
             lat = self._model_for(tuned).end_to_end_s(plan.splits)
             if lat < best[3]:
-                best = (name, plan, chunk, lat)
+                best = (name, plan.splits, chunk, lat)
         return best
 
     def _current_latency_under_estimates(self) -> float:
@@ -188,12 +268,125 @@ class AdaptiveSplitManager:
         tuned = replace(link, mtu_bytes=cur.chunk_bytes)
         return self._model_for(tuned).end_to_end_s(cur.splits)
 
-    def _adopt(self, name, plan: SplitPlan, chunk: int, lat: float, reason: str):
-        self.current = PlanDecision(self._step, name, chunk, plan.splits,
+    def _fast_current_latency(self, packet_time_s: float, loss: float) -> float:
+        """The current plan's latency under estimator state
+        ``(packet_time_s, loss)`` from precomputed coefficients —
+        bit-identical to :meth:`_current_latency_under_estimates` (same
+        refit clamps, same float operation order as ``end_to_end_s``)
+        without rebuilding links, models, or segment sums per observe."""
+        f = self._fast
+        if f is None:
+            return self._current_latency_under_estimates()
+        serial = f["mtu"] / (f["rate"] * (1.0 - max(loss, 0.0)))
+        t_ack = max(0.0, packet_time_s - serial - f["t_prop"])
+        ptime = (f["chunk"] / (f["rate"] * (1.0 - min(loss, 0.9)))
+                 + f["t_prop"] + t_ack)
+        locs, Ks = f["locs"], f["Ks"]
+        segs = []
+        for i, loc in enumerate(locs):
+            if i < len(Ks):
+                tx = Ks[i] * ptime
+                if f["include_setup"]:
+                    tx += f["setup"]
+                segs.append(loc + tx)
+            else:
+                segs.append(loc)
+        total = max(segs) if f["bottleneck"] else sum(segs)
+        total += f["setup"] + f["feedback"]
+        return total
+
+    def _prime_fast_path(self):
+        """Precompute the current plan's latency coefficients: per-device
+        local costs (from the bit-exact local tensor) and per-cut packet
+        counts under the adopted chunk size."""
+        cur = self.current
+        base = self.protocols[cur.protocol]
+        prof = self.cost_model.profile
+        L = prof.num_layers
+        local = self._ensure_local_tensor()
+        bounds = [0, *cur.splits, L]
+        locs = [float(local[i, bounds[i], bounds[i + 1] - 1])
+                for i in range(len(bounds) - 1)]
+        Ks = []
+        for b in cur.splits:
+            act = prof.boundary_act_bytes(b)
+            Ks.append(math.ceil(act / cur.chunk_bytes) if act > 0 else 0)
+        self._fast = {
+            "locs": locs, "Ks": Ks, "chunk": cur.chunk_bytes,
+            "mtu": base.mtu_bytes, "rate": base.rate_bytes_per_s,
+            "t_prop": base.t_prop_s, "setup": base.t_setup_s,
+            "feedback": base.t_feedback_s,
+            "include_setup": self.cost_model.include_setup,
+            "bottleneck": self.cost_model.objective == "bottleneck",
+        }
+
+    def current_plan(self) -> SplitPlan | None:
+        """Materialize the current decision as a planner
+        :class:`SplitPlan` (for runtime consumers like the serving
+        meter's replan hook)."""
+        if self.current is None:
+            return None
+        cur = self.current
+        link = self.estimators[cur.protocol].current_profile()
+        tuned = replace(link, mtu_bytes=cur.chunk_bytes)
+        model = self._model_for(tuned)
+        result = S.SolverResult(
+            solver="surface" if self.surface is not None else self.solver,
+            splits=cur.splits,
+            cost_s=model.end_to_end_s(cur.splits, with_overheads=False),
+            wall_time_s=0.0, nodes_expanded=0,
+        )
+        return _build_plan(model, result, self.n_devices)
+
+    def _adopt(self, name, splits: tuple[int, ...], chunk: int, lat: float,
+               reason: str):
+        self.current = PlanDecision(self._step, name, chunk, tuple(splits),
                                     lat, reason)
         self.history.append(self.current)
+        self._prime_fast_path()
 
     def _replan(self, reason: str):
-        name, plan, chunk, lat = self._best_available()
+        name, splits, chunk, lat = self._best_available()
         if name is not None:
-            self._adopt(name, plan, chunk, lat, reason)
+            self._adopt(name, splits, chunk, lat, reason)
+
+
+def surface_parity_report(manager: AdaptiveSplitManager) -> list[str]:
+    """Node-by-node oracle-equivalence check (the acceptance contract):
+    force the estimator state to every surface grid node and compare the
+    exact re-solve decision against the stored node — exact ``==`` on
+    splits, tuned chunk, and latency. Empty list = parity. Shared by
+    ``benchmarks/surface_replan.py`` and ``tests/test_surface.py`` so
+    the two gates can never drift apart. Estimator states are restored
+    afterwards."""
+    surface = manager.surface
+    if not isinstance(surface, DegradationSurface):
+        raise ValueError("manager has no degradation surface to certify")
+    solver = manager._batched_solver_name()
+    mismatches: list[str] = []
+    for name, ps in surface.protocols.items():
+        est = manager.estimators[name]
+        saved = (est._packet_time_s, est._loss)
+        for i, pt in enumerate(ps.packet_time_s):
+            for j, lp in enumerate(ps.loss_p):
+                est._packet_time_s = pt
+                est._loss = lp
+                link = est.current_profile()
+                plan = manager._batched_plans([link], solver)[0]
+                node = ps.node(i, j)
+                if plan.splits != node.splits:
+                    mismatches.append(f"{name}@({pt:.6g},{lp:g}): splits "
+                                      f"{plan.splits} vs {node.splits}")
+                    continue
+                if not plan.splits and manager.n_devices > 1:
+                    continue  # infeasible on both sides: nothing to price
+                cuts = [seg.tx_bytes for seg in plan.segments[:-1]]
+                chunk, _ = optimize_chunk_size(link, cuts)
+                lat = manager._model_for(
+                    replace(link, mtu_bytes=chunk)).end_to_end_s(plan.splits)
+                if chunk != node.chunk_bytes or lat != node.node_latency_s:
+                    mismatches.append(
+                        f"{name}@({pt:.6g},{lp:g}): chunk/lat ({chunk},{lat}) "
+                        f"vs ({node.chunk_bytes},{node.node_latency_s})")
+        est._packet_time_s, est._loss = saved
+    return mismatches

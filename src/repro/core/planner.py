@@ -182,6 +182,22 @@ def plans_from_batched(
     return plans
 
 
+def plan_surface(
+    cost_model: SplitCostModel,
+    protocols: "dict[str, LinkProfile]",
+    n_devices: int,
+    **kwargs,
+):
+    """Precompute a :class:`~repro.core.surface.DegradationSurface`: the
+    best plan, tuned chunk, and latency for every (protocol ×
+    packet-time × loss) link condition, solved in one batched
+    sweep-engine pass. The adaptive manager consumes it for O(1)
+    ``observe()`` replanning; see :mod:`repro.core.surface`."""
+    from repro.core.surface import build_surface  # lazy: keeps import light
+
+    return build_surface(cost_model, protocols, n_devices, **kwargs)
+
+
 def compare_solvers(
     cost_model: SplitCostModel,
     n_devices: int,

@@ -1,0 +1,512 @@
+"""Precomputed degradation surfaces for O(1) adaptive re-planning.
+
+The adaptive manager's ``observe()`` used to re-solve Beam Search over
+every protocol on every hop measurement — a fleet controller calls it on
+every packet, so the solver was the hot loop. But the solver's *input*
+only drifts along two axes per protocol: the estimated per-packet time
+and the estimated loss rate (everything else — the model, the devices,
+the protocol constants — is fixed at deployment). That makes the whole
+decision problem precomputable:
+
+* :class:`DegradationSurface` — for each protocol, a dense
+  (packet-time × loss) grid of link conditions; at every node the best
+  plan (splits + tuned activation chunk), its end-to-end latency, and
+  the runner-up plan from the protocol's plan portfolio. All nodes of
+  all protocols are solved in ONE batched sweep-engine pass
+  (:func:`repro.core.sweep.solve_batched` over a stacked cost tensor).
+
+* *Switch points* — the link-condition boundaries where the argmin plan
+  changes between adjacent grid nodes. These are the degradation
+  thresholds the paper's Sec. VI future work asks for: "at what point
+  does the optimal split move / the protocol switch pay?"
+
+* Bilinear interpolation of latency between grid nodes, so the runtime
+  gets a continuous latency estimate from a discrete surface.
+
+At a grid node the stored decision is **exactly** what the legacy
+re-solve path would compute for the same estimator state (same solver,
+same chunk tuning, same ``end_to_end_s`` floats — the benchmark
+``benchmarks/surface_replan.py`` asserts ``==`` parity node-by-node on
+the NumPy float64 path). Between nodes the plan comes from the nearest
+node and the latency from bilinear interpolation; outside the grid's
+envelope the runtime falls back to an exact re-solve.
+"""
+
+from __future__ import annotations
+
+import time
+from bisect import bisect_right
+from dataclasses import dataclass, replace
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core import sweep as SW
+from repro.core.latency import LinkProfile, SplitCostModel
+
+INF = float("inf")
+
+__all__ = [
+    "DEFAULT_LOSS_GRID",
+    "DEFAULT_PT_SCALES",
+    "DegradationSurface",
+    "ProtocolSurface",
+    "SurfaceLookup",
+    "SwitchPoint",
+    "build_surface",
+    "optimize_chunk_size",
+    "refit_link",
+]
+
+# Default envelope: packet time from nominal up to 512x degradation
+# (geometric — the adaptive example's deepest phase is 400x), loss from
+# the clean channel up to 30%.
+DEFAULT_PT_SCALES: tuple[float, ...] = (1.0, 2.0, 4.0, 8.0, 16.0, 32.0,
+                                        64.0, 128.0, 256.0, 512.0)
+DEFAULT_LOSS_GRID: tuple[float, ...] = (0.0, 0.05, 0.10, 0.20, 0.30)
+
+
+def refit_link(base: LinkProfile, packet_time_s: float,
+               loss_p: float) -> LinkProfile:
+    """Map an estimator state (per-packet time, loss) onto ``base``.
+
+    Single source of truth shared by :class:`LinkEstimator
+    <repro.core.adaptive.LinkEstimator>` and surface construction — the
+    serialization term keeps the base rate, the residual moves into the
+    ack/overhead term — so a surface node's link reproduces the
+    estimator's re-fitted profile bit-for-bit at the same state."""
+    serial = base.mtu_bytes / (base.rate_bytes_per_s * (1.0 - max(loss_p, 0.0)))
+    t_ack = max(0.0, packet_time_s - serial - base.t_prop_s)
+    return replace(base, t_ack_s=t_ack, loss_p=min(loss_p, 0.9))
+
+
+def optimize_chunk_size(
+    link: LinkProfile,
+    cut_bytes: Sequence[int],
+    chunk_candidates: Sequence[int] | None = None,
+) -> tuple[int, float]:
+    """Best activation chunk size for a set of cut sizes (Eq. 7 summed
+    over the plan's hops). Candidates default to divisors-of-MTU-ish
+    steps below the protocol MTU."""
+    if chunk_candidates is None:
+        mtu = link.mtu_bytes
+        chunk_candidates = sorted({mtu, mtu * 3 // 4, mtu // 2, 1200, 250}
+                                  & set(range(1, mtu + 1))
+                                  | {mtu})
+        chunk_candidates = [c for c in chunk_candidates if 0 < c <= mtu]
+    best = (link.mtu_bytes, float("inf"))
+    for chunk in chunk_candidates:
+        trial = replace(link, mtu_bytes=chunk)
+        total = sum(trial.transmission_latency_s(b) for b in cut_bytes)
+        if total < best[1]:
+            best = (chunk, total)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Surface data model
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SwitchPoint:
+    """A link-condition boundary where the argmin plan changes.
+
+    The plan flips somewhere between ``lo`` and ``hi`` on ``axis``
+    (holding the other coordinate at ``fixed``); ``plan_lo``/``plan_hi``
+    are the best splits on either side."""
+
+    protocol: str
+    axis: str  # "packet_time_s" | "loss_p"
+    fixed: float  # the other coordinate's grid value
+    lo: float
+    hi: float
+    plan_lo: tuple[int, ...]
+    plan_hi: tuple[int, ...]
+
+
+@dataclass(frozen=True)
+class SurfaceLookup:
+    """One surface query: the nearest node's decision plus the
+    bilinearly interpolated latency at the exact query point."""
+
+    protocol: str
+    splits: tuple[int, ...]
+    chunk_bytes: int
+    latency_s: float  # bilinear interpolation at the query point
+    node_latency_s: float  # the nearest node's stored latency
+    feasible: bool
+    in_envelope: bool
+
+
+@dataclass(frozen=True)
+class ProtocolSurface:
+    """One protocol's (packet-time × loss) decision grid."""
+
+    protocol: str
+    base: LinkProfile
+    packet_time_s: tuple[float, ...]  # (T,) ascending
+    loss_p: tuple[float, ...]  # (G,) ascending
+    splits: np.ndarray  # (T, G, N-1) int64, -1 where infeasible
+    chunk_bytes: np.ndarray  # (T, G) int64
+    latency_s: np.ndarray  # (T, G) float64, +inf where infeasible
+    runner_splits: np.ndarray  # (T, G, N-1) int64, -1 where absent
+    runner_latency_s: np.ndarray  # (T, G) float64, +inf where absent
+
+    def __post_init__(self):
+        # hot-path caches: plain-Python node decisions and latency rows so
+        # lookups never touch numpy scalars (observe() calls this per hop)
+        T, G = len(self.packet_time_s), len(self.loss_p)
+        nodes = [[None] * G for _ in range(T)]
+        lat = [[0.0] * G for _ in range(T)]
+        for i in range(T):
+            for j in range(G):
+                z = float(self.latency_s[i, j])
+                sp = self.splits[i, j]
+                feas = not (sp.size and (sp < 0).any()) and np.isfinite(z)
+                nodes[i][j] = SurfaceLookup(
+                    protocol=self.protocol,
+                    splits=tuple(int(x) for x in sp) if feas else (),
+                    chunk_bytes=int(self.chunk_bytes[i, j]),
+                    latency_s=z, node_latency_s=z,
+                    feasible=feas, in_envelope=True,
+                )
+                lat[i][j] = z
+        object.__setattr__(self, "_nodes", nodes)
+        object.__setattr__(self, "_lat", lat)
+
+    @property
+    def n_nodes(self) -> int:
+        return len(self.packet_time_s) * len(self.loss_p)
+
+    def node(self, i: int, j: int) -> SurfaceLookup:
+        return self._nodes[i][j]
+
+
+def _cell(axis: Sequence[float], x: float,
+          clamp_low: bool = False) -> tuple[int, int, float, bool]:
+    """Bracket ``x`` in ``axis``: (i0, i1, weight toward i1, inside).
+
+    Clamps outside the envelope (weight 0, ``inside=False``). At an
+    exact node the weight is exactly 0.0, so interpolation returns the
+    node value bitwise. ``clamp_low`` treats below-minimum queries as
+    inside — used for the packet-time axis, whose minimum is the
+    :func:`refit_link` saturation floor (every packet time at or below
+    it maps to the identical link, so the clamp is exact, not an
+    approximation)."""
+    if x <= axis[0]:
+        return 0, 0, 0.0, clamp_low or x == axis[0]
+    if x >= axis[-1]:
+        n = len(axis) - 1
+        return n, n, 0.0, x == axis[-1]
+    i = bisect_right(axis, x) - 1  # axis[i] <= x < axis[i+1]
+    if axis[i] == x:
+        return i, i, 0.0, True
+    return i, i + 1, (x - axis[i]) / (axis[i + 1] - axis[i]), True
+
+
+def _bilinear(z, i0, i1, wt, j0, j1, wl) -> float:
+    """Weighted corner sum over nested-list rows, skipping zero-weight
+    corners so an infeasible (+inf) corner outside the active cell edge
+    cannot poison an on-node or on-edge query with inf*0 = nan."""
+    acc = 0.0
+    r0, r1 = z[i0], z[i1]
+    for w, zz in (((1 - wt) * (1 - wl), r0[j0]),
+                  (wt * (1 - wl), r1[j0]),
+                  ((1 - wt) * wl, r0[j1]),
+                  (wt * wl, r1[j1])):
+        if w:
+            acc += w * zz
+    return acc
+
+
+@dataclass(frozen=True)
+class DegradationSurface:
+    """Per-protocol degradation surfaces + cross-protocol argmin lookup."""
+
+    protocols: Mapping[str, ProtocolSurface]
+    n_devices: int
+    solver: str
+    build_time_s: float
+    solve_time_s: float  # batched sweep-engine passes only
+
+    def __post_init__(self):
+        object.__setattr__(self, "protocols", dict(self.protocols))
+        object.__setattr__(self, "_env", {
+            name: (p.packet_time_s[0], p.packet_time_s[-1],
+                   p.loss_p[0], p.loss_p[-1])
+            for name, p in self.protocols.items()
+        })
+
+    @property
+    def n_nodes(self) -> int:
+        return sum(p.n_nodes for p in self.protocols.values())
+
+    def envelope(self, protocol: str) -> tuple[tuple[float, float],
+                                               tuple[float, float]]:
+        plo, phi, llo, lhi = self._env[protocol]
+        return ((plo, phi), (llo, lhi))
+
+    def in_envelope(self, protocol: str, packet_time_s: float,
+                    loss_p: float) -> bool:
+        """Below-minimum packet times count as inside: the axis minimum
+        is the refit saturation floor, below which every estimate maps
+        to the same link (see :func:`_cell`'s ``clamp_low``)."""
+        plo, phi, llo, lhi = self._env[protocol]
+        return packet_time_s <= phi and llo <= loss_p <= lhi
+
+    def lookup(self, protocol: str, packet_time_s: float,
+               loss_p: float) -> SurfaceLookup:
+        """Nearest-node plan + bilinearly interpolated latency."""
+        p = self.protocols[protocol]
+        i0, i1, wt, ok_t = _cell(p.packet_time_s, packet_time_s,
+                                 clamp_low=True)
+        j0, j1, wl, ok_l = _cell(p.loss_p, loss_p)
+        ni = i1 if wt >= 0.5 else i0
+        nj = j1 if wl >= 0.5 else j0
+        node = p._nodes[ni][nj]
+        lat = _bilinear(p._lat, i0, i1, wt, j0, j1, wl)
+        if lat == node.latency_s and ok_t and ok_l:
+            return node  # on-node query: hand back the cached decision
+        return replace(node, latency_s=lat, in_envelope=ok_t and ok_l)
+
+    def latency_at(self, protocol: str, packet_time_s: float,
+                   loss_p: float) -> float:
+        """Bilinear latency interpolation at an arbitrary link state."""
+        return self.lookup(protocol, packet_time_s, loss_p).latency_s
+
+    def best_lookup(
+        self, states: Mapping[str, tuple[float, float]]
+    ) -> SurfaceLookup | None:
+        """Argmin over protocols, each queried at its own estimator
+        state ``(packet_time_s, loss_p)`` — the O(1) replacement for the
+        per-observe re-solve. Returns None when ANY state has left its
+        protocol's envelope (the precomputed decisions can no longer
+        rank that protocol, so the caller must re-solve exactly) or when
+        no queried node is feasible."""
+        best_lat = INF
+        best: SurfaceLookup | None = None
+        for name, (pt, lp) in states.items():
+            p = self.protocols[name]
+            i0, i1, wt, ok_t = _cell(p.packet_time_s, pt, clamp_low=True)
+            j0, j1, wl, ok_l = _cell(p.loss_p, lp)
+            if not (ok_t and ok_l):
+                return None
+            node = p._nodes[i1 if wt >= 0.5 else i0][j1 if wl >= 0.5 else j0]
+            if not node.feasible:
+                continue
+            lat = _bilinear(p._lat, i0, i1, wt, j0, j1, wl)
+            if lat < best_lat:
+                best_lat, best = lat, node
+        if best is None or best_lat == best.latency_s:
+            return best
+        return replace(best, latency_s=best_lat)
+
+    # -- switch points ------------------------------------------------------
+    def switch_points(self, protocol: str | None = None) -> list[SwitchPoint]:
+        """Boundaries between adjacent grid nodes where the best plan
+        changes — the precomputed 'when does the split move' thresholds.
+        Feasibility boundaries are not plan switches: pairs with an
+        infeasible side are skipped rather than reported with the ``-1``
+        sentinel as a phantom plan."""
+        names = [protocol] if protocol is not None else list(self.protocols)
+        out: list[SwitchPoint] = []
+        for name in names:
+            p = self.protocols[name]
+            T, G = len(p.packet_time_s), len(p.loss_p)
+
+            def plan(i, j):
+                node = p._nodes[i][j]
+                return node.splits if node.feasible else None
+
+            for j in range(G):
+                for i in range(T - 1):
+                    a, b = plan(i, j), plan(i + 1, j)
+                    if a is not None and b is not None and a != b:
+                        out.append(SwitchPoint(
+                            name, "packet_time_s", p.loss_p[j],
+                            p.packet_time_s[i], p.packet_time_s[i + 1], a, b))
+            for i in range(T):
+                for j in range(G - 1):
+                    a, b = plan(i, j), plan(i, j + 1)
+                    if a is not None and b is not None and a != b:
+                        out.append(SwitchPoint(
+                            name, "loss_p", p.packet_time_s[i],
+                            p.loss_p[j], p.loss_p[j + 1], a, b))
+        return out
+
+    # -- construction -------------------------------------------------------
+    @classmethod
+    def from_scenario_grid(
+        cls,
+        grid,  # sweep.ScenarioGrid
+        model: str | None = None,
+        n_devices: int | None = None,
+        **kwargs,
+    ) -> "DegradationSurface":
+        """Build a surface whose axes come from a
+        :class:`~repro.core.sweep.ScenarioGrid`'s link axes: packet
+        times from the grid's ``rate_scale`` values, losses from its
+        ``loss_p`` values (None → each protocol's base loss)."""
+        if model is None:
+            if len(grid.models) != 1:
+                raise ValueError(
+                    f"grid has models {sorted(grid.models)}; pass model=...")
+            model = next(iter(grid.models))
+        if n_devices is None:
+            n_devices = max(grid.n_devices)
+        cost_model = SplitCostModel(
+            profile=grid.models[model], devices=tuple(grid.devices),
+            link=next(iter(grid.links.values())), objective=grid.objective,
+        )
+        # rate_scale scales the serialization rate; for the surface axis we
+        # take 1/rs as the packet-time scale (exact for overhead-free links,
+        # a conservative envelope otherwise). None loss entries pass through
+        # and resolve to each protocol's base loss, like link_variant.
+        pt_scales = sorted({1.0 / rs for rs in grid.rate_scale})
+        return build_surface(
+            cost_model, grid.links, n_devices,
+            pt_scale=tuple(pt_scales) or DEFAULT_PT_SCALES,
+            loss_p=tuple(grid.loss_p),
+            **kwargs,
+        )
+
+
+def build_surface(
+    cost_model: SplitCostModel,
+    protocols: Mapping[str, LinkProfile],
+    n_devices: int,
+    pt_scale: Sequence[float] = DEFAULT_PT_SCALES,
+    loss_p: Sequence[float | None] | None = DEFAULT_LOSS_GRID,
+    solver: str = "batched_beam",
+    beam_width: int = 8,
+    chunk_candidates: Sequence[int] | None = None,
+) -> DegradationSurface:
+    """Precompute a :class:`DegradationSurface` with the sweep engine.
+
+    For every protocol, a (packet-time × loss) grid of estimator states
+    is mapped onto link profiles (:func:`refit_link`), their
+    transmission vectors are stacked against the shared device-local
+    cost tensor, and ALL nodes of ALL protocols are solved in one
+    batched pass. Each node's winning plan then gets its activation
+    chunk tuned and its end-to-end latency priced exactly as the legacy
+    per-observe path would — the stored decision at a node IS the
+    re-solve decision for that state.
+
+    ``pt_scale`` multiplies each protocol's nominal
+    :meth:`~repro.core.latency.LinkProfile.packet_time_s`; ``loss_p``
+    values are absolute, with ``None`` entries resolving to each
+    protocol's base loss (``loss_p=None`` → base loss only) — the same
+    convention as :meth:`ScenarioGrid.link_variant
+    <repro.core.sweep.ScenarioGrid.link_variant>`."""
+    if solver not in SW.BATCHED_SOLVERS:
+        raise ValueError(f"unknown batched solver {solver!r}; "
+                         f"options: {sorted(SW.BATCHED_SOLVERS)}")
+    t0 = time.perf_counter()
+    combine = "max" if cost_model.objective == "bottleneck" else "sum"
+    local = cost_model.local_cost_tensor(n_devices)  # link-independent
+
+    # node enumeration: protocol-major, then packet time, then loss
+    axes: dict[str, tuple[tuple[float, ...], tuple[float, ...]]] = {}
+    links: list[LinkProfile] = []
+    for name, base in protocols.items():
+        # the axis minimum is the refit saturation floor (loss-free
+        # serialization + propagation): refit_link maps every packet time
+        # at or below it to the identical link, so estimates that run
+        # FASTER than the loss-inflated nominal stay on the surface
+        # (clamped exactly) instead of forcing re-solve fallbacks
+        floor = base.mtu_bytes / base.rate_bytes_per_s + base.t_prop_s
+        pts = tuple(sorted({base.packet_time_s() * s for s in pt_scale}
+                           | {floor}))
+        losses = tuple(sorted(
+            {base.loss_p} if loss_p is None
+            else {base.loss_p if lp is None else lp for lp in loss_p}))
+        axes[name] = (pts, losses)
+        for pt in pts:
+            for lp in losses:
+                links.append(refit_link(base, pt, lp))
+
+    TX = np.stack([
+        replace(cost_model, link=lk).transmission_cost_vector()
+        for lk in links
+    ])  # (S, L)
+    C = local[None, :, :, :] + TX[:, None, None, :]
+    kwargs = {"beam_width": beam_width} if solver == "batched_beam" else {}
+    res = SW.solve_batched(C, solver=solver, combine=combine, **kwargs)
+    solve_time = res.wall_time_s
+
+    def tuned_latency(lk: LinkProfile, splits: tuple[int, ...]) -> tuple[int, float]:
+        """Chunk-tune a plan and price it — the legacy adoption arithmetic."""
+        cuts = [cost_model.profile.boundary_act_bytes(b) for b in splits]
+        chunk, _ = optimize_chunk_size(lk, cuts, chunk_candidates)
+        tuned = replace(lk, mtu_bytes=chunk)
+        lat = replace(cost_model, link=tuned).end_to_end_s(splits)
+        return chunk, lat
+
+    surfaces: dict[str, ProtocolSurface] = {}
+    s = 0
+    for name, base in protocols.items():
+        pts, losses = axes[name]
+        T, G = len(pts), len(losses)
+        n_nodes = T * G
+        node_links = links[s:s + n_nodes]
+        node_res_lo = s
+        splits = np.full((T, G, max(n_devices - 1, 0)), -1, dtype=np.int64)
+        chunks = np.zeros((T, G), dtype=np.int64)
+        lats = np.full((T, G), INF)
+        run_splits = np.full_like(splits, -1)
+        run_lats = np.full((T, G), INF)
+
+        # plan portfolio: the distinct feasible plans across this
+        # protocol's nodes, scored on every node in one batched pass —
+        # the per-node runner-up comes from this portfolio
+        portfolio: list[tuple[int, ...]] = []
+        seen: set[tuple[int, ...]] = set()
+        for g in range(n_nodes):
+            sp = res.splits_tuple(node_res_lo + g)
+            if (sp or n_devices == 1) and bool(res.feasible[node_res_lo + g]):
+                if sp not in seen:
+                    seen.add(sp)
+                    portfolio.append(sp)
+        port_cost = None
+        if len(portfolio) >= 2 and n_devices > 1:
+            cand = np.array(portfolio, dtype=np.int64)  # (M, N-1)
+            port_cost = SW.batched_total_cost(
+                C[node_res_lo:node_res_lo + n_nodes], cand, combine)  # (S_g, M)
+
+        for i in range(T):
+            for j in range(G):
+                g = i * G + j
+                ridx = node_res_lo + g
+                if not bool(res.feasible[ridx]):
+                    continue
+                sp = res.splits_tuple(ridx)
+                if not sp and n_devices > 1:
+                    continue
+                lk = node_links[g]
+                chunk, lat = tuned_latency(lk, sp)
+                splits[i, j] = np.asarray(sp, dtype=np.int64)
+                chunks[i, j] = chunk
+                lats[i, j] = lat
+                if port_cost is not None:
+                    # runner-up: cheapest portfolio plan that is not the
+                    # winner, chunk-tuned and priced like the winner
+                    order = np.argsort(port_cost[g], kind="stable")
+                    for m in order:
+                        alt = portfolio[int(m)]
+                        if alt != sp and np.isfinite(port_cost[g, m]):
+                            r_chunk, r_lat = tuned_latency(lk, alt)
+                            run_splits[i, j] = np.asarray(alt, dtype=np.int64)
+                            run_lats[i, j] = r_lat
+                            break
+        surfaces[name] = ProtocolSurface(
+            protocol=name, base=base, packet_time_s=pts, loss_p=losses,
+            splits=splits, chunk_bytes=chunks, latency_s=lats,
+            runner_splits=run_splits, runner_latency_s=run_lats,
+        )
+        s += n_nodes
+
+    return DegradationSurface(
+        protocols=surfaces, n_devices=n_devices, solver=solver,
+        build_time_s=time.perf_counter() - t0, solve_time_s=solve_time,
+    )

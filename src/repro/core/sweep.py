@@ -578,6 +578,17 @@ class ScenarioGrid:
             link=self.link_variant(sc), objective=self.objective,
         )
 
+    def degradation_surface(self, model: str | None = None,
+                            n_devices: int | None = None, **kwargs):
+        """Precompute a :class:`~repro.core.surface.DegradationSurface`
+        whose packet-time/loss axes derive from this grid's
+        ``rate_scale``/``loss_p`` axes (the sweep's link what-ifs become
+        the runtime's O(1) replanning lookup table)."""
+        from repro.core.surface import DegradationSurface  # lazy: no cycle
+
+        return DegradationSurface.from_scenario_grid(
+            self, model=model, n_devices=n_devices, **kwargs)
+
 
 @dataclass(frozen=True)
 class SweepRow:

@@ -45,21 +45,40 @@ class SplitLatencyMeter:
 
     ``bytes_per_token``: what actually crosses a cut per decode step — one
     (B, 1, d_model) activation row (the plan's ``tx_bytes`` is the
-    full-sequence prefill activation)."""
+    full-sequence prefill activation).
+
+    Replan hook: when ``manager`` (an
+    :class:`~repro.core.adaptive.AdaptiveSplitManager`) and ``protocol``
+    are set, every metered hop is fed to ``manager.observe()`` — with a
+    precomputed degradation surface that is an O(1) lookup, cheap enough
+    to run on every token — and when the manager adopts a new decision
+    the meter swaps in the re-materialized plan (``replans`` counts the
+    swaps)."""
 
     plan: SplitPlan | None = None
     link: LinkProfile | None = None
     bytes_per_token: int = 0
     hop_seconds: float = 0.0
     hops: int = 0
+    manager: object | None = None  # AdaptiveSplitManager (duck-typed)
+    protocol: str | None = None
+    replans: int = 0
 
     def on_token(self):
         if self.plan is None or self.link is None:
             return
         for _seg in self.plan.segments[:-1]:
             nbytes = self.bytes_per_token or _seg.tx_bytes
-            self.hop_seconds += self.link.transmission_latency_s(nbytes)
+            hop_s = self.link.transmission_latency_s(nbytes)
+            self.hop_seconds += hop_s
             self.hops += 1
+            if self.manager is not None and self.protocol is not None:
+                decisions = len(self.manager.history)
+                self.manager.observe(self.protocol, nbytes, hop_s)
+                if len(self.manager.history) != decisions:
+                    self.plan = self.manager.current_plan()
+                    self.replans += 1
+                    break  # the remaining hops belonged to the old plan
 
 
 class Server:

@@ -36,6 +36,35 @@ class TestLinkEstimator:
         assert prof.packet_time_s() == pytest.approx(ESP_NOW.packet_time_s(),
                                                      rel=0.02)
 
+    def test_one_lucky_hop_does_not_erase_loss_prior(self):
+        """Regression: the loss EWMA used to decay toward 0 by a full
+        ``alpha`` step on the very first retry-free hop. With the
+        warm-up seed the prior counts as ``loss_warmup`` virtual
+        observations, so a single clean packet barely moves it."""
+        lossy = replace(UDP, loss_p=0.10)  # calibrated prior: 10% loss
+        est = LinkEstimator(lossy, alpha=0.2, loss_warmup=5)
+        est.observe_hop(nbytes=1460, latency_s=0.001)  # one lucky packet
+        assert est.loss_estimate >= 0.095  # kept >= 95% of the prior
+        # the un-warmed estimator would have dropped to 0.08 here
+        assert est.current_profile().loss_p == pytest.approx(
+            est.loss_estimate)
+
+    def test_warmup_still_converges_with_evidence(self):
+        """Warm-up damps single observations, not sustained evidence:
+        a long run of clean hops still drives the loss estimate down."""
+        lossy = replace(UDP, loss_p=0.10)
+        est = LinkEstimator(lossy, alpha=0.2, loss_warmup=5)
+        for _ in range(60):
+            est.observe_hop(nbytes=1460, latency_s=0.001)
+        assert est.loss_estimate < 0.01
+
+    def test_estimate_accessors_track_state(self):
+        est = LinkEstimator(ESP_NOW, alpha=0.5)
+        assert est.packet_time_estimate == ESP_NOW.packet_time_s()
+        assert est.loss_estimate == ESP_NOW.loss_p
+        est.observe_hop(5488, 10 * ESP_NOW.transmission_latency_s(5488))
+        assert est.packet_time_estimate > ESP_NOW.packet_time_s()
+
 
 class TestChunkOptimizer:
     def test_returned_chunk_is_argmin_of_eq7(self):

@@ -55,3 +55,35 @@ class TestServer:
         server.run_until_drained()
         assert meter.hops == 3  # one hop per token for a 2-way split
         assert meter.hop_seconds > 0
+
+    def test_split_meter_replan_hook(self, params):
+        """The meter feeds metered hops to a surface-driven adaptive
+        manager; when the link collapses mid-serve the manager replans
+        and the meter swaps in the re-materialized plan."""
+        from dataclasses import replace
+
+        from repro.core.adaptive import AdaptiveSplitManager
+        from repro.core.profiles import PROTOCOLS, paper_cost_model
+
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+            protocols=dict(PROTOCOLS), n_devices=2,
+            surface_grid={"pt_scale": (1.0, 16.0, 256.0),
+                          "loss_p": (0.0, 0.1)})
+        meter = SplitLatencyMeter(plan=mgr.current_plan(), link=ESP_NOW,
+                                  bytes_per_token=5488,
+                                  manager=mgr, protocol="esp_now")
+        server = Server(CFG, params, slots=1, max_seq=64, meter=meter)
+        server.submit(Request(0, np.array([1], np.int32), max_new_tokens=4))
+        server.run_until_drained()
+        assert mgr._step >= 4  # every metered hop reached the manager
+        assert meter.replans == 0  # healthy modeled link: no thrash
+
+        # collapse the metered link 200x: the hook must swap the plan
+        meter.link = replace(ESP_NOW,
+                             rate_bytes_per_s=ESP_NOW.rate_bytes_per_s / 200)
+        server.submit(Request(1, np.array([2], np.int32), max_new_tokens=40))
+        server.run_until_drained()
+        assert meter.replans >= 1
+        assert meter.plan.splits == mgr.current.splits
+        assert meter.plan.solver == "surface"

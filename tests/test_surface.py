@@ -1,0 +1,451 @@
+"""Degradation-surface tests: construction parity with the exact
+re-solve path, switch-point extraction, bilinear interpolation, envelope
+fallback, and the trace-replay oracle-equivalence contract."""
+
+import math
+from dataclasses import replace
+
+import pytest
+
+from repro.core.adaptive import (
+    AdaptiveSplitManager,
+    LinkEstimator,
+    surface_parity_report,
+)
+from repro.core.latency import (
+    DeviceProfile,
+    LayerCost,
+    LinkProfile,
+    ModelCostProfile,
+    SplitCostModel,
+)
+from repro.core.planner import plan_surface
+from repro.core.profiles import ESP_NOW, PROTOCOLS, paper_cost_model
+from repro.core.surface import (
+    DegradationSurface,
+    build_surface,
+    refit_link,
+)
+from repro.core.sweep import ScenarioGrid
+
+
+# ---------------------------------------------------------------------------
+# Fixtures
+# ---------------------------------------------------------------------------
+
+
+def switchy_cost_model() -> SplitCostModel:
+    """A 3-layer model engineered so the optimal 2-device cut moves with
+    the packet time: cutting after layer 1 sends 2 packets but avoids
+    duplicating the big working set across devices; cutting after layer
+    2 sends 1 packet but pays the working-set duplication. Cheap links
+    prefer the local saving, degraded links the packet saving."""
+    layers = (
+        LayerCost("l1", t_infer_s=0.01, act_bytes=1500, param_bytes=100,
+                  work_bytes=0),
+        LayerCost("l2", t_infer_s=0.01, act_bytes=100, param_bytes=100,
+                  work_bytes=10_000),
+        LayerCost("l3", t_infer_s=0.01, act_bytes=0, param_bytes=100,
+                  work_bytes=10_000),
+    )
+    prof = ModelCostProfile("switchy", layers)
+    dev = DeviceProfile("d", tensor_alloc_s_per_byte=1e-6)
+    link = LinkProfile("lk", mtu_bytes=1000, rate_bytes_per_s=1e6)
+    return SplitCostModel(profile=prof, devices=(dev,), link=link)
+
+
+SMALL_GRID = {"pt_scale": (1.0, 4.0, 16.0, 64.0, 256.0),
+              "loss_p": (0.0, 0.1, 0.3)}
+
+
+@pytest.fixture(scope="module")
+def paper_surface_mgr():
+    return AdaptiveSplitManager(
+        cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+        protocols=dict(PROTOCOLS), n_devices=2, solver="optimal_dp",
+        surface_grid=SMALL_GRID)
+
+
+# ---------------------------------------------------------------------------
+# Construction + structure
+# ---------------------------------------------------------------------------
+
+
+class TestBuildSurface:
+    def test_axes_and_shapes(self):
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(1.0, 8.0, 64.0), loss_p=(0.0, 0.2))
+        ps = surf.protocols["lk"]
+        assert ps.packet_time_s == tuple(
+            m.link.packet_time_s() * s for s in (1.0, 8.0, 64.0))
+        assert ps.loss_p == (0.0, 0.2)
+        assert ps.splits.shape == (3, 2, 1)
+        assert ps.latency_s.shape == (3, 2)
+        assert surf.n_nodes == 6
+
+    def test_nodes_are_feasible_and_priced(self):
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(1.0, 64.0), loss_p=(0.0,))
+        for i in range(2):
+            node = surf.protocols["lk"].node(i, 0)
+            assert node.feasible
+            assert node.splits in ((1,), (2,))
+            assert math.isfinite(node.latency_s)
+            assert 0 < node.chunk_bytes <= m.link.mtu_bytes
+
+    def test_runner_up_is_distinct_and_no_better(self):
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(1.0, 4.0, 16.0, 64.0, 256.0),
+                             loss_p=(0.0,))
+        ps = surf.protocols["lk"]
+        saw_runner = False
+        for i in range(len(ps.packet_time_s)):
+            best = tuple(int(x) for x in ps.splits[i, 0])
+            runner = tuple(int(x) for x in ps.runner_splits[i, 0])
+            if runner != (-1,):
+                saw_runner = True
+                assert runner != best
+                assert ps.runner_latency_s[i, 0] >= ps.latency_s[i, 0]
+        assert saw_runner  # the portfolio has >= 2 plans, so runner-ups exist
+
+    def test_unknown_solver_rejected(self):
+        m = switchy_cost_model()
+        with pytest.raises(ValueError):
+            build_surface(m, {"lk": m.link}, 2, solver="simplex")
+
+    def test_planner_and_grid_exposure(self):
+        m = switchy_cost_model()
+        surf = plan_surface(m, {"lk": m.link}, 2, pt_scale=(1.0, 8.0),
+                            loss_p=(0.0,))
+        assert isinstance(surf, DegradationSurface)
+        grid = ScenarioGrid(
+            models={"switchy": m.profile}, links={"lk": m.link},
+            n_devices=(2,), loss_p=(None, 0.1), rate_scale=(1.0, 0.25),
+            devices=tuple(m.devices))
+        surf2 = grid.degradation_surface()
+        ps = surf2.protocols["lk"]
+        # rate_scale 0.25 -> packet-time scale 4; loss axis {0.0, 0.1}
+        assert ps.packet_time_s == tuple(
+            m.link.packet_time_s() * s for s in (1.0, 4.0))
+        assert ps.loss_p == (0.0, 0.1)
+        assert surf2.n_devices == 2
+
+
+# ---------------------------------------------------------------------------
+# Switch points
+# ---------------------------------------------------------------------------
+
+
+class TestSwitchPoints:
+    def test_plan_switches_with_packet_time(self):
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(1.0, 4.0, 16.0, 64.0, 256.0),
+                             loss_p=(0.0,))
+        ps = surf.protocols["lk"]
+        cheap = tuple(int(x) for x in ps.splits[0, 0])
+        degraded = tuple(int(x) for x in ps.splits[-1, 0])
+        assert cheap == (1,)  # cheap link: avoid the work-set duplication
+        assert degraded == (2,)  # degraded link: minimize packets
+        sps = surf.switch_points("lk")
+        assert len(sps) >= 1
+        sp = sps[0]
+        assert sp.axis == "packet_time_s"
+        assert sp.plan_lo == (1,) and sp.plan_hi == (2,)
+        assert ps.packet_time_s[0] <= sp.lo < sp.hi <= ps.packet_time_s[-1]
+
+    def test_constant_plan_has_no_switch_points(self, paper_surface_mgr):
+        # on the calibrated MobileNet the min-activation cut dominates the
+        # whole envelope, so the surface must NOT invent boundaries
+        surf = paper_surface_mgr.surface
+        for name in surf.protocols:
+            plans = {tuple(int(x) for x in surf.protocols[name].splits[i, j])
+                     for i in range(len(surf.protocols[name].packet_time_s))
+                     for j in range(len(surf.protocols[name].loss_p))}
+            if len(plans) == 1:
+                assert surf.switch_points(name) == []
+
+
+# ---------------------------------------------------------------------------
+# Lookup + interpolation
+# ---------------------------------------------------------------------------
+
+
+class TestLookupInterpolation:
+    def test_node_lookup_is_exact(self):
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(1.0, 8.0, 64.0), loss_p=(0.0, 0.2))
+        ps = surf.protocols["lk"]
+        for i, pt in enumerate(ps.packet_time_s):
+            for j, lp in enumerate(ps.loss_p):
+                hit = surf.lookup("lk", pt, lp)
+                node = ps.node(i, j)
+                assert hit.splits == node.splits
+                assert hit.chunk_bytes == node.chunk_bytes
+                assert hit.latency_s == node.latency_s  # bitwise, not approx
+                assert hit.in_envelope
+
+    def test_bilinear_midpoint_and_bounds(self):
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(1.0, 3.0), loss_p=(0.0, 0.2))
+        ps = surf.protocols["lk"]
+        (p0, p1), (l0, l1) = (ps.packet_time_s, ps.loss_p)
+        corners = [float(ps.latency_s[i, j]) for i in (0, 1) for j in (0, 1)]
+        mid = surf.latency_at("lk", (p0 + p1) / 2, (l0 + l1) / 2)
+        assert mid == pytest.approx(sum(corners) / 4)
+        assert min(corners) - 1e-12 <= mid <= max(corners) + 1e-12
+        # interpolation along one axis only
+        edge = surf.latency_at("lk", (p0 + p1) / 2, l0)
+        assert edge == pytest.approx(
+            (float(ps.latency_s[0, 0]) + float(ps.latency_s[1, 0])) / 2)
+
+    def test_same_plan_cell_interpolation_is_exact(self):
+        """Within a cell whose corners share a plan, latency is affine in
+        the packet time, so linear interpolation reproduces the exact
+        re-solve latency (the interpolation-error contract's best case)."""
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(64.0, 256.0), loss_p=(0.0,))
+        ps = surf.protocols["lk"]
+        # the deep-degradation cell (the axis also contains the saturation
+        # floor below the requested scales); both corners hold one plan
+        assert tuple(ps.splits[-2, 0]) == tuple(ps.splits[-1, 0])
+        pt = (ps.packet_time_s[-2] + ps.packet_time_s[-1]) / 2
+        hit = surf.lookup("lk", pt, 0.0)
+        link = refit_link(m.link, pt, 0.0)
+        exact = replace(m, link=replace(link, mtu_bytes=hit.chunk_bytes)) \
+            .end_to_end_s(hit.splits)
+        assert hit.latency_s == pytest.approx(exact, rel=1e-12)
+
+    def test_out_of_envelope_flagged(self):
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(1.0, 8.0), loss_p=(0.0, 0.2))
+        pt_hi = surf.protocols["lk"].packet_time_s[-1]
+        assert not surf.lookup("lk", pt_hi * 2, 0.0).in_envelope
+        assert not surf.lookup("lk", pt_hi, 0.5).in_envelope
+        assert not surf.in_envelope("lk", pt_hi, 0.5)
+        assert surf.in_envelope("lk", pt_hi, 0.2)
+
+    def test_below_floor_packet_time_clamps_exactly(self):
+        """Packet times at or below the axis minimum (the refit
+        saturation floor) are inside the envelope and resolve to the
+        floor node — refit_link maps them all to the identical link, so
+        the clamp is exact, not an approximation."""
+        m = switchy_cost_model()
+        surf = build_surface(m, {"lk": m.link}, 2,
+                             pt_scale=(1.0, 8.0), loss_p=(0.0,))
+        ps = surf.protocols["lk"]
+        floor = ps.packet_time_s[0]
+        assert refit_link(m.link, floor / 3, 0.0) == refit_link(m.link, floor, 0.0)
+        hit = surf.lookup("lk", floor / 3, 0.0)
+        assert hit.in_envelope
+        assert hit.latency_s == ps.node(0, 0).latency_s
+        assert surf.in_envelope("lk", 0.0, 0.0)
+
+    def test_faster_than_nominal_link_keeps_surface_engaged(self):
+        """Regression: a protocol whose base profile carries loss (so its
+        nominal packet time is loss-inflated) must not fall off the
+        surface when clean hops measure FASTER than nominal — that was
+        pushing the estimate below the old envelope minimum and silently
+        disabling the O(1) path for every protocol, forever."""
+        m = switchy_cost_model()
+        lossy = replace(m.link, loss_p=0.10)  # nominal = serial/(1-0.1)
+        mgr = AdaptiveSplitManager(
+            cost_model=m, protocols={"lk": lossy}, n_devices=2,
+            surface_grid={"pt_scale": (1.0, 8.0, 64.0),
+                          "loss_p": (0.0, None)})  # span down to clean
+        true_time = lossy.packets(1500) * (lossy.mtu_bytes
+                                           / lossy.rate_bytes_per_s)
+        for _ in range(20):
+            mgr.observe("lk", 1500, true_time)  # retry-free, faster than nominal
+        assert mgr.estimators["lk"].packet_time_estimate \
+            < lossy.packet_time_s()
+        assert mgr.surface_hits == 20
+        assert mgr.exact_fallbacks == 0
+
+
+# ---------------------------------------------------------------------------
+# Oracle equivalence (the acceptance contract)
+# ---------------------------------------------------------------------------
+
+
+class TestOracleEquivalence:
+    def test_every_grid_node_matches_resolve_oracle(self, paper_surface_mgr):
+        """At every surface node, (splits, chunk, latency) equal the
+        exact re-solve decision for the same estimator state — exact
+        ``==`` on the NumPy float64 path (the same
+        ``surface_parity_report`` gate ``benchmarks/surface_replan.py``
+        asserts, so the two can never drift apart)."""
+        assert surface_parity_report(paper_surface_mgr) == []
+        # and the estimators were restored afterwards
+        for name, est in paper_surface_mgr.estimators.items():
+            assert est._packet_time_s == est.base.packet_time_s()
+            assert est._loss == est.base.loss_p
+
+    def test_trace_replay_matches_legacy_phase_ends(self):
+        """Replaying the same hop-latency trace through the surface-driven
+        manager and the legacy per-observe re-solve manager yields the
+        same plan at the end of every drift phase, and the surface's
+        interpolated latency stays within the interpolation-error bound
+        (its cell's corner spread) of the legacy exact estimate."""
+        mk = dict(cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+                  protocols=dict(PROTOCOLS), n_devices=2, solver="optimal_dp")
+        surf_mgr = AdaptiveSplitManager(**mk, surface_grid=SMALL_GRID)
+        leg_mgr = AdaptiveSplitManager(**mk, surface=None)
+        assert surf_mgr.current.splits == leg_mgr.current.splits
+        assert surf_mgr.current.protocol == leg_mgr.current.protocol
+
+        nbytes = 5488
+        surf = surf_mgr.surface
+        for factor in (1, 40, 250):
+            lat = factor * ESP_NOW.transmission_latency_s(nbytes)
+            for _ in range(80):
+                surf_mgr.observe("esp_now", nbytes, lat)
+                leg_mgr.observe("esp_now", nbytes, lat)
+                # interpolated latency of the legacy current plan's
+                # protocol vs the exact estimate, bounded by cell spread
+                est = leg_mgr.estimators[leg_mgr.current.protocol]
+                exact = leg_mgr._current_latency_under_estimates()
+                ps = surf.protocols[leg_mgr.current.protocol]
+                interp = surf.latency_at(leg_mgr.current.protocol,
+                                         est._packet_time_s, est._loss)
+                spread = _cell_spread(ps, est._packet_time_s, est._loss)
+                assert abs(interp - exact) <= spread + 1e-9 * max(1.0, exact)
+            assert surf_mgr.current.protocol == leg_mgr.current.protocol
+            assert surf_mgr.current.splits == leg_mgr.current.splits
+        assert surf_mgr.exact_fallbacks == 0
+        assert surf_mgr.surface_hits > 0
+
+
+def _cell_spread(ps, pt, loss) -> float:
+    """Worst-case interpolation error bound: the latency spread across
+    the corners of the cell containing (pt, loss)."""
+    from repro.core.surface import _cell
+
+    i0, i1, _, _ = _cell(ps.packet_time_s, pt)
+    j0, j1, _, _ = _cell(ps.loss_p, loss)
+    vals = [float(ps.latency_s[i, j]) for i in (i0, i1) for j in (j0, j1)]
+    return max(vals) - min(vals)
+
+
+# ---------------------------------------------------------------------------
+# Manager integration: hot path, hysteresis, envelope fallback
+# ---------------------------------------------------------------------------
+
+
+class TestSurfaceManager:
+    def test_healthy_network_all_surface_hits(self):
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+            protocols=dict(PROTOCOLS), n_devices=2, surface_grid=SMALL_GRID)
+        nbytes = 5488
+        good = ESP_NOW.transmission_latency_s(nbytes)
+        for _ in range(40):
+            mgr.observe("esp_now", nbytes, good)
+        assert mgr.surface_hits == 40
+        assert mgr.exact_fallbacks == 0
+        assert len(mgr.history) == 1  # no thrash on a stable network
+
+    def test_envelope_breach_falls_back_to_exact(self):
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+            protocols=dict(PROTOCOLS), n_devices=2, surface_grid=SMALL_GRID)
+        nbytes = 5488
+        # 10^6x nominal: one EWMA step jumps far beyond the 256x envelope
+        cataclysm = 1e6 * ESP_NOW.transmission_latency_s(nbytes)
+        mgr.observe("esp_now", nbytes, cataclysm)
+        assert mgr.exact_fallbacks == 1
+        # the fallback still replans (protocol switch away from esp_now)
+        assert mgr.current.protocol != "esp_now"
+        assert "envelope re-solve" in mgr.history[-1].reason
+
+    @pytest.mark.parametrize("objective", ["sum", "bottleneck"])
+    def test_fast_current_latency_bitwise_matches_exact(self, objective):
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now",
+                                        objective=objective),
+            protocols=dict(PROTOCOLS), n_devices=3, surface_grid=SMALL_GRID)
+        est = mgr.estimators[mgr.current.protocol]
+        for pt_f, loss in ((1.0, 0.0), (7.3, 0.02), (130.0, 0.25)):
+            est._packet_time_s = est.base.packet_time_s() * pt_f
+            est._loss = loss
+            fast = mgr._fast_current_latency(est._packet_time_s, est._loss)
+            exact = mgr._current_latency_under_estimates()
+            assert fast == exact  # same float operation order, bitwise
+
+    def test_prebuilt_surface_is_used_verbatim(self):
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        surf = build_surface(m, dict(PROTOCOLS), 2, **SMALL_GRID,
+                             solver="batched_beam")
+        mgr = AdaptiveSplitManager(cost_model=m, protocols=dict(PROTOCOLS),
+                                   n_devices=2, surface=surf)
+        assert mgr.surface is surf
+
+    def test_scalar_only_solvers_still_construct(self):
+        """Regression: surface="auto" must not refuse solvers without a
+        batched twin — they keep the legacy re-solve path."""
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+            protocols=dict(PROTOCOLS), n_devices=2, solver="first_fit")
+        assert mgr.surface is None  # legacy path, as before this PR
+        assert mgr.current is not None
+        mgr.observe("esp_now", 5488, ESP_NOW.transmission_latency_s(5488))
+        assert mgr.exact_fallbacks == 0 and mgr.surface_hits == 0
+
+    def test_greedy_solver_maps_to_batched_surface(self):
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+            protocols=dict(PROTOCOLS), n_devices=2, solver="greedy",
+            surface_grid=SMALL_GRID)
+        assert isinstance(mgr.surface, DegradationSurface)
+        assert mgr.surface.solver == "batched_greedy"
+
+    def test_no_identical_readoption_across_switch_point(self):
+        """Regression: mid-cell the interpolated best latency can undercut
+        the exact current-plan estimate even when the nearest node holds
+        the SAME plan; that must not re-record the identical decision on
+        every observe."""
+        m = switchy_cost_model()
+        mgr = AdaptiveSplitManager(
+            cost_model=m, protocols={"lk": m.link}, n_devices=2,
+            surface_grid={"pt_scale": (1.0, 4.0, 16.0, 64.0),
+                          "loss_p": (0.0,)})
+        assert mgr.surface.switch_points("lk")  # the plan does move
+        base_t = m.link.transmission_latency_s(1500)
+        for factor in (1, 2, 5, 9, 12, 20, 40, 60):  # sweep across the switch
+            for _ in range(30):
+                mgr.observe("lk", 1500, factor * base_t)
+        decisions = [(d.protocol, d.splits, d.chunk_bytes) for d in mgr.history]
+        assert all(a != b for a, b in zip(decisions, decisions[1:]))
+        assert len(mgr.history) <= 4  # a handful of real switches, no thrash
+        assert mgr.current.splits == (2,)  # ended degraded: min-packet cut
+
+    def test_base_loss_respected_by_none_axis(self):
+        """Regression: ``loss_p=None`` entries resolve to each protocol's
+        base loss (ScenarioGrid semantics), so a lossy link's estimator
+        starts inside its surface envelope."""
+        m = switchy_cost_model()
+        lossy = replace(m.link, loss_p=1e-4)
+        surf = build_surface(m, {"lk": lossy}, 2,
+                             pt_scale=(1.0, 8.0), loss_p=(None, 0.2))
+        assert surf.protocols["lk"].loss_p == (1e-4, 0.2)
+        assert surf.in_envelope("lk", lossy.packet_time_s(), lossy.loss_p)
+        grid = ScenarioGrid(
+            models={"switchy": m.profile}, links={"lk": lossy},
+            n_devices=(2,), devices=tuple(m.devices))  # loss_p=(None,)
+        surf2 = grid.degradation_surface()
+        assert surf2.protocols["lk"].loss_p == (1e-4,)
+
+    def test_refit_link_matches_estimator_profile(self):
+        est = LinkEstimator(ESP_NOW, alpha=0.5)
+        for _ in range(5):
+            est.observe_hop(5488, 17 * ESP_NOW.transmission_latency_s(5488),
+                            retries=1)
+        assert refit_link(ESP_NOW, est._packet_time_s, est._loss) \
+            == est.current_profile()

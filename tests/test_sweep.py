@@ -343,6 +343,83 @@ class TestScenarioGridSweep:
         csv = result.to_csv()
         assert len(csv.strip().splitlines()) == result.n_scenarios + 1
 
+
+class TestSweepResultSerialization:
+    """Field-level round-trip coverage for ``to_json``/``to_csv``/
+    ``best(**filters)`` (the previously untested serialization paths)."""
+
+    @pytest.fixture(scope="class")
+    def result(self):
+        return SW.sweep(tiny_grid())
+
+    def test_json_rows_reproduce_sweep_rows(self, result):
+        import json
+
+        payload = json.loads(result.to_json(indent=2))
+        assert payload["solver"] == result.solver
+        assert payload["backend"] == result.backend
+        assert payload["solve_time_s"] == result.solve_time_s
+        assert payload["build_time_s"] == result.build_time_s
+        assert payload["scenarios_per_sec"] == result.scenarios_per_sec
+        for row, d in zip(result.rows, payload["rows"]):
+            assert d["model"] == row.scenario.model
+            assert d["protocol"] == row.scenario.protocol
+            assert d["n_devices"] == row.scenario.n_devices
+            assert d["loss_p"] == row.scenario.loss_p
+            assert d["rate_scale"] == row.scenario.rate_scale
+            assert tuple(d["splits"]) == row.splits
+            assert d["feasible"] == row.feasible
+            assert d["total_latency_s"] == row.total_latency_s
+
+    def test_json_cleans_non_finite_floats(self):
+        import json
+
+        layers = tuple(
+            LayerCost(f"l{i}", 0.01, act_bytes=100, param_bytes=10_000)
+            for i in range(5)
+        )
+        grid = SW.ScenarioGrid(
+            models={"big": ModelCostProfile("big", layers)},
+            links={"lk": LinkProfile("lk", 512, 1e6)},
+            n_devices=(2,),
+            devices=(DeviceProfile("d", mem_limit_bytes=5_000),),
+        )
+        result = SW.sweep(grid)
+        assert not result.rows[0].feasible
+        payload = json.loads(result.to_json())  # must not emit bare inf
+        row = payload["rows"][0]
+        assert row["total_latency_s"] is None
+        assert row["objective_cost_s"] is None
+        assert row["feasible"] is False
+
+    def test_csv_parses_back_to_rows(self, result):
+        lines = result.to_csv().strip().splitlines()
+        header = lines[0].split(",")
+        assert header[:3] == ["model", "protocol", "n_devices"]
+        for row, line in zip(result.rows, lines[1:]):
+            rec = dict(zip(header, line.split(",")))
+            assert rec["model"] == row.scenario.model
+            assert int(rec["n_devices"]) == row.scenario.n_devices
+            assert rec["splits"] == "|".join(str(x) for x in row.splits)
+            assert float(rec["total_latency_s"]) == row.total_latency_s
+            assert rec["feasible"] == str(row.feasible)
+        assert result.to_csv().endswith("\n")
+
+    def test_best_multi_filter_and_ordering(self, result):
+        best = result.best(n_devices=2, protocol="fast")
+        pool = [r for r in result.rows if r.feasible
+                and r.scenario.n_devices == 2 and r.scenario.protocol == "fast"]
+        assert best.total_latency_s == min(r.total_latency_s for r in pool)
+        # unfiltered best is the global argmin
+        assert result.best().total_latency_s == min(
+            r.total_latency_s for r in result.rows if r.feasible)
+
+    def test_best_rejects_unmatched_filters(self, result):
+        with pytest.raises(LookupError):
+            result.best(protocol="carrier_pigeon")
+        with pytest.raises(AttributeError):
+            result.best(nonexistent_field=1)
+
     def test_plan_split_batch_matches_singletons(self):
         grid = tiny_grid()
         models = [grid.cost_model(sc) for sc in grid.scenarios()
