@@ -1,30 +1,66 @@
 """Benchmark orchestrator: one section per paper table/figure + the
 roofline and beyond-paper planner benchmarks.
 
-Emits ``name,us_per_call,derived`` CSV lines at the end (one per
-benchmark row) in addition to the human-readable sections."""
+Usage:
+  PYTHONPATH=src python benchmarks/run.py                 # every section
+  PYTHONPATH=src python benchmarks/run.py sweep_grid ...  # named sections
+
+Unknown section names fail with a one-line error listing the available
+sections (no stack trace). Emits ``name,us_per_call,derived`` CSV lines
+at the end (one per benchmark row) in addition to the human-readable
+sections."""
 
 from __future__ import annotations
 
+import argparse
+import importlib
+import sys
 import time
+from pathlib import Path
+
+# make `from benchmarks import ...` work when launched as a script
+# (`python benchmarks/run.py` puts benchmarks/ itself on sys.path, not
+# the repo root that contains the package)
+_ROOT = str(Path(__file__).resolve().parent.parent)
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
+
+BENCHMARKS = (
+    "table2_transmission",
+    "table3_processing",
+    "table4_rtt",
+    "fig3_heuristics",
+    "fig4_beam_vs_brute",
+    "planner_tpu",
+    "sweep_grid",
+    "surface_replan",
+    "roofline",
+)
 
 
-def main() -> None:
-    from benchmarks import (
-        fig3_heuristics,
-        fig4_beam_vs_brute,
-        planner_tpu,
-        roofline,
-        surface_replan,
-        sweep_grid,
-        table2_transmission,
-        table3_processing,
-        table4_rtt,
-    )
+def main(argv: list[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("names", nargs="*", metavar="benchmark",
+                    help=f"benchmarks to run (default: all). "
+                         f"Available: {', '.join(BENCHMARKS)}")
+    args = ap.parse_args(argv)
+    unknown = [n for n in args.names if n not in BENCHMARKS]
+    if unknown:
+        raise SystemExit(
+            f"error: unknown benchmark name(s): {', '.join(unknown)}\n"
+            f"available benchmarks: {', '.join(BENCHMARKS)}")
+    selected = set(args.names) if args.names else set(BENCHMARKS)
 
     csv_lines = ["name,us_per_call,derived"]
 
-    def timed(name, mod, derive):
+    def timed(name, derive):
+        # import lazily so `run.py one_section` does not pay the
+        # startup cost of every other benchmark module
+        if name not in selected:
+            return None
+        mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.perf_counter()
         rows = mod.run()
         us = (time.perf_counter() - t0) * 1e6 / max(1, len(rows))
@@ -33,50 +69,58 @@ def main() -> None:
             csv_lines.append(f"{name}[{i}],{us:.1f},{derive(r)}")
         return rows
 
-    timed("table2_transmission", table2_transmission,
+    timed("table2_transmission",
           lambda r: f"{r['protocol']}/{r['split']}={r['model_ms']}ms"
                     f"/pk{r['model_packets']}")
-    timed("table3_processing", table3_processing,
+    timed("table3_processing",
           lambda r: f"dev{r['device']}_infer={r['inference_ms']}ms")
-    timed("table4_rtt", table4_rtt,
+    timed("table4_rtt",
           lambda r: f"{r['protocol']}_rtt={r['rtt_s']}s_err{r['rtt_err_pct']}%")
-    timed("fig3_heuristics", fig3_heuristics,
+    timed("fig3_heuristics",
           lambda r: f"{r['model']}/{r['solver']}/N{r['devices']}="
                     f"{r['latency_s']}s")
-    timed("fig4_beam_vs_brute", fig4_beam_vs_brute,
+    timed("fig4_beam_vs_brute",
           lambda r: f"N{r['devices']}_beam={r['beam_s']}s_brute={r['brute_s']}s")
-    timed("planner_tpu", planner_tpu,
+    timed("planner_tpu",
           lambda r: f"{r['arch']}/{r['link']}_gain={r['gain_vs_uniform_pct']}%")
-    # fleet sweep: one summary row (scenarios/sec + scalar-vs-batched speedup);
-    # us_per_call reflects the BATCHED engine only (run() also times the
-    # ~100x-slower scalar baseline for the speedup figure)
-    sweep_report = sweep_grid.run(smoke=True)
-    sweep_us = sweep_report["batched_wall_s"] * 1e6 / max(1, sweep_report["n_scenarios"])
-    csv_lines.append(
-        f"sweep_grid[0],{sweep_us:.1f},"
-        f"speedup={sweep_report['speedup_x']}x"
-        f"_sps={sweep_report['scenarios_per_sec_batched']}"
-        f"_parity={sweep_report['parity_ok']}")
-    print(f"\n=== sweep_grid (smoke): {sweep_report['n_scenarios']} scenarios, "
-          f"{sweep_report['speedup_x']}x over scalar loop, "
-          f"parity={sweep_report['parity_ok']} ===")
-    # surface replanning: one summary row (observe() throughput of the
-    # precomputed degradation surface vs the per-observe re-solve path)
-    surf_report = surface_replan.run(smoke=True)
-    csv_lines.append(
-        f"surface_replan[0],{surf_report['observe_us_surface']},"
-        f"speedup={surf_report['speedup_x']}x"
-        f"_nodes={surf_report['n_nodes']}"
-        f"_parity={surf_report['parity_ok']}")
-    print(f"=== surface_replan (smoke): {surf_report['n_nodes']} nodes, "
-          f"{surf_report['speedup_x']}x observe() speedup, "
-          f"parity={surf_report['parity_ok']} ===")
-    try:
-        timed("roofline", roofline,
-              lambda r: f"{r['arch']}/{r['shape']}_dom={r['dominant']}"
-                        f"_frac={r['roofline_frac']:.2f}")
-    except Exception as e:  # dry-run artifacts may not exist yet
-        print(f"[roofline] skipped: {e}")
+    if "sweep_grid" in selected:
+        # fleet sweep: one summary row (scenarios/sec + scalar-vs-batched
+        # speedup); us_per_call reflects the BATCHED engine only (run()
+        # also times the ~100x-slower scalar baseline for the speedup)
+        from benchmarks import sweep_grid
+
+        sweep_report = sweep_grid.run(smoke=True)
+        sweep_us = (sweep_report["batched_wall_s"] * 1e6
+                    / max(1, sweep_report["n_scenarios"]))
+        csv_lines.append(
+            f"sweep_grid[0],{sweep_us:.1f},"
+            f"speedup={sweep_report['speedup_x']}x"
+            f"_sps={sweep_report['scenarios_per_sec_batched']}"
+            f"_parity={sweep_report['parity_ok']}")
+        print(f"\n=== sweep_grid (smoke): {sweep_report['n_scenarios']} "
+              f"scenarios, {sweep_report['speedup_x']}x over scalar loop, "
+              f"parity={sweep_report['parity_ok']} ===")
+    if "surface_replan" in selected:
+        # surface replanning: one summary row (observe() throughput of the
+        # precomputed degradation surface vs the per-observe re-solve path)
+        from benchmarks import surface_replan
+
+        surf_report = surface_replan.run(smoke=True)
+        csv_lines.append(
+            f"surface_replan[0],{surf_report['observe_us_surface']},"
+            f"speedup={surf_report['speedup_x']}x"
+            f"_nodes={surf_report['n_nodes']}"
+            f"_parity={surf_report['parity_ok']}")
+        print(f"=== surface_replan (smoke): {surf_report['n_nodes']} nodes, "
+              f"{surf_report['speedup_x']}x observe() speedup, "
+              f"parity={surf_report['parity_ok']} ===")
+    if "roofline" in selected:
+        try:
+            timed("roofline",
+                  lambda r: f"{r['arch']}/{r['shape']}_dom={r['dominant']}"
+                            f"_frac={r['roofline_frac']:.2f}")
+        except Exception as e:  # dry-run artifacts may not exist yet
+            print(f"[roofline] skipped: {e}")
 
     print("\n=== CSV ===")
     for line in csv_lines:

@@ -7,6 +7,12 @@ node the stored (splits, chunk, latency) must equal the exact re-solve
 decision for the same estimator state — exact ``==`` on the NumPy
 float64 path (the PR-1 bit-exactness contract extended to the surface).
 
+A second section measures the multi-N family build: surfaces for every
+fleet size 2..5 built by ``build_surfaces`` in ONE batched solve
+(all-k beam: the fleet-size axis folds into the scenario axis) vs a
+per-N ``build_surface`` loop, asserting the family is node-for-node
+``==`` to the per-N builds.
+
 Usage:
   PYTHONPATH=src python benchmarks/surface_replan.py            # full grid
   PYTHONPATH=src python benchmarks/surface_replan.py --smoke    # CI smoke
@@ -22,10 +28,14 @@ import argparse
 import json
 import time
 
+import numpy as np
+
 from repro.core.adaptive import AdaptiveSplitManager, surface_parity_report
 from repro.core.profiles import ESP_NOW, PROTOCOLS, paper_cost_model
+from repro.core.surface import build_surface, build_surfaces
 
 N_DEVICES = 5
+FAMILY_SIZES = (2, 3, 4, 5)
 SPEEDUP_TARGET = 50.0
 
 # drifting-link trace: (packet-time factor over nominal, observes)
@@ -59,6 +69,55 @@ def _drive(mgr, repeats: int = 1) -> float:
     return (time.perf_counter() - t0) / n
 
 
+def _family_section(smoke: bool) -> dict:
+    """Multi-N surfaces: one batched all-k solve vs a per-N build loop."""
+    grid = {"pt_scale": (1.0, 4.0, 16.0, 64.0, 256.0, 512.0),
+            "loss_p": (0.0, 0.1, 0.3)} if smoke else {}
+    cost_model = paper_cost_model("mobilenet_v2", "esp_now")
+    protocols = dict(PROTOCOLS)
+    repeats = 3  # best-of, after a warm-up pass each
+
+    family_wall = float("inf")
+    for _ in range(repeats + 1):  # first pass warms allocators/caches
+        t0 = time.perf_counter()
+        family = build_surfaces(cost_model, protocols, FAMILY_SIZES,
+                                solver="batched_beam", **grid)
+        family_wall = min(family_wall, time.perf_counter() - t0)
+
+    loop_wall = float("inf")
+    for _ in range(repeats + 1):
+        t0 = time.perf_counter()
+        singles = {n: build_surface(cost_model, protocols, n,
+                                    solver="batched_beam", **grid)
+                   for n in FAMILY_SIZES}
+        loop_wall = min(loop_wall, time.perf_counter() - t0)
+
+    mismatches = []
+    for n in FAMILY_SIZES:
+        for name in protocols:
+            a = family[n].protocols[name]
+            b = singles[n].protocols[name]
+            if not (np.array_equal(a.splits, b.splits)
+                    and np.array_equal(a.chunk_bytes, b.chunk_bytes)
+                    and np.array_equal(a.latency_s, b.latency_s)):
+                mismatches.append(f"N={n} {name}")
+    return {
+        "sizes": list(FAMILY_SIZES),
+        "n_nodes_per_size": family[FAMILY_SIZES[0]].n_nodes,
+        "family_build_s": round(family_wall, 4),
+        "family_solve_s": round(family[FAMILY_SIZES[0]].solve_time_s, 4),
+        "per_n_loop_s": round(loop_wall, 4),
+        "per_n_solve_s": round(sum(s.solve_time_s
+                                   for s in singles.values()), 4),
+        "build_speedup_x": round(loop_wall / family_wall, 2),
+        "solve_speedup_x": round(
+            sum(s.solve_time_s for s in singles.values())
+            / family[FAMILY_SIZES[0]].solve_time_s, 2),
+        "parity_ok": not mismatches,
+        "parity_mismatches": mismatches,
+    }
+
+
 def run(smoke: bool = True) -> dict:
     surface_mgr, resolve_mgr = _managers(smoke)
     surf = surface_mgr.surface
@@ -67,6 +126,7 @@ def run(smoke: bool = True) -> dict:
     surface_s = _drive(surface_mgr, repeats=3 if smoke else 10)
     # the same node-by-node oracle check tier-1 runs (tests/test_surface.py)
     mismatches = surface_parity_report(surface_mgr)
+    family = _family_section(smoke)
 
     total = surface_mgr.surface_hits + surface_mgr.exact_fallbacks
     return {
@@ -88,6 +148,7 @@ def run(smoke: bool = True) -> dict:
             and surface_mgr.current.protocol == resolve_mgr.current.protocol,
         "parity_ok": not mismatches,
         "parity_mismatches": mismatches[:10],
+        "multi_n": family,
     }
 
 
@@ -115,6 +176,12 @@ def main() -> None:
     if not report["parity_ok"]:
         for m in report["parity_mismatches"]:
             print("  MISMATCH:", m)
+    fam = report["multi_n"]
+    print(f"multi-N family (sizes {fam['sizes']}): one all-k solve "
+          f"{fam['family_build_s']}s (solver {fam['family_solve_s']}s) vs "
+          f"per-N loop {fam['per_n_loop_s']}s (solver {fam['per_n_solve_s']}s)"
+          f" -> build {fam['build_speedup_x']}x, solve "
+          f"{fam['solve_speedup_x']}x; node parity: {fam['parity_ok']}")
 
     if args.json:
         with open(args.json, "w") as f:
@@ -123,6 +190,7 @@ def main() -> None:
         print(f"wrote {args.json}")
 
     assert report["parity_ok"], "surface diverged from the re-solve oracle"
+    assert fam["parity_ok"], "multi-N family diverged from per-N builds"
     if report["speedup_x"] < SPEEDUP_TARGET:
         print(f"WARNING: speedup {report['speedup_x']}x below the "
               f"{SPEEDUP_TARGET}x target")

@@ -11,7 +11,9 @@ few milliseconds and prints:
   1. the best protocol + split per fleet size under nominal conditions,
   2. how the best plan shifts as the link degrades (the re-planning
      surface the AdaptiveSplitManager walks at runtime),
-  3. engine throughput vs the scalar per-scenario loop.
+  3. how heterogeneous device mixes (a fast gateway tail, degraded
+     nodes) move the optimal split — priced in the SAME batched pass,
+  4. engine throughput vs the scalar per-scenario loop.
 
 Run: PYTHONPATH=src python examples/fleet_sweep.py
 """
@@ -19,6 +21,7 @@ Run: PYTHONPATH=src python examples/fleet_sweep.py
 from __future__ import annotations
 
 import time
+from dataclasses import replace
 
 from repro.core.profiles import ESP32, PROTOCOLS, mobilenet_cost_profile
 from repro.core.sweep import ScenarioGrid, sweep
@@ -32,6 +35,17 @@ def main():
         loss_p=(None, 0.01, 0.05, 0.10),
         rate_scale=(1.0, 0.5, 0.25, 0.125),
         devices=(ESP32,),
+        # heterogeneous what-ifs ride the same batched pass: a fleet
+        # whose tail node is a 4x-faster gateway, and one downgraded
+        # to half-speed ESP32s (mix=None keeps the homogeneous fleet)
+        device_mixes={
+            "gateway_tail": (ESP32, ESP32, ESP32, ESP32,
+                             replace(ESP32, name="gateway",
+                                     compute_scale=0.25,
+                                     mem_limit_bytes=None)),
+            "slow_nodes": (replace(ESP32, name="esp32_half",
+                                   compute_scale=2.0),),
+        },
     )
     t0 = time.perf_counter()
     result = sweep(grid, solver="batched_dp")
@@ -39,10 +53,11 @@ def main():
     print(f"swept {result.n_scenarios} scenarios in {wall * 1e3:.1f} ms "
           f"({result.scenarios_per_sec:,.0f} scenarios/s)")
 
-    print("\n-- best protocol per fleet size (nominal link) --")
+    print("\n-- best protocol per fleet size (nominal link, homogeneous) --")
     for n in grid.n_devices:
         rows = [r for r in result.rows
                 if r.feasible and r.scenario.n_devices == n
+                and r.scenario.mix is None
                 and r.scenario.loss_p is None and r.scenario.rate_scale == 1.0]
         if not rows:
             print(f"  N={n}: no feasible plan")
@@ -58,6 +73,7 @@ def main():
         for lp in grid.loss_p:
             rows = [r for r in result.rows
                     if r.feasible and r.scenario.n_devices == 3
+                    and r.scenario.mix is None
                     and r.scenario.loss_p == lp and r.scenario.rate_scale == rs]
             if not rows:
                 continue
@@ -73,6 +89,7 @@ def main():
         for lp in (p for p in grid.loss_p):
             rows = [r for r in result.rows
                     if r.feasible and r.scenario.n_devices == 3
+                    and r.scenario.mix is None
                     and r.scenario.loss_p == lp and r.scenario.rate_scale == rs]
             if not rows:
                 continue
@@ -87,6 +104,19 @@ def main():
     else:
         print("\nno protocol switches across this grid "
               "(one protocol dominates everywhere)")
+
+    print("\n-- heterogeneous fleets (N=5, nominal link) --")
+    for mx in grid.mix_names:
+        rows = [r for r in result.rows
+                if r.feasible and r.scenario.n_devices == 5
+                and r.scenario.mix == mx
+                and r.scenario.loss_p is None and r.scenario.rate_scale == 1.0]
+        if not rows:
+            print(f"  {mx or 'homogeneous'}: no feasible plan")
+            continue
+        best = min(rows, key=lambda r: r.total_latency_s)
+        print(f"  {mx or 'homogeneous':13s} {best.scenario.protocol:8s} "
+              f"splits={best.splits} latency {best.total_latency_s:.3f}s")
 
 
 if __name__ == "__main__":

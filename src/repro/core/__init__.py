@@ -1,15 +1,21 @@
 """Core: the paper's contribution — split-latency model, solvers, planner.
 
-Public API:
+Public API (documented in ``docs/api.md``; layer map in
+``docs/architecture.md``):
   latency    — Eq. 4-8 cost model (LinkProfile / DeviceProfile / SplitCostModel)
   solvers    — beam / greedy / first_fit / random_fit / brute_force / optimal_dp
   planner    — plan_split (IoT), plan_pipeline (TPU PP), compare_solvers,
-               plan_split_batch (vectorized fleet planning)
+               plan_split_batch (vectorized fleet planning, heterogeneous
+               fleet sizes + device mixes)
   sweep      — batched solvers over stacked C[k,a,b] cost tensors +
-               ScenarioGrid fleet sweeps (protocol x fleet x loss x rate)
+               ScenarioGrid fleet sweeps (protocol x mix x fleet x loss
+               x rate), all-k beam, per-scenario fleet-size vectors
   surface    — precomputed degradation surfaces (per-protocol packet-time
                x loss grids -> best plan + switch points + interpolation)
-               for O(1) adaptive replanning
+               for O(1) adaptive replanning; build_surfaces solves every
+               fleet size in one batched pass
+  adaptive   — LinkEstimator + AdaptiveSplitManager runtime replanning;
+               fleet_managers for mixed-fleet-size deployments
   profiles   — paper-calibrated ESP32 + protocol tables; TPU v5e constants
   executor   — run_split / run_unsplit segment execution with wire simulation
   quantization — int8 PTQ + activation wire format
@@ -43,6 +49,7 @@ from repro.core.surface import (  # noqa: F401
     SurfaceLookup,
     SwitchPoint,
     build_surface,
+    build_surfaces,
     refit_link,
 )
 # NOTE: the sweep() entry point itself is deliberately NOT re-exported
@@ -55,7 +62,9 @@ from repro.core.sweep import (  # noqa: F401
     SweepResult,
     SweepRow,
     batched_beam_search,
+    batched_beam_search_all_k,
     batched_greedy_search,
+    batched_greedy_search_all_k,
     batched_optimal_dp,
     batched_total_cost,
     stack_cost_tensors,
@@ -71,4 +80,14 @@ from repro.core.solvers import (  # noqa: F401
     optimal_dp,
     random_fit,
     total_cost,
+)
+# NOTE: `repro.core.adaptive` likewise stays a submodule attribute; it
+# imports planner/surface/sweep, so it must come after them here.
+from repro.core.adaptive import (  # noqa: F401
+    AdaptiveSplitManager,
+    LinkEstimator,
+    PlanDecision,
+    fleet_managers,
+    optimize_chunk_size,
+    surface_parity_report,
 )

@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass, field, replace
+from typing import Sequence
 
 import numpy as np
 
@@ -41,9 +42,19 @@ from repro.core.planner import SplitPlan, _build_plan, plan_split, plans_from_ba
 from repro.core.surface import (  # noqa: F401  (optimize_chunk_size re-exported)
     DegradationSurface,
     build_surface,
+    build_surfaces,
     optimize_chunk_size,
     refit_link,
 )
+
+
+def _batched_twin(solver: str) -> str:
+    """Scalar solver name → its batched twin (identity for names that
+    are already batched or have no twin). The SINGLE source of this
+    mapping — shared by :meth:`AdaptiveSplitManager._batched_solver_name`
+    and :func:`fleet_managers`."""
+    return {"beam": "batched_beam", "optimal_dp": "batched_dp",
+            "greedy": "batched_greedy"}.get(solver, solver)
 
 
 class LinkEstimator:
@@ -214,8 +225,7 @@ class AdaptiveSplitManager:
 
     # -- internals ---------------------------------------------------------------
     def _batched_solver_name(self) -> str:
-        return {"beam": "batched_beam", "optimal_dp": "batched_dp",
-                "greedy": "batched_greedy"}.get(self.solver, self.solver)
+        return _batched_twin(self.solver)
 
     def _model_for(self, link: LinkProfile) -> SplitCostModel:
         return replace(self.cost_model, link=link)
@@ -349,6 +359,50 @@ class AdaptiveSplitManager:
         name, splits, chunk, lat = self._best_available()
         if name is not None:
             self._adopt(name, splits, chunk, lat, reason)
+
+
+def fleet_managers(
+    cost_model: SplitCostModel,
+    protocols: dict[str, LinkProfile],
+    n_devices: Sequence[int],
+    solver: str = "beam",
+    surface_grid: dict | None = None,
+    **manager_kwargs,
+) -> dict[int, AdaptiveSplitManager]:
+    """Adaptive managers for a heterogeneous fleet of deployments — one
+    per fleet size in ``n_devices`` — with ALL their degradation
+    surfaces precomputed in ONE batched solver pass.
+
+    Building each manager with ``surface="auto"`` would re-solve the
+    whole (protocol × packet-time × loss) grid once per fleet size;
+    this constructor instead calls
+    :func:`repro.core.surface.build_surfaces` (all-k DP / per-scenario
+    fleet-size beam) and hands every manager its prebuilt surface, so a
+    mixed-size deployment pays one solve. Device heterogeneity rides
+    along: ``cost_model.devices`` may hold per-position profiles (device
+    ``k`` of every fleet runs ``cost_model.device(k)``, as in
+    :class:`~repro.core.latency.SplitCostModel`).
+
+    ``surface_grid`` passes extra axes/kwargs to ``build_surfaces``
+    (like ``AdaptiveSplitManager.surface_grid``); ``manager_kwargs``
+    reach each :class:`AdaptiveSplitManager` (e.g.
+    ``replan_threshold``). Duplicate sizes collapse; returned dict is
+    keyed by fleet size in first-seen order."""
+    sizes = tuple(dict.fromkeys(int(n) for n in n_devices))
+    batched = _batched_twin(solver)
+    if batched not in SW.BATCHED_SOLVERS:
+        raise ValueError(
+            f"solver {solver!r} has no batched twin to precompute "
+            f"surfaces with; options: beam, optimal_dp, greedy, "
+            f"{', '.join(sorted(SW.BATCHED_SOLVERS))}")
+    surfaces = build_surfaces(cost_model, protocols, sizes,
+                              solver=batched, **(surface_grid or {}))
+    return {
+        n: AdaptiveSplitManager(
+            cost_model=cost_model, protocols=dict(protocols), n_devices=n,
+            solver=solver, surface=surfaces[n], **manager_kwargs)
+        for n in sizes
+    }
 
 
 def surface_parity_report(manager: AdaptiveSplitManager) -> list[str]:

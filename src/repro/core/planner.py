@@ -132,7 +132,7 @@ def plan_split(
 
 def plan_split_batch(
     cost_models: Sequence[SplitCostModel],
-    n_devices: int,
+    n_devices: int | Sequence[int],
     solver: str = "batched_dp",
     backend: str = "numpy",
     **solver_kwargs,
@@ -141,33 +141,58 @@ def plan_split_batch(
 
     All ``cost_models`` must share a layer count (same model graph;
     links/devices/objectives may differ per scenario — the fleet
-    what-if case). Returns one :class:`SplitPlan` per input, in order.
-    The amortization is the point: S scenarios cost one tensor solve
+    what-if case, including heterogeneous device mixes: each cost
+    model carries its own device tuple into its tensor slice).
+    ``n_devices`` may be a single fleet size or one per cost model
+    (heterogeneous fleet sizes batch in the same pass; the tensor is
+    stacked at the largest size and each scenario reads its own
+    prefix). Returns one :class:`SplitPlan` per input, in order. The
+    amortization is the point: S scenarios cost one tensor solve
     instead of S Python-loop DP runs (see ``benchmarks/sweep_grid.py``)."""
     if not cost_models:
         return []
     L = cost_models[0].profile.num_layers
-    if not 1 <= n_devices <= L:  # same contract as plan_split
-        raise ValueError(f"n_devices={n_devices} out of range for L={L}")
+    if isinstance(n_devices, int):
+        n_list = [n_devices] * len(cost_models)
+    else:
+        n_list = [int(n) for n in n_devices]
+        if len(n_list) != len(cost_models):
+            raise ValueError(
+                f"n_devices has {len(n_list)} entries for "
+                f"{len(cost_models)} cost models")
+    for n in n_list:
+        if not 1 <= n <= L:  # same contract as plan_split
+            raise ValueError(f"n_devices={n} out of range for L={L}")
     objectives = {m.objective for m in cost_models}
     if len(objectives) != 1:
         raise ValueError(f"cost_models mix objectives {sorted(objectives)}")
     combine = "max" if cost_models[0].objective == "bottleneck" else "sum"
-    C = SW.stack_cost_tensors(cost_models, n_devices)
+    # per-model export sizes: each cost model's device tuple only has to
+    # cover its OWN fleet (smaller fleets get +inf-padded device slices
+    # the solvers never read)
+    C = SW.stack_cost_tensors(
+        cost_models, n_devices if isinstance(n_devices, int) else n_list)
+    ns = None if isinstance(n_devices, int) else np.asarray(n_list, np.int64)
     res = SW.solve_batched(C, solver=solver, combine=combine, backend=backend,
-                           **solver_kwargs)
-    return plans_from_batched(cost_models, res, n_devices,
+                           n_devices=ns, **solver_kwargs)
+    return plans_from_batched(cost_models, res, n_list,
                               nodes_expanded=int(np.prod(C.shape[1:])))
 
 
 def plans_from_batched(
     cost_models: Sequence[SplitCostModel],
     res,  # sweep.BatchedSolverResult
-    n_devices: int,
+    n_devices: int | Sequence[int],
     nodes_expanded: int = 0,
 ) -> list[SplitPlan]:
     """Materialize per-scenario :class:`SplitPlan`\\ s from one batched
-    solver result (shared by the planner and the adaptive manager)."""
+    solver result (shared by the planner and the adaptive manager).
+    ``n_devices``: one fleet size for all scenarios, or one per
+    scenario."""
+    if isinstance(n_devices, int):
+        n_list = [n_devices] * len(cost_models)
+    else:
+        n_list = [int(n) for n in n_devices]
     wall = res.wall_time_s / max(1, len(cost_models))
     plans = []
     for i, m in enumerate(cost_models):
@@ -178,7 +203,7 @@ def plans_from_batched(
             wall_time_s=wall,
             nodes_expanded=nodes_expanded,
         )
-        plans.append(_build_plan(m, sr, n_devices))
+        plans.append(_build_plan(m, sr, n_list[i]))
     return plans
 
 

@@ -23,6 +23,10 @@ decision problem precomputable:
 * Bilinear interpolation of latency between grid nodes, so the runtime
   gets a continuous latency estimate from a discrete surface.
 
+* :func:`build_surfaces` — surface *families* for several fleet sizes
+  in ONE batched solve (all-k DP table sharing; all-k beam/greedy
+  block batching) — no per-N re-solve loop on any solver path.
+
 At a grid node the stored decision is **exactly** what the legacy
 re-solve path would compute for the same estimator state (same solver,
 same chunk tuning, same ``end_to_end_s`` floats — the benchmark
@@ -54,6 +58,7 @@ __all__ = [
     "SurfaceLookup",
     "SwitchPoint",
     "build_surface",
+    "build_surfaces",
     "optimize_chunk_size",
     "refit_link",
 ]
@@ -70,11 +75,28 @@ def refit_link(base: LinkProfile, packet_time_s: float,
                loss_p: float) -> LinkProfile:
     """Map an estimator state (per-packet time, loss) onto ``base``.
 
-    Single source of truth shared by :class:`LinkEstimator
-    <repro.core.adaptive.LinkEstimator>` and surface construction — the
+    Args:
+      base: the protocol's deployment-time :class:`LinkProfile`.
+      packet_time_s: estimated expected per-packet time.
+      loss_p: estimated loss probability (clamped to 0.9 on the link).
+
+    Returns the base profile re-fitted so that
+    ``profile.packet_time_s()`` reproduces the estimate: the
     serialization term keeps the base rate, the residual moves into the
-    ack/overhead term — so a surface node's link reproduces the
-    estimator's re-fitted profile bit-for-bit at the same state."""
+    ack/overhead term (floored at 0 — estimates faster than loss-free
+    serialization + propagation saturate, which is why surface axes
+    include that floor as their minimum).
+
+    Invariant (single-sourcing): this function is the ONLY
+    estimator-state → :class:`LinkProfile` mapping. Both
+    :meth:`LinkEstimator.current_profile
+    <repro.core.adaptive.LinkEstimator.current_profile>` and surface
+    construction call it, so a surface node's link reproduces the
+    estimator's re-fitted profile bit-for-bit at the same state.
+    Changing either caller to do its own mapping (or editing this
+    arithmetic in one place only) breaks the node-exact ``==`` parity
+    that ``tests/test_surface.py`` and ``benchmarks/surface_replan.py``
+    assert."""
     serial = base.mtu_bytes / (base.rate_bytes_per_s * (1.0 - max(loss_p, 0.0)))
     t_ack = max(0.0, packet_time_s - serial - base.t_prop_s)
     return replace(base, t_ack_s=t_ack, loss_p=min(loss_p, 0.9))
@@ -342,34 +364,60 @@ class DegradationSurface:
         grid,  # sweep.ScenarioGrid
         model: str | None = None,
         n_devices: int | None = None,
+        mix: str | None = None,
         **kwargs,
     ) -> "DegradationSurface":
         """Build a surface whose axes come from a
         :class:`~repro.core.sweep.ScenarioGrid`'s link axes: packet
         times from the grid's ``rate_scale`` values, losses from its
-        ``loss_p`` values (None → each protocol's base loss)."""
-        if model is None:
-            if len(grid.models) != 1:
-                raise ValueError(
-                    f"grid has models {sorted(grid.models)}; pass model=...")
-            model = next(iter(grid.models))
+        ``loss_p`` values (None → each protocol's base loss).
+        ``n_devices`` defaults to the grid's largest fleet size; ``mix``
+        selects one of the grid's ``device_mixes`` (defaults to the
+        shared ``devices`` fleet, or the grid's only mix)."""
         if n_devices is None:
             n_devices = max(grid.n_devices)
-        cost_model = SplitCostModel(
-            profile=grid.models[model], devices=tuple(grid.devices),
-            link=next(iter(grid.links.values())), objective=grid.objective,
-        )
-        # rate_scale scales the serialization rate; for the surface axis we
-        # take 1/rs as the packet-time scale (exact for overhead-free links,
-        # a conservative envelope otherwise). None loss entries pass through
-        # and resolve to each protocol's base loss, like link_variant.
-        pt_scales = sorted({1.0 / rs for rs in grid.rate_scale})
+        cost_model, pt_scales, losses = _grid_surface_args(grid, model, mix)
         return build_surface(
             cost_model, grid.links, n_devices,
-            pt_scale=tuple(pt_scales) or DEFAULT_PT_SCALES,
-            loss_p=tuple(grid.loss_p),
+            pt_scale=pt_scales, loss_p=losses,
             **kwargs,
         )
+
+
+def _grid_surface_args(grid, model: str | None, mix: str | None):
+    """Shared ScenarioGrid → surface-axis derivation (single- and
+    multi-N construction paths must never drift apart)."""
+    if model is None:
+        if len(grid.models) != 1:
+            raise ValueError(
+                f"grid has models {sorted(grid.models)}; pass model=...")
+        model = next(iter(grid.models))
+    if mix is None and not grid.devices:
+        if len(grid.device_mixes or {}) != 1:
+            raise ValueError(
+                f"grid has device mixes {sorted(grid.device_mixes or {})} "
+                f"and no shared devices; pass mix=...")
+        mix = next(iter(grid.device_mixes))
+    if mix is not None:
+        if not grid.device_mixes:
+            raise ValueError(
+                f"mix={mix!r} given but the grid has no device_mixes")
+        if mix not in grid.device_mixes:
+            raise ValueError(f"unknown device mix {mix!r}; "
+                             f"options: {sorted(grid.device_mixes)}")
+        devices = grid.device_mixes[mix]
+    else:
+        devices = tuple(grid.devices)
+    cost_model = SplitCostModel(
+        profile=grid.models[model], devices=devices,
+        link=next(iter(grid.links.values())), objective=grid.objective,
+    )
+    # rate_scale scales the serialization rate; for the surface axis we
+    # take 1/rs as the packet-time scale (exact for overhead-free links,
+    # a conservative envelope otherwise). None loss entries pass through
+    # and resolve to each protocol's base loss, like link_variant.
+    pt_scales = tuple(sorted({1.0 / rs for rs in grid.rate_scale}))
+    return cost_model, pt_scales or DEFAULT_PT_SCALES, tuple(grid.loss_p)
 
 
 def build_surface(
@@ -393,18 +441,78 @@ def build_surface(
     per-observe path would — the stored decision at a node IS the
     re-solve decision for that state.
 
-    ``pt_scale`` multiplies each protocol's nominal
-    :meth:`~repro.core.latency.LinkProfile.packet_time_s`; ``loss_p``
-    values are absolute, with ``None`` entries resolving to each
-    protocol's base loss (``loss_p=None`` → base loss only) — the same
-    convention as :meth:`ScenarioGrid.link_variant
-    <repro.core.sweep.ScenarioGrid.link_variant>`."""
+    Args:
+      cost_model: device/model side of the problem (its link is ignored;
+        ``protocols`` supplies the links). Heterogeneous per-device
+        fleets work: device ``k`` is ``cost_model.device(k)``.
+      protocols: name → base :class:`LinkProfile` for every candidate
+        protocol.
+      n_devices: the fleet size to plan for. For several fleet sizes at
+        once use :func:`build_surfaces` (one batched solve for all).
+      pt_scale: multipliers on each protocol's nominal
+        :meth:`~repro.core.latency.LinkProfile.packet_time_s`; the
+        refit saturation floor is always added as the axis minimum.
+      loss_p: absolute loss values; ``None`` entries resolve to each
+        protocol's base loss (``loss_p=None`` → base loss only) — the
+        same convention as :meth:`ScenarioGrid.link_variant
+        <repro.core.sweep.ScenarioGrid.link_variant>`.
+      solver: a :data:`repro.core.sweep.BATCHED_SOLVERS` name.
+      beam_width: Algorithm-1 width when ``solver="batched_beam"``.
+      chunk_candidates: explicit activation-chunk candidates for
+        :func:`optimize_chunk_size` (None → per-protocol defaults).
+
+    Returns the surface for ``n_devices`` (node decisions bit-identical
+    to the legacy re-solve at every grid node)."""
+    return build_surfaces(
+        cost_model, protocols, (n_devices,), pt_scale=pt_scale,
+        loss_p=loss_p, solver=solver, beam_width=beam_width,
+        chunk_candidates=chunk_candidates,
+    )[n_devices]
+
+
+def build_surfaces(
+    cost_model: SplitCostModel,
+    protocols: Mapping[str, LinkProfile],
+    n_devices: Sequence[int],
+    pt_scale: Sequence[float] = DEFAULT_PT_SCALES,
+    loss_p: Sequence[float | None] | None = DEFAULT_LOSS_GRID,
+    solver: str = "batched_beam",
+    beam_width: int = 8,
+    chunk_candidates: Sequence[int] | None = None,
+) -> dict[int, DegradationSurface]:
+    """Precompute surfaces for SEVERAL fleet sizes in one batched solve.
+
+    The multi-N entry point behind :func:`build_surface` (which requests
+    one size): all (protocol × packet-time × loss) nodes of ALL
+    requested fleet sizes are solved in a single batched solver pass —
+    the all-k DP table answers every size at once for
+    ``solver="batched_dp"``, and for beam/greedy the fleet-size axis
+    folds into the scenario axis with a per-scenario ``n_devices``
+    vector (see :func:`repro.core.sweep.batched_beam_search_all_k`).
+    There is no per-N re-solve loop on any solver path.
+
+    Every returned surface is node-for-node identical to calling
+    :func:`build_surface` with that single fleet size (the property
+    suite asserts exact ``==``). ``build_time_s``/``solve_time_s`` on
+    each surface record the SHARED family build (one pass), not a
+    per-size cost. Args otherwise as in :func:`build_surface`."""
     if solver not in SW.BATCHED_SOLVERS:
         raise ValueError(f"unknown batched solver {solver!r}; "
                          f"options: {sorted(SW.BATCHED_SOLVERS)}")
+    sizes = tuple(n_devices)
+    if not sizes:
+        raise ValueError("n_devices must name at least one fleet size")
+    if len(set(sizes)) != len(sizes):
+        raise ValueError(f"n_devices has duplicates: {sizes}")
+    for n in sizes:
+        if n < 1:
+            raise ValueError(f"fleet size must be >= 1, got {n}")
+    n_max = max(sizes)
     t0 = time.perf_counter()
     combine = "max" if cost_model.objective == "bottleneck" else "sum"
-    local = cost_model.local_cost_tensor(n_devices)  # link-independent
+    # link-independent device-local tensor at the largest size; smaller
+    # fleets are prefixes (device k's matrix does not depend on N)
+    local = cost_model.local_cost_tensor(n_max)
 
     # node enumeration: protocol-major, then packet time, then loss
     axes: dict[str, tuple[tuple[float, ...], tuple[float, ...]]] = {}
@@ -432,8 +540,57 @@ def build_surface(
     ])  # (S, L)
     C = local[None, :, :, :] + TX[:, None, None, :]
     kwargs = {"beam_width": beam_width} if solver == "batched_beam" else {}
-    res = SW.solve_batched(C, solver=solver, combine=combine, **kwargs)
-    solve_time = res.wall_time_s
+
+    # ONE batched pass answers every requested fleet size
+    res_by_n: dict[int, SW.BatchedSolverResult]
+    if solver == "batched_dp":
+        # all-k trick: the DP table at device k IS the k-device answer
+        all_k = SW.batched_optimal_dp(C, combine=combine, return_all_k=True)
+        res_by_n = {n: all_k[n] for n in sizes}
+        solve_time = all_k[n_max].wall_time_s
+    elif solver == "batched_beam":
+        # all-k beam: fleet sizes as blocks over the shared tensor
+        res_by_n = SW.batched_beam_search_all_k(
+            C, combine=combine, fleet_sizes=sizes, **kwargs)
+        solve_time = res_by_n[n_max].wall_time_s
+    else:
+        # all-k greedy: same block construction as the beam
+        res_by_n = SW.batched_greedy_search_all_k(
+            C, combine=combine, fleet_sizes=sizes, **kwargs)
+        solve_time = res_by_n[n_max].wall_time_s
+
+    assembled = {
+        n: _assemble_protocol_surfaces(
+            cost_model, protocols, axes, links, C, res_by_n[n], n,
+            combine, chunk_candidates)
+        for n in sizes
+    }
+    # shared family wall: every surface reports the one batched build
+    wall = time.perf_counter() - t0
+    return {
+        n: DegradationSurface(
+            protocols=assembled[n], n_devices=n, solver=solver,
+            build_time_s=wall, solve_time_s=solve_time,
+        )
+        for n in sizes
+    }
+
+
+def _assemble_protocol_surfaces(
+    cost_model: SplitCostModel,
+    protocols: Mapping[str, LinkProfile],
+    axes: Mapping[str, tuple[tuple[float, ...], tuple[float, ...]]],
+    links: Sequence[LinkProfile],
+    C: np.ndarray,
+    res: "SW.BatchedSolverResult",
+    n_devices: int,
+    combine: str,
+    chunk_candidates: Sequence[int] | None,
+) -> dict[str, ProtocolSurface]:
+    """Per-node pricing for one fleet size: chunk-tune and price each
+    node's winning plan (the legacy adoption arithmetic, so node
+    decisions stay bit-identical to a re-solve) and pick its runner-up
+    from the protocol's plan portfolio."""
 
     def tuned_latency(lk: LinkProfile, splits: tuple[int, ...]) -> tuple[int, float]:
         """Chunk-tune a plan and price it — the legacy adoption arithmetic."""
@@ -470,9 +627,10 @@ def build_surface(
                     portfolio.append(sp)
         port_cost = None
         if len(portfolio) >= 2 and n_devices > 1:
-            cand = np.array(portfolio, dtype=np.int64)  # (M, N-1)
+            cand = np.array(portfolio, dtype=np.int64)  # (M, n-1)
             port_cost = SW.batched_total_cost(
-                C[node_res_lo:node_res_lo + n_nodes], cand, combine)  # (S_g, M)
+                C[node_res_lo:node_res_lo + n_nodes, :n_devices],
+                cand, combine)  # (S_g, M)
 
         for i in range(T):
             for j in range(G):
@@ -505,8 +663,4 @@ def build_surface(
             runner_splits=run_splits, runner_latency_s=run_lats,
         )
         s += n_nodes
-
-    return DegradationSurface(
-        protocols=surfaces, n_devices=n_devices, solver=solver,
-        build_time_s=time.perf_counter() - t0, solve_time_s=solve_time,
-    )
+    return surfaces

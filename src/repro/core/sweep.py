@@ -33,9 +33,26 @@ A stacked cost tensor ``C`` has shape ``(S, N, L, L)`` with
 Split points are 1-indexed layer boundaries, matching the scalar
 solvers.
 
+Fleet-size and device heterogeneity batch too: every batched solver
+accepts a per-scenario ``n_devices`` vector (scenario ``s`` is solved
+for ``n_devices[s]`` devices, reading only ``C[s, :n_devices[s]]``),
+:func:`batched_beam_search_all_k` answers every fleet size in one
+vectorized pass, and :class:`ScenarioGrid` scenarios may draw their
+per-device profiles from a named ``device_mixes`` bank (heterogeneous
+fleets — COMSPLIT-style mixed device classes — batch in the same
+tensor pass as homogeneous ones).
+
 The scalar solvers remain the oracle: every batched solver here is
 property-tested to return bit-identical best splits (see
-``tests/test_sweep.py``).
+``tests/test_sweep.py`` and ``tests/test_solver_properties.py``).
+
+Import invariant (do not "simplify" away): ``repro.core`` re-exports
+the *names* defined here but deliberately NOT the :func:`sweep`
+function itself — the attribute ``repro.core.sweep`` must keep
+resolving to this submodule (``import repro.core.sweep as SW`` and
+``importlib.import_module("repro.core.sweep")`` both rely on it; a
+shadowing function once broke the planner). Get the function with
+``from repro.core.sweep import sweep``.
 """
 
 from __future__ import annotations
@@ -64,7 +81,9 @@ __all__ = [
     "SweepResult",
     "SweepRow",
     "batched_beam_search",
+    "batched_beam_search_all_k",
     "batched_greedy_search",
+    "batched_greedy_search_all_k",
     "batched_optimal_dp",
     "batched_total_cost",
     "stack_cost_tensors",
@@ -78,13 +97,36 @@ __all__ = [
 # ---------------------------------------------------------------------------
 
 
-def stack_cost_tensors(models: Sequence[SplitCostModel], n_devices: int) -> np.ndarray:
+def stack_cost_tensors(
+    models: Sequence[SplitCostModel],
+    n_devices: int | Sequence[int],
+) -> np.ndarray:
     """Stack per-scenario cost tensors into ``(S, N, L, L)``.
 
     All models must share the same layer count ``L`` (same model graph;
     links/devices may differ) — that is what makes the scenario axis
-    dense."""
-    tensors = [m.segment_cost_tensor(n_devices) for m in models]
+    dense. ``n_devices`` may be one fleet size for all models or one
+    per model: each tensor is then exported at its OWN size (so a
+    model's device tuple only has to cover its own fleet) and padded
+    with +inf device slices up to the largest — slices the solvers
+    never read under a matching per-scenario ``n_devices`` vector."""
+    if isinstance(n_devices, (int, np.integer)):
+        n_list = [int(n_devices)] * len(models)
+    else:
+        n_list = [int(n) for n in n_devices]
+        if len(n_list) != len(models):
+            raise ValueError(f"n_devices has {len(n_list)} entries for "
+                             f"{len(models)} models")
+    if not models:
+        raise ValueError("stack_cost_tensors needs at least one model")
+    n_max = max(n_list)
+    tensors = []
+    for m, n in zip(models, n_list):
+        t = m.segment_cost_tensor(n)
+        if n < n_max:
+            t = np.concatenate(
+                [t, np.full((n_max - n,) + t.shape[1:], INF)], axis=0)
+        tensors.append(t)
     Ls = {t.shape[-1] for t in tensors}
     if len(Ls) != 1:
         raise ValueError(f"scenario tensors disagree on L: {sorted(Ls)}")
@@ -97,6 +139,30 @@ def _combine_ufunc(combine: str):
     if combine == "max":
         return np.maximum
     raise ValueError(f"unknown combine {combine!r}")
+
+
+def _normalize_ns(n_devices, Sn: int, N: int) -> np.ndarray:
+    """Per-scenario fleet sizes as an (S,) int64 vector.
+
+    ``None`` means every scenario uses the tensor's full device axis
+    ``N``; a scalar broadcasts; a vector must have one entry in
+    ``[1, N]`` per scenario (scenario ``s`` then reads only the
+    ``C[s, :n_devices[s]]`` prefix — device ``k``'s cost matrix never
+    depends on the fleet size, so prefixes of one stacked tensor are
+    exact sub-problems)."""
+    if n_devices is None:
+        return np.full(Sn, N, dtype=np.int64)
+    ns = np.asarray(n_devices, dtype=np.int64)
+    if ns.ndim == 0:
+        ns = np.full(Sn, int(ns), dtype=np.int64)
+    if ns.shape != (Sn,):
+        raise ValueError(
+            f"n_devices must be None, a scalar, or shape ({Sn},); got {ns.shape}")
+    if ns.size and (int(ns.min()) < 1 or int(ns.max()) > N):
+        raise ValueError(
+            f"per-scenario n_devices must lie in [1, {N}], "
+            f"got [{int(ns.min())}, {int(ns.max())}]")
+    return ns
 
 
 def batched_total_cost(
@@ -133,20 +199,40 @@ def batched_total_cost(
 
 
 def _per_scenario_total_cost(
-    C: np.ndarray, splits: np.ndarray, combine: str = "sum"
+    C: np.ndarray,
+    splits: np.ndarray,
+    combine: str = "sum",
+    n_devices_s: np.ndarray | None = None,
 ) -> np.ndarray:
     """Combined cost of scenario ``s``'s OWN configuration ``splits[s]``
-    (shape (S, N-1) -> (S,)); +inf for non-increasing bounds."""
+    (shape (S, N-1) -> (S,)); +inf for non-increasing bounds.
+
+    With ``n_devices_s`` only scenario ``s``'s first ``n_s - 1`` split
+    columns are read; trailing boundaries collapse to ``L`` and the
+    dead segments contribute the combine identity (``+0.0`` for sum —
+    bit-preserving on the non-negative costs the latency model emits —
+    and ``-inf`` for max), so totals stay bit-identical to a scalar
+    walk over the live segments only."""
     Sn, N, L, _ = C.shape
+    ns = _normalize_ns(n_devices_s, Sn, N)
+    splits = np.asarray(splits, np.int64)
+    j = np.arange(1, N)[None, :]  # boundary number of split column j-1
+    mid = np.where(j <= ns[:, None] - 1, splits, L)
     bounds = np.concatenate(
-        [np.zeros((Sn, 1), np.int64), np.asarray(splits, np.int64),
-         np.full((Sn, 1), L, np.int64)], axis=1,
-    )
-    valid = np.all(bounds[:, 1:] > bounds[:, :-1], axis=1)
+        [np.zeros((Sn, 1), np.int64), mid, np.full((Sn, 1), L, np.int64)],
+        axis=1,
+    )  # (S, N+1)
+    live = np.arange(N)[None, :] < ns[:, None]  # (S, N) live segments
+    valid = np.all(np.where(live, bounds[:, 1:] > bounds[:, :-1], True), axis=1)
     a_idx = np.clip(bounds[:, :-1], 0, L - 1)
     b_idx = np.clip(bounds[:, 1:] - 1, 0, L - 1)
     seg = C[np.arange(Sn)[:, None], np.arange(N)[None, :], a_idx, b_idx]  # (S, N)
-    total = np.cumsum(seg, axis=1)[:, -1] if combine == "sum" else seg.max(axis=1)
+    if combine == "sum":
+        seg = np.where(live, seg, 0.0)
+        total = np.cumsum(seg, axis=1)[:, -1]  # sequential, matches scalar sum
+    else:
+        seg = np.where(live, seg, -INF)
+        total = seg.max(axis=1)
     return np.where(valid, total, INF)
 
 
@@ -157,15 +243,22 @@ def _per_scenario_total_cost(
 
 @dataclass(frozen=True)
 class BatchedSolverResult:
-    """Result of one batched solve over ``S`` stacked scenarios."""
+    """Result of one batched solve over ``S`` stacked scenarios.
+
+    ``n_devices`` is the solved fleet size (the tensor's device-axis
+    length). When the solve carried a per-scenario fleet-size vector,
+    ``n_devices_s`` holds it and scenario ``s``'s configuration spans
+    only its first ``n_devices_s[s] - 1`` split columns (the rest stay
+    ``-1`` padding, which :meth:`splits_tuple` never reads)."""
 
     solver: str
     backend: str
     n_devices: int
-    splits: np.ndarray  # (S, N-1) int64, -1 where infeasible
+    splits: np.ndarray  # (S, N-1) int64, -1 where infeasible/padding
     cost_s: np.ndarray  # (S,) float64 combined objective cost
     feasible: np.ndarray  # (S,) bool
     wall_time_s: float  # one batched pass for ALL scenarios
+    n_devices_s: np.ndarray | None = None  # (S,) per-scenario fleet sizes
 
     @property
     def n_scenarios(self) -> int:
@@ -177,15 +270,27 @@ class BatchedSolverResult:
         () when the solver produced no configuration; like the scalar
         greedy, a full configuration whose total is +inf keeps its split
         points (``feasible[s]`` is the authoritative flag)."""
-        if self.splits.shape[1] and (self.splits[s] < 0).any():
+        width = self.n_devices - 1
+        if self.n_devices_s is not None:
+            width = int(self.n_devices_s[s]) - 1
+        row = self.splits[s, :width]
+        if width and (row < 0).any():
             return ()
-        return tuple(int(x) for x in self.splits[s])
+        return tuple(int(x) for x in row)
 
 
 def _reconstruct_splits(
-    parents: np.ndarray, cost: np.ndarray, L: int, n_devices: int
+    parents: np.ndarray,
+    cost: np.ndarray,
+    L: int,
+    n_devices: int,
+    ns: np.ndarray | None = None,
 ) -> tuple[np.ndarray, np.ndarray]:
-    """Walk DP parent pointers back from boundary L (batched)."""
+    """Walk DP parent pointers back from boundary L (batched).
+
+    With ``ns`` (per-scenario fleet sizes) scenario ``s`` starts its
+    walk at its own final device ``ns[s]``; columns beyond
+    ``ns[s] - 1`` stay ``-1`` padding."""
     Sn = cost.shape[0]
     feas = np.isfinite(cost)
     splits = np.full((Sn, max(n_devices - 1, 0)), -1, dtype=np.int64)
@@ -194,27 +299,48 @@ def _reconstruct_splits(
     for k in range(n_devices, 1, -1):
         a = parents[rows, k - 2, np.clip(b - 1, 0, L - 1)]
         a = np.where(feas, a, -1)
-        splits[:, k - 2] = a
-        b = np.clip(np.where(feas, a, 1), 1, L)
+        if ns is None:
+            splits[:, k - 2] = a
+            b = np.clip(np.where(feas, a, 1), 1, L)
+        else:
+            act = ns >= k
+            splits[:, k - 2] = np.where(act, a, -1)
+            b = np.where(act, np.clip(np.where(feas, a, 1), 1, L), b)
     return splits, feas
 
 
-def _dp_numpy(C: np.ndarray, combine: str):
+def _dp_numpy(C: np.ndarray, combine: str, ns: np.ndarray | None = None):
     """(dp_per_k, parents): dp_per_k[k-1] is the (S, L) DP table after k
     devices; parents[s, k-2, b-1] the argmin boundary. Bit-identical
-    arithmetic and tie-breaking (first minimum) to the scalar DP."""
+    arithmetic and tie-breaking (first minimum) to the scalar DP.
+
+    With ``ns`` (per-scenario fleet sizes) only still-active rows are
+    advanced at each device step — frozen rows carry stale table values
+    past their own ``n_s``, which no caller reads (reconstruction and
+    cost extraction stop at each scenario's own fleet size)."""
     Sn, N, L, _ = C.shape
     comb = _combine_ufunc(combine)
     dp = C[:, 0, 0, :].copy()  # k=1: layers [1..b] on device 1
     dp_per_k = [dp]
     parents = np.full((Sn, max(N - 1, 0), L), -1, dtype=np.int64)
     for k in range(2, N + 1):
-        # cand[s, a-1, b-1] = comb(dp[s, a], C[s, k, a+1, b]) for a=1..L-1
-        cand = comb(dp[:, : L - 1, None], C[:, k - 1, 1:L, :])
-        ndp = cand.min(axis=1)
-        arg = cand.argmin(axis=1) + 1  # boundary a, 1-indexed
-        parents[:, k - 2, :] = np.where(np.isfinite(ndp), arg, -1)
-        dp = ndp
+        act = None if ns is None else np.flatnonzero(ns >= k)
+        if act is not None and act.size == 0:
+            break
+        if act is None or act.size == Sn:
+            # cand[s, a-1, b-1] = comb(dp[s, a], C[s, k, a+1, b]), a=1..L-1
+            cand = comb(dp[:, : L - 1, None], C[:, k - 1, 1:L, :])
+            ndp = cand.min(axis=1)
+            arg = cand.argmin(axis=1) + 1  # boundary a, 1-indexed
+            parents[:, k - 2, :] = np.where(np.isfinite(ndp), arg, -1)
+            dp = ndp
+        else:
+            cand = comb(dp[act][:, : L - 1, None], C[act, k - 1, 1:L, :])
+            ndp_a = cand.min(axis=1)
+            arg = cand.argmin(axis=1) + 1
+            parents[act, k - 2, :] = np.where(np.isfinite(ndp_a), arg, -1)
+            dp = dp.copy()
+            dp[act] = ndp_a
         dp_per_k.append(dp)
     return dp_per_k, parents
 
@@ -259,27 +385,44 @@ def batched_optimal_dp(
     combine: str = "sum",
     backend: str = "numpy",
     return_all_k: bool = False,
+    n_devices: np.ndarray | Sequence[int] | int | None = None,
 ):
     """Exact split DP over a stacked cost tensor — one pass, every scenario.
 
-    ``C``: (S, N, L, L). Returns a :class:`BatchedSolverResult` for
-    ``N`` devices, or (when ``return_all_k``) a dict ``{n: result}`` for
-    every fleet size ``n = 1..N`` — the DP table at device ``k`` already
-    answers the ``k``-device question, so a whole fleet-size axis costs
-    one solve.
+    Args:
+      C: ``(S, N, L, L)`` stacked cost tensor (+inf = infeasible).
+      combine: ``"sum"`` (Eq. 5 latency) or ``"max"`` (bottleneck).
+      backend: ``"numpy"`` (float64, the bit-parity path) or ``"jax"``.
+      return_all_k: return a dict ``{n: result}`` for every fleet size
+        ``n = 1..N`` — the DP table at device ``k`` already answers the
+        ``k``-device question, so a whole fleet-size axis costs one
+        solve (the all-k trick).
+      n_devices: optional per-scenario fleet sizes (see
+        :func:`_normalize_ns`); scenario ``s`` is then solved for
+        ``n_devices[s]`` devices in the same pass (heterogeneous fleet
+        sizes batch like any other scenario axis). Mutually exclusive
+        with ``return_all_k``.
+
+    Returns a :class:`BatchedSolverResult` (or the all-k dict).
 
     ``backend="numpy"`` is bit-identical to the scalar
     :func:`repro.core.solvers.optimal_dp` (same float64 operation order,
     same first-minimum tie-breaking). ``backend="jax"`` runs the same
-    recurrence as a ``vmap``-ed ``lax.scan`` for accelerator execution."""
+    recurrence as a ``vmap``-ed ``lax.scan`` for accelerator execution
+    — float32 by default, so equal-cost tie-breaks may differ; never
+    assert bit parity on it."""
     if C.ndim != 4:
         raise ValueError(f"C must be (S, N, L, L), got shape {C.shape}")
     Sn, N, L, L2 = C.shape
     if L != L2:
         raise ValueError(f"C must be square in (a, b), got {C.shape}")
+    if return_all_k and n_devices is not None:
+        raise ValueError("return_all_k and per-scenario n_devices are "
+                         "mutually exclusive")
+    ns = None if n_devices is None else _normalize_ns(n_devices, Sn, N)
     t0 = time.perf_counter()
     if backend == "numpy":
-        dp_per_k, parents = _dp_numpy(C, combine)
+        dp_per_k, parents = _dp_numpy(C, combine, ns=ns)
     elif backend == "jax":
         dp_per_k, parents = _dp_jax(C, combine)
     else:
@@ -296,6 +439,15 @@ def batched_optimal_dp(
 
     if return_all_k:
         return {n: result_for(n) for n in range(1, N + 1)}
+    if ns is not None:
+        dpk = np.stack([d[:, L - 1] for d in dp_per_k])  # (N, S)
+        cost = dpk[ns - 1, np.arange(Sn)].astype(np.float64, copy=True)
+        splits, feas = _reconstruct_splits(parents, cost, L, N, ns=ns)
+        return BatchedSolverResult(
+            solver="batched_dp", backend=backend, n_devices=N,
+            splits=splits, cost_s=cost, feasible=feas, wall_time_s=wall,
+            n_devices_s=ns,
+        )
     return result_for(N)
 
 
@@ -308,7 +460,11 @@ def _min_devices_suffix_batched(C: np.ndarray) -> np.ndarray:
     """need[s, j] = minimum devices that can host layers [j..L] feasibly
     (+inf if none) — the vectorized twin of
     :func:`repro.core.solvers._min_devices_suffix` (probe device k=2,
-    falling back to k=1 when only one device slice exists)."""
+    falling back to k=1 when only one device slice exists).
+
+    Depends only on the probe slice, so callers that tile one base
+    tensor across a fleet-size axis may compute it once and pass it to
+    the solvers as ``need_table`` (``np.tile`` over the block axis)."""
     Sn, N, L, _ = C.shape
     probe = min(1, N - 1)  # k=2 slice when available
     feas = np.isfinite(C[:, probe])  # (S, L, L): [j-1, b-1]
@@ -338,36 +494,132 @@ def batched_greedy_search(
     C: np.ndarray,
     combine: str = "sum",
     feasibility_lookahead: bool = True,
+    n_devices: np.ndarray | Sequence[int] | int | None = None,
+    need_table: np.ndarray | None = None,
 ) -> BatchedSolverResult:
     """Algorithm 2 vectorized over the scenario axis; semantics-faithful
     to :func:`repro.core.solvers.greedy_search` (same window, lookahead
-    pruning, and lowest-index tie-breaking)."""
+    pruning, and lowest-index tie-breaking). Bit-identical to the scalar
+    greedy — always, including under exact cost ties.
+
+    ``n_devices`` optionally gives each scenario its own fleet size
+    (see :func:`_normalize_ns`): a scenario freezes after choosing its
+    ``n_s - 1`` splits while larger fleets keep extending, so mixed
+    fleet sizes batch in one pass. ``need_table`` optionally supplies a
+    precomputed :func:`_min_devices_suffix_batched` result (see its
+    docstring; advanced callers that tile a base tensor)."""
     Sn, N, L, _ = C.shape
     t0 = time.perf_counter()
-    need = _min_devices_suffix_batched(C) if feasibility_lookahead else None
-    rows = np.arange(Sn)
+    ns = _normalize_ns(n_devices, Sn, N)
+    if not feasibility_lookahead:
+        need = None
+    else:
+        need = need_table if need_table is not None \
+            else _min_devices_suffix_batched(C)
     pos = np.zeros(Sn, dtype=np.int64)  # last chosen boundary (0 = start)
     alive = np.ones(Sn, dtype=bool)
     splits = np.full((Sn, max(N - 1, 0)), -1, dtype=np.int64)
     j_idx = np.arange(L)[None, :]
     for k in range(1, N):
-        row = C[rows, k - 1, np.clip(pos, 0, L - 1), :]  # (S, L): nxt = j+1
-        mask = j_idx > (L - 1 - (N - k))  # nxt > L-(N-k)
+        # only scenarios still choosing a k-th split do any work (frozen
+        # smaller fleets cost nothing — the folded fleet-size axis does
+        # the same array work as per-size passes)
+        act = np.flatnonzero(k <= ns - 1)
+        if act.size == 0:
+            break
+        rem = ns[act] - k  # devices left after device k
+        row = C[act, k - 1, np.clip(pos[act], 0, L - 1), :]  # (Sa, L)
+        mask = j_idx > (L - 1 - rem[:, None])  # nxt > L-(n_s-k)
         if need is not None:
-            mask = mask | (need[:, 2:] > N - k)  # need[nxt+1] vs devices left
+            mask = mask | (need[act, 2:] > rem[:, None])  # need[nxt+1]
         row = np.where(mask, INF, row)
         best = row.min(axis=1)
         nxt = row.argmin(axis=1) + 1  # first minimum = lowest nxt, like scalar
-        alive = alive & np.isfinite(best)
-        splits[:, k - 1] = np.where(alive, nxt, -1)
-        pos = np.where(alive, nxt, pos)
-    cost = np.where(alive, _per_scenario_total_cost(C, np.maximum(splits, 1), combine), INF)
+        alive_a = alive[act] & np.isfinite(best)
+        alive[act] = alive_a
+        splits[act, k - 1] = np.where(alive_a, nxt, -1)
+        pos[act] = np.where(alive_a, nxt, pos[act])
+    cost = np.where(
+        alive,
+        _per_scenario_total_cost(C, np.maximum(splits, 1), combine, ns),
+        INF,
+    )
     feas = np.isfinite(cost)
     return BatchedSolverResult(
         solver="batched_greedy", backend="numpy", n_devices=N,
         splits=splits, cost_s=cost, feasible=feas,
         wall_time_s=time.perf_counter() - t0,
+        n_devices_s=None if n_devices is None else ns,
     )
+
+
+def batched_greedy_search_all_k(
+    C: np.ndarray,
+    combine: str = "sum",
+    feasibility_lookahead: bool = True,
+    fleet_sizes: Sequence[int] | None = None,
+) -> dict[int, BatchedSolverResult]:
+    """Greedy-solve every fleet size in ONE batched pass: ``{n: result}``.
+
+    Same block construction as :func:`batched_beam_search_all_k` (fleet
+    sizes as a leading block axis over the SHARED base tensor, active
+    blocks a descending prefix, one suffix-packability table); each
+    result is element-wise identical to
+    ``batched_greedy_search(C[:, :n])`` — and therefore bit-identical
+    to the scalar greedy."""
+    Sn, N, L, _ = C.shape
+    sizes = tuple(fleet_sizes) if fleet_sizes is not None else tuple(range(1, N + 1))
+    if len(set(sizes)) != len(sizes):
+        raise ValueError(f"fleet_sizes has duplicates: {sizes}")
+    for n in sizes:
+        if not 1 <= n <= N:
+            raise ValueError(f"fleet size {n} out of range [1, {N}]")
+    t0 = time.perf_counter()
+    need = _min_devices_suffix_batched(C) if feasibility_lookahead else None
+    desc = tuple(sorted(sizes, reverse=True))
+    B = len(desc)
+    n_max = desc[0]
+    sz = np.asarray(desc, dtype=np.int64)
+
+    pos = np.zeros((B, Sn), dtype=np.int64)
+    alive = np.ones((B, Sn), dtype=bool)
+    splits = np.full((B, Sn, max(n_max - 1, 0)), -1, dtype=np.int64)
+    j_idx = np.arange(L)[None, None, :]
+    for k in range(1, n_max):
+        nb = int((sz - 1 >= k).sum())  # blocks still choosing a k-th split
+        if nb == 0:
+            break
+        rem = (sz[:nb] - k)[:, None, None]
+        Ck = C[:, k - 1]  # (Sn, L, L) view shared by every block
+        row = np.take_along_axis(
+            Ck[None], np.clip(pos[:nb], 0, L - 1)[:, :, None, None],
+            axis=2)[:, :, 0, :]  # (nb, Sn, L)
+        mask = j_idx > (L - 1 - rem)
+        if need is not None:
+            mask = mask | (need[None, :, 2:] > rem)
+        row = np.where(mask, INF, row)
+        best = row.min(axis=2)
+        nxt = row.argmin(axis=2) + 1  # first minimum = lowest nxt
+        alive_a = alive[:nb] & np.isfinite(best)
+        alive[:nb] = alive_a
+        splits[:nb, :, k - 1] = np.where(alive_a, nxt, -1)
+        pos[:nb] = np.where(alive_a, nxt, pos[:nb])
+    wall = time.perf_counter() - t0
+
+    out: dict[int, BatchedSolverResult] = {}
+    for b, n in enumerate(desc):
+        spl = splits[b, :, : max(n - 1, 0)].copy()
+        cost = np.where(
+            alive[b],
+            _per_scenario_total_cost(C[:, :n], np.maximum(spl, 1), combine),
+            INF,
+        )
+        feas = np.isfinite(cost)
+        out[n] = BatchedSolverResult(
+            solver="batched_greedy", backend="numpy", n_devices=n,
+            splits=spl, cost_s=cost, feasible=feas, wall_time_s=wall,
+        )
+    return {n: out[n] for n in sizes}
 
 
 # ---------------------------------------------------------------------------
@@ -380,6 +632,8 @@ def batched_beam_search(
     beam_width: int = 8,
     combine: str = "sum",
     feasibility_lookahead: bool = True,
+    n_devices: np.ndarray | Sequence[int] | int | None = None,
+    need_table: np.ndarray | None = None,
 ) -> BatchedSolverResult:
     """Algorithm 1 vectorized over the scenario axis.
 
@@ -391,13 +645,27 @@ def batched_beam_search(
     bit-identical splits to the scalar solver; under exact ties the
     truncation order differs (landing-position vs generation order) and
     either beam may keep the luckier candidate — only ``batched_dp``
-    carries an unconditional bit-parity guarantee."""
+    carries an unconditional bit-parity guarantee.
+
+    ``n_devices`` optionally gives each scenario its own fleet size
+    (see :func:`_normalize_ns`). Scenario ``s`` pins its final segment
+    to end at ``L`` on its own last device ``n_s`` and freezes while
+    larger fleets keep extending — every per-scenario window, lookahead
+    threshold, and completion bound uses ``n_s``, so each scenario's
+    beam evolves exactly as a standalone ``n_s``-device solve.
+    ``need_table``: optional precomputed
+    :func:`_min_devices_suffix_batched` result (see its docstring)."""
     Sn, N, L, _ = C.shape
     t0 = time.perf_counter()
     comb = _combine_ufunc(combine)
-    need = _min_devices_suffix_batched(C) if feasibility_lookahead else None
+    if not feasibility_lookahead:
+        need = None
+    else:
+        need = need_table if need_table is not None \
+            else _min_devices_suffix_batched(C)
     W = beam_width
     rows = np.arange(Sn)
+    ns = _normalize_ns(n_devices, Sn, N)
 
     # beam state: slot arrays ordered by the scalar solver's ranking
     cost = np.full((Sn, 1), 0.0)
@@ -405,61 +673,200 @@ def batched_beam_search(
     hist = np.full((Sn, 1, N), -1, dtype=np.int64)  # chosen boundaries per slot
 
     for k in range(1, N + 1):
-        w_cur = cost.shape[1]
+        # scenarios whose fleet already completed (k > n_s) are frozen:
+        # each step processes only the still-active row subset, so a
+        # folded fleet-size axis costs the same array work as per-size
+        # passes (row s runs exactly n_s steps)
+        act = np.flatnonzero(ns >= k)
+        if act.size == 0:
+            break
+        full = act.size == Sn
+        nsa = ns if full else ns[act]
+        costa = cost if full else cost[act]
+        posa = pos if full else pos[act]
+        Sa = act.size
+        rem = nsa - k  # devices left after device k; 0 = finishing
+        finishing = rem == 0
+        fin3 = finishing[:, None, None]
         # extension costs E[s, w, j]: segment (pos+1 .. j+1) on device k
-        Ck = C[:, k - 1]  # (S, L, L)
-        seg = np.take_along_axis(Ck, np.clip(pos, 0, L - 1)[:, :, None], axis=1)
-        E = comb(cost[:, :, None], seg)  # (S, w, L)
-        E = np.where(np.isfinite(cost)[:, :, None], E, INF)
+        Ck = C[:, k - 1] if full else C[act, k - 1]  # (Sa, L, L)
+        seg = np.take_along_axis(Ck, np.clip(posa, 0, L - 1)[:, :, None],
+                                 axis=1)
+        E = comb(costa[:, :, None], seg)  # (Sa, w, L)
+        E = np.where(np.isfinite(costa)[:, :, None], E, INF)
         j_idx = np.arange(L)[None, None, :]
-        if k == N:
-            E = np.where(j_idx == L - 1, E, INF)  # s_N = L pinned
-        else:
-            E = np.where(j_idx > L - 1 - (N - k), INF, E)
-            if need is not None:
-                E = np.where(need[:, None, 2:] > N - k, INF, E)
+        # k == n_s: s_N = L pinned; k < n_s: window + lookahead pruning
+        E = np.where(fin3 & (j_idx != L - 1), INF, E)
+        E = np.where(~fin3 & (j_idx > L - 1 - rem[:, None, None]), INF, E)
+        if need is not None:
+            needa = need if full else need[act]
+            E = np.where(~fin3 & (needa[:, None, 2:] > rem[:, None, None]),
+                         INF, E)
         # dominance: best slot per landing position (ties -> lowest slot,
         # i.e. scalar generation order)
-        D = E.min(axis=1)  # (S, L)
-        back = E.argmin(axis=1)  # (S, L)
-        # ranking: admissible completion bound (scalar's truncation key)
-        if k < N:
-            # scalar's completion_bound(nxt, k): the whole suffix [nxt+1..L]
-            # as ONE segment on device min(k+1, N) lower-bounds any further
-            # segmentation (superadditive costs); INF -> 0 (feasibility is
-            # the lookahead's job). Candidate j lands at boundary nxt=j+1,
-            # so its suffix starts at layer j+2 -> start index j+1.
-            whole = C[:, min(k, N - 1), :, L - 1]  # (S, L) indexed by start-1
-            bound = np.where(np.isfinite(whole), whole, 0.0)
-            bshift = np.concatenate([bound[:, 1:], np.zeros((Sn, 1))], axis=1)
-            bshift[:, L - 1] = 0.0  # nxt = L: empty suffix
-            if combine == "max":
-                key = np.maximum(D, bshift / (N - k))
-            else:
-                key = D + bshift
-            key = np.where(np.isfinite(D), key, INF)
+        D = E.min(axis=1)  # (Sa, L)
+        back = E.argmin(axis=1)  # (Sa, L)
+        # ranking: admissible completion bound (scalar's truncation key).
+        # scalar's completion_bound(nxt, k): the whole suffix [nxt+1..L]
+        # as ONE segment on device min(k+1, n_s) lower-bounds any further
+        # segmentation (superadditive costs); INF -> 0 (feasibility is
+        # the lookahead's job). Candidate j lands at boundary nxt=j+1,
+        # so its suffix starts at layer j+2 -> start index j+1.
+        whole = C[act, np.minimum(k, nsa - 1), :, L - 1]  # (Sa, L) by start-1
+        bound = np.where(np.isfinite(whole), whole, 0.0)
+        bshift = np.concatenate([bound[:, 1:], np.zeros((Sa, 1))], axis=1)
+        bshift[:, L - 1] = 0.0  # nxt = L: empty suffix
+        if combine == "max":
+            mid = np.maximum(D, bshift / np.maximum(rem, 1)[:, None])
         else:
-            key = D
-        order = np.argsort(key, axis=1, kind="stable")[:, :W]  # (S, <=W)
+            mid = D + bshift
+        key = np.where(finishing[:, None], D,
+                       np.where(np.isfinite(D), mid, INF))
+        order = np.argsort(key, axis=1, kind="stable")[:, :W]  # (Sa, <=W)
         new_cost = np.take_along_axis(D, order, axis=1)
         new_pos = order + 1  # boundary after layer j+1 (1-indexed)
         slot = np.take_along_axis(back, order, axis=1)  # predecessor slot
-        new_hist = hist[rows[:, None], slot]  # (S, W', N)
-        new_hist = new_hist.copy()
-        new_hist[:, :, k - 1] = np.where(np.isfinite(new_cost), new_pos, -1)
+        hista = hist[act[:, None], slot]  # (Sa, W', N)
+        hista[:, :, k - 1] = np.where(np.isfinite(new_cost), new_pos, -1)
         dead = ~np.isfinite(new_cost)
-        cost = np.where(dead, INF, new_cost)
-        pos = np.where(dead, 0, new_pos)
-        hist = new_hist
+        new_cost = np.where(dead, INF, new_cost)
+        new_pos = np.where(dead, 0, new_pos)
+        if k == 1:
+            # slot count grows 1 -> min(W, L) this step; every scenario
+            # is active at its first device, so adopt directly
+            cost, pos, hist = new_cost, new_pos, hista
+        else:
+            cost[act] = new_cost
+            pos[act] = new_pos
+            hist[act] = hista
 
     best_cost = cost[:, 0]
     feas = np.isfinite(best_cost)
-    splits = np.where(feas[:, None], hist[:, 0, : N - 1], -1)
+    width_ok = np.arange(max(N - 1, 0))[None, :] < (ns[:, None] - 1)
+    splits = np.where(feas[:, None] & width_ok, hist[:, 0, : N - 1], -1)
     return BatchedSolverResult(
         solver="batched_beam", backend="numpy", n_devices=N,
         splits=splits, cost_s=np.where(feas, best_cost, INF),
         feasible=feas, wall_time_s=time.perf_counter() - t0,
+        n_devices_s=None if n_devices is None else ns,
     )
+
+
+def batched_beam_search_all_k(
+    C: np.ndarray,
+    beam_width: int = 8,
+    combine: str = "sum",
+    feasibility_lookahead: bool = True,
+    fleet_sizes: Sequence[int] | None = None,
+) -> dict[int, BatchedSolverResult]:
+    """Beam-solve every fleet size in ONE batched pass: ``{n: result}``.
+
+    The all-k counterpart of ``batched_optimal_dp(return_all_k=True)``
+    for Algorithm 1 (including the bottleneck objective). Unlike the
+    DP — whose table at device ``k`` *is* the ``k``-device answer —
+    beams for different fleet sizes genuinely diverge (the truncation
+    key, window, and lookahead all depend on the devices remaining), so
+    sharing one beam would break bit-parity with the per-``k`` solver.
+    Instead the fleet-size axis is folded into the scenario axis: the
+    tensor is viewed once per requested size and a single vectorized
+    recursion solves all of them, with no per-``N`` Python re-solve
+    loop. Each returned result is element-wise identical (``==`` on
+    splits, cost, feasibility) to ``batched_beam_search(C[:, :n])``.
+
+    ``fleet_sizes`` defaults to every ``n = 1..N``; pass a subset to
+    solve only those.
+
+    Implementation: fleet sizes become a leading *block* axis over the
+    SAME base tensor (descending, so the still-active blocks at step
+    ``k`` are a contiguous prefix) — no ``len(fleet_sizes)``-fold
+    tensor copy, one shared suffix-packability table, and per-step
+    work proportional to the blocks still extending."""
+    Sn, N, L, _ = C.shape
+    sizes = tuple(fleet_sizes) if fleet_sizes is not None else tuple(range(1, N + 1))
+    if len(set(sizes)) != len(sizes):
+        raise ValueError(f"fleet_sizes has duplicates: {sizes}")
+    for n in sizes:
+        if not 1 <= n <= N:
+            raise ValueError(f"fleet size {n} out of range [1, {N}]")
+    t0 = time.perf_counter()
+    comb = _combine_ufunc(combine)
+    need = _min_devices_suffix_batched(C) if feasibility_lookahead else None
+    W = beam_width
+    desc = tuple(sorted(sizes, reverse=True))  # active blocks = prefix
+    B = len(desc)
+    n_max = desc[0]
+    sz = np.asarray(desc, dtype=np.int64)
+
+    # block-major beam state: [b, s, w(, boundary)]
+    cost = np.full((B, Sn, 1), 0.0)
+    pos = np.zeros((B, Sn, 1), dtype=np.int64)
+    hist = np.full((B, Sn, 1, n_max), -1, dtype=np.int64)
+
+    for k in range(1, n_max + 1):
+        nb = int((sz >= k).sum())  # active blocks: a prefix (descending)
+        if nb == 0:
+            break
+        rem = (sz[:nb] - k)[:, None, None, None]  # 0 = finishing block
+        fin4 = rem == 0
+        costa = cost[:nb]
+        Ck = C[:, k - 1]  # (Sn, L, L) view shared by every block
+        seg = np.take_along_axis(
+            Ck[None], np.clip(pos[:nb], 0, L - 1)[:, :, :, None], axis=2)
+        E = comb(costa[:, :, :, None], seg)  # (nb, Sn, w, L)
+        E = np.where(np.isfinite(costa)[:, :, :, None], E, INF)
+        j_idx = np.arange(L)[None, None, None, :]
+        # k == n: s_N = L pinned; k < n: window + lookahead pruning
+        E = np.where(fin4 & (j_idx != L - 1), INF, E)
+        E = np.where(~fin4 & (j_idx > L - 1 - rem), INF, E)
+        if need is not None:
+            E = np.where(~fin4 & (need[None, :, None, 2:] > rem), INF, E)
+        # dominance: best slot per landing position (ties -> lowest slot)
+        D = E.min(axis=2)  # (nb, Sn, L)
+        back = E.argmin(axis=2)
+        # ranking: admissible completion bound, per block (suffix device
+        # min(k+1, n) differs across fleet sizes)
+        whole = np.stack([C[:, min(k, n - 1), :, L - 1]
+                          for n in desc[:nb]])  # (nb, Sn, L)
+        bound = np.where(np.isfinite(whole), whole, 0.0)
+        bshift = np.concatenate(
+            [bound[:, :, 1:], np.zeros((nb, Sn, 1))], axis=2)
+        bshift[:, :, L - 1] = 0.0  # nxt = L: empty suffix
+        rem3 = rem[:, :, :, 0]
+        if combine == "max":
+            mid = np.maximum(D, bshift / np.maximum(rem3, 1))
+        else:
+            mid = D + bshift
+        key = np.where(fin4[:, :, :, 0], D,
+                       np.where(np.isfinite(D), mid, INF))
+        order = np.argsort(key, axis=2, kind="stable")[:, :, :W]
+        new_cost = np.take_along_axis(D, order, axis=2)
+        new_pos = order + 1
+        slot = np.take_along_axis(back, order, axis=2)
+        new_hist = np.take_along_axis(hist[:nb], slot[:, :, :, None], axis=2)
+        new_hist[:, :, :, k - 1] = np.where(np.isfinite(new_cost),
+                                            new_pos, -1)
+        dead = ~np.isfinite(new_cost)
+        new_cost = np.where(dead, INF, new_cost)
+        new_pos = np.where(dead, 0, new_pos)
+        if k == 1:
+            cost, pos, hist = new_cost, new_pos, new_hist
+        else:
+            cost[:nb] = new_cost
+            pos[:nb] = new_pos
+            hist[:nb] = new_hist
+    wall = time.perf_counter() - t0
+
+    out: dict[int, BatchedSolverResult] = {}
+    for b, n in enumerate(desc):
+        best_cost = cost[b, :, 0].copy()
+        feas = np.isfinite(best_cost)
+        splits = np.where(feas[:, None], hist[b, :, 0, : n - 1], -1)
+        out[n] = BatchedSolverResult(
+            solver="batched_beam", backend="numpy", n_devices=n,
+            splits=splits, cost_s=np.where(feas, best_cost, INF),
+            feasible=feas, wall_time_s=wall,
+        )
+    return {n: out[n] for n in sizes}
 
 
 BATCHED_SOLVERS: dict[str, Callable[..., BatchedSolverResult]] = {
@@ -474,19 +881,23 @@ def solve_batched(
     solver: str = "batched_dp",
     combine: str = "sum",
     backend: str = "numpy",
+    n_devices: np.ndarray | Sequence[int] | int | None = None,
     **solver_kwargs,
 ) -> BatchedSolverResult:
     """The single dispatch point for batched solves over a stacked tensor
-    (used by :func:`sweep`, ``planner.plan_split_batch``, and the
-    adaptive manager — one place to extend when adding a solver)."""
+    (used by :func:`sweep`, ``planner.plan_split_batch``, the surface
+    builder, and the adaptive manager — one place to extend when adding
+    a solver). ``n_devices`` (optional per-scenario fleet sizes) is
+    threaded to every solver, so heterogeneous fleet sizes batch
+    uniformly regardless of algorithm."""
     if solver == "batched_dp":
         return batched_optimal_dp(C, combine=combine, backend=backend,
-                                  **solver_kwargs)
+                                  n_devices=n_devices, **solver_kwargs)
     if solver in ("batched_beam", "batched_greedy"):
         if backend != "numpy":
             raise ValueError(f"{solver} supports backend='numpy' only")
         fn = batched_beam_search if solver == "batched_beam" else batched_greedy_search
-        return fn(C, combine=combine, **solver_kwargs)
+        return fn(C, combine=combine, n_devices=n_devices, **solver_kwargs)
     raise ValueError(f"unknown batched solver {solver!r}; "
                      f"options: {sorted(BATCHED_SOLVERS)}")
 
@@ -505,29 +916,46 @@ SCALAR_ORACLES: dict[str, str] = {
 
 @dataclass(frozen=True)
 class Scenario:
-    """One point of a :class:`ScenarioGrid` (a what-if the planner prices)."""
+    """One point of a :class:`ScenarioGrid` (a what-if the planner prices).
+
+    ``mix`` names the device mix this scenario's fleet draws from
+    (``None`` = the grid's shared ``devices`` tuple, the paper's
+    homogeneous ESP32 fleet)."""
 
     model: str
     protocol: str
     n_devices: int
     loss_p: float | None  # None -> protocol default
     rate_scale: float  # multiplier on the link serialization rate
+    mix: str | None = None  # device-mix name (None -> grid.devices)
 
     def describe(self) -> str:
         loss = "base" if self.loss_p is None else f"p={self.loss_p:g}"
+        mix = "" if self.mix is None else f" mix={self.mix}"
         return (f"{self.model}/{self.protocol} N={self.n_devices} "
-                f"{loss} rate×{self.rate_scale:g}")
+                f"{loss} rate×{self.rate_scale:g}{mix}")
 
 
 @dataclass(frozen=True)
 class ScenarioGrid:
     """A dense grid of split-planning scenarios:
-    models × links × fleet sizes × loss rates × rate scales.
+    models × device mixes × fleet sizes × links × loss rates × rate scales.
 
     ``models`` maps names to :class:`ModelCostProfile`; ``links`` maps
     protocol names to :class:`LinkProfile`. ``devices`` is the device
     profile tuple shared by all scenarios (a single profile broadcasts
-    over any fleet size, as in the paper's homogeneous ESP32 fleet)."""
+    over any fleet size, as in the paper's homogeneous ESP32 fleet).
+
+    ``device_mixes`` optionally adds a heterogeneous-fleet axis: it maps
+    mix names to device-profile tuples and every mix becomes one more
+    scenario coordinate (``Scenario.mix``). Within a mix, device ``k``
+    runs profile ``mix[k-1]`` (a length-1 mix broadcasts like
+    ``devices``); a multi-profile mix must cover the grid's largest
+    fleet size. When ``device_mixes`` is set, ``devices`` may be empty
+    — scenarios then always carry a mix. Mixed fleets batch in the same
+    tensor pass as homogeneous ones: :func:`sweep` gathers each
+    scenario's per-device cost matrices from a per-profile bank instead
+    of rebuilding them per scenario."""
 
     models: Mapping[str, ModelCostProfile]
     links: Mapping[str, LinkProfile]
@@ -536,26 +964,55 @@ class ScenarioGrid:
     rate_scale: tuple[float, ...] = (1.0,)
     devices: tuple[DeviceProfile, ...] = ()
     objective: str = "sum"
+    device_mixes: Mapping[str, tuple[DeviceProfile, ...]] | None = None
 
     def __post_init__(self):
-        if not self.devices:
-            raise ValueError("ScenarioGrid requires at least one DeviceProfile")
+        if not self.devices and not self.device_mixes:
+            raise ValueError("ScenarioGrid requires devices or device_mixes")
         for field_name in ("n_devices", "loss_p", "rate_scale"):
             object.__setattr__(self, field_name, tuple(getattr(self, field_name)))
         object.__setattr__(self, "models", dict(self.models))
         object.__setattr__(self, "links", dict(self.links))
+        if self.device_mixes is not None:
+            mixes = {name: tuple(m) for name, m in dict(self.device_mixes).items()}
+            n_max = max(self.n_devices) if self.n_devices else 0
+            for name, m in mixes.items():
+                if not m:
+                    raise ValueError(f"device mix {name!r} is empty")
+                if 1 < len(m) < n_max:
+                    raise ValueError(
+                        f"device mix {name!r} has {len(m)} profiles but the "
+                        f"grid asks for up to {n_max} devices (a single "
+                        f"profile broadcasts; several must cover every "
+                        f"fleet size)")
+            object.__setattr__(self, "device_mixes", mixes)
+
+    @property
+    def mix_names(self) -> tuple[str | None, ...]:
+        """The device-mix axis. ``(None,)`` when the grid is homogeneous;
+        with ``device_mixes`` set, the named mixes — plus a leading
+        ``None`` entry for the shared ``devices`` fleet when that is
+        also provided (so declaring mixes never silently drops the
+        homogeneous baseline)."""
+        if self.device_mixes:
+            base: tuple[str | None, ...] = (None,) if self.devices else ()
+            return base + tuple(self.device_mixes)
+        return (None,)
 
     @property
     def size(self) -> int:
         return (len(self.models) * len(self.links) * len(self.n_devices)
-                * len(self.loss_p) * len(self.rate_scale))
+                * len(self.loss_p) * len(self.rate_scale)
+                * len(self.mix_names))
 
     def scenarios(self) -> list[Scenario]:
-        """Deterministic enumeration order: model-major, then fleet size,
-        then protocol × loss × rate (the link axes batch densely)."""
+        """Deterministic enumeration order: model-major, then device mix,
+        then fleet size, then protocol × loss × rate (the link axes
+        batch densely)."""
         return [
-            Scenario(m, p, n, lp, rs)
+            Scenario(m, p, n, lp, rs, mix=mx)
             for m in self.models
+            for mx in self.mix_names
             for n in self.n_devices
             for p in self.links
             for lp in self.loss_p
@@ -563,6 +1020,9 @@ class ScenarioGrid:
         ]
 
     def link_variant(self, sc: Scenario) -> LinkProfile:
+        """The scenario's link: the protocol's base profile with the
+        scenario's loss (``None`` keeps the protocol's base loss) and
+        rate scale applied."""
         link = self.links[sc.protocol]
         changes: dict = {}
         if sc.loss_p is not None:
@@ -571,23 +1031,49 @@ class ScenarioGrid:
             changes["rate_bytes_per_s"] = link.rate_bytes_per_s * sc.rate_scale
         return replace(link, **changes) if changes else link
 
+    def devices_for(self, sc: Scenario) -> tuple[DeviceProfile, ...]:
+        """The device-profile tuple scenario ``sc``'s fleet runs on
+        (its named mix, or the grid's shared ``devices``)."""
+        if sc.mix is not None:
+            return self.device_mixes[sc.mix]
+        return self.devices
+
     def cost_model(self, sc: Scenario) -> SplitCostModel:
         """The scalar-oracle :class:`SplitCostModel` for one scenario."""
         return SplitCostModel(
-            profile=self.models[sc.model], devices=self.devices,
+            profile=self.models[sc.model], devices=self.devices_for(sc),
             link=self.link_variant(sc), objective=self.objective,
         )
 
     def degradation_surface(self, model: str | None = None,
-                            n_devices: int | None = None, **kwargs):
+                            n_devices: int | None = None,
+                            mix: str | None = None, **kwargs):
         """Precompute a :class:`~repro.core.surface.DegradationSurface`
         whose packet-time/loss axes derive from this grid's
         ``rate_scale``/``loss_p`` axes (the sweep's link what-ifs become
-        the runtime's O(1) replanning lookup table)."""
+        the runtime's O(1) replanning lookup table). ``n_devices``
+        defaults to the grid's largest fleet size; ``mix`` selects a
+        device mix (see :meth:`devices_for` semantics)."""
         from repro.core.surface import DegradationSurface  # lazy: no cycle
 
         return DegradationSurface.from_scenario_grid(
-            self, model=model, n_devices=n_devices, **kwargs)
+            self, model=model, n_devices=n_devices, mix=mix, **kwargs)
+
+    def degradation_surfaces(self, model: str | None = None,
+                             n_devices: Sequence[int] | None = None,
+                             mix: str | None = None, **kwargs):
+        """Precompute surfaces for SEVERAL fleet sizes — one per entry
+        of ``n_devices`` (default: this grid's whole ``n_devices``
+        axis) — in ONE batched solver pass (no per-N re-solve loop; see
+        :func:`repro.core.surface.build_surfaces`). Returns
+        ``{n: DegradationSurface}``."""
+        from repro.core import surface as SF  # lazy: no cycle
+
+        cost_model, pt_scales, losses = SF._grid_surface_args(self, model, mix)
+        sizes = tuple(n_devices) if n_devices is not None else self.n_devices
+        return SF.build_surfaces(
+            cost_model, self.links, sizes,
+            pt_scale=pt_scales, loss_p=losses, **kwargs)
 
 
 @dataclass(frozen=True)
@@ -664,8 +1150,9 @@ class SweepResult:
 
     def to_csv(self) -> str:
         cols = ["model", "protocol", "n_devices", "loss_p", "rate_scale",
-                "feasible", "splits", "objective_cost_s", "total_latency_s",
-                "device_s", "transmission_s", "solver_wall_s"]
+                "mix", "feasible", "splits", "objective_cost_s",
+                "total_latency_s", "device_s", "transmission_s",
+                "solver_wall_s"]
         lines = [",".join(cols)]
         for d in self.to_dicts():
             d["splits"] = "|".join(str(x) for x in d["splits"])
@@ -702,58 +1189,108 @@ def sweep(
 ) -> SweepResult:
     """Plan every scenario of ``grid`` in batched passes.
 
-    Scenarios are grouped by (model, fleet size); within a group the
-    device-local cost tensor is built once and the link axes (protocol ×
-    loss × rate) stack into one ``(S_g, N, L, L)`` tensor solved in a
-    single array pass. With ``solver="batched_dp"`` the returned splits
-    are bit-identical to running the scalar ``optimal_dp`` per scenario
-    (the property-test contract)."""
+    Args:
+      grid: the scenario grid to price.
+      solver: one of :data:`BATCHED_SOLVERS` (``batched_dp`` /
+        ``batched_beam`` / ``batched_greedy``).
+      backend: ``"numpy"`` (bit-parity float64) or ``"jax"``
+        (``batched_dp`` only).
+      beam_width: beam width when ``solver="batched_beam"``.
+
+    Returns a :class:`SweepResult` with one :class:`SweepRow` per
+    scenario, in grid enumeration order.
+
+    Scenarios are grouped by model; within a group every fleet size and
+    device mix stacks into one ``(S_g, N_max, L, L)`` tensor — each
+    scenario's per-device cost matrices are gathered from a bank with
+    one entry per distinct ``(DeviceProfile, is_first)`` pair, smaller
+    fleets ride the same tensor via the per-scenario ``n_devices``
+    vector (device slices beyond a scenario's own fleet size hold
+    arbitrary finite filler — bank row 0 — which the solvers are
+    guaranteed never to read; do NOT rely on them being +inf), and
+    the link axes (protocol × loss × rate) batch densely. One solver
+    pass prices the whole group: heterogeneous fleet sizes AND device
+    mixes no longer force per-(model, N) re-solve loops.
+
+    Invariants:
+      * With ``solver="batched_dp"`` (and ``batched_greedy``) the
+        returned splits are bit-identical to running the scalar oracle
+        per scenario — the property-test contract
+        (``tests/test_solver_properties.py``); ``batched_beam`` matches
+        except under exact floating-point cost ties.
+      * Row order always equals ``grid.scenarios()`` order regardless
+        of grouping."""
     if solver not in BATCHED_SOLVERS:
         raise ValueError(f"unknown batched solver {solver!r}; "
                          f"options: {sorted(BATCHED_SOLVERS)}")
     combine = "max" if grid.objective == "bottleneck" else "sum"
     order = grid.scenarios()
-    # group scenarios (preserving order within groups) by (model, N)
-    groups: dict[tuple[str, int], list[int]] = {}
+    # group scenarios (preserving order within groups) by model; fleet
+    # size and device mix are per-scenario data, not group keys
+    groups: dict[str, list[int]] = {}
     for idx, sc in enumerate(order):
-        groups.setdefault((sc.model, sc.n_devices), []).append(idx)
+        groups.setdefault(sc.model, []).append(idx)
 
     rows: dict[int, SweepRow] = {}
     build_time = 0.0
     solve_time = 0.0
-    # one device-local tensor per model at the LARGEST fleet size; smaller
-    # fleets are prefixes of it (device k's matrix does not depend on N)
-    max_n: dict[str, int] = {}
-    for model_name, n in groups:
-        max_n[model_name] = max(n, max_n.get(model_name, 0))
-    local_cache: dict[str, np.ndarray] = {}
-    for (model_name, n), idxs in groups.items():
+    for model_name, idxs in groups.items():
         profile = grid.models[model_name]
         L = profile.num_layers
         group = [order[i] for i in idxs]
         t0 = time.perf_counter()
-        full = local_cache.get(model_name)
-        if full is None:
-            base_model = SplitCostModel(
-                profile=profile, devices=grid.devices,
-                link=next(iter(grid.links.values())), objective=grid.objective,
-            )
-            full = base_model.local_cost_tensor(max_n[model_name])
-            local_cache[model_name] = full
-        local = full[:n]
+        n_max = max(sc.n_devices for sc in group)
+        ns = np.array([sc.n_devices for sc in group], dtype=np.int64)
+        base_model = SplitCostModel(
+            profile=profile, devices=grid.devices_for(group[0]),
+            link=next(iter(grid.links.values())), objective=grid.objective,
+        )
+        # profile bank: one local matrix per (device profile, is-first);
+        # every scenario's tensor is ONE vectorized gather over the
+        # stacked bank, so heterogeneous mixes cost O(bank) matrix
+        # builds + a single fancy-index, not O(S) Python copies
+        bank_rows: dict[tuple[DeviceProfile, bool], int] = {}
+        bank_mats: list[np.ndarray] = []
+
+        def bank_index(dev: DeviceProfile, is_first: bool) -> int:
+            key = (dev, is_first)
+            row = bank_rows.get(key)
+            if row is None:
+                row = len(bank_mats)
+                bank_rows[key] = row
+                bank_mats.append(base_model._local_cost_matrix(dev, is_first))
+            return row
+
+        bank_idx = np.zeros((len(group), n_max), dtype=np.int64)
+        for gi, sc in enumerate(group):
+            devs = grid.devices_for(sc)
+            for k in range(1, sc.n_devices + 1):
+                dev = devs[0] if len(devs) == 1 else devs[k - 1]
+                bank_idx[gi, k - 1] = bank_index(dev, k == 1)
+            # device slots beyond a scenario's own fleet size keep row 0
+            # filler: the solvers never read them (the per-scenario
+            # n_devices vector masks every k > n_s)
         TX = _group_tx_vectors(grid, profile, group)  # (S_g, L)
-        C = local[None, :, :, :] + TX[:, None, None, :]
+        if bool((bank_idx == bank_idx[0]).all()):
+            # homogeneous group (every scenario the same device stack):
+            # broadcast one local tensor instead of gathering S copies
+            local = np.stack(bank_mats)[bank_idx[0]]  # (N_max, L, L)
+            C = local[None, :, :, :] + TX[:, None, None, :]
+        else:
+            C = np.stack(bank_mats)[bank_idx]  # (S_g, N_max, L, L) gather
+            C += TX[:, None, None, :]
         build_time += time.perf_counter() - t0
 
         kwargs = {"beam_width": beam_width} if solver == "batched_beam" else {}
         res = solve_batched(C, solver=solver, combine=combine,
                             backend=backend if solver == "batched_dp" else "numpy",
-                            **kwargs)
+                            n_devices=ns, **kwargs)
         solve_time += res.wall_time_s
         per_scn_wall = res.wall_time_s / max(1, len(group))
 
         # cost breakdowns from the same tensors (no scalar re-walks)
         for gi, (idx, sc) in enumerate(zip(idxs, group)):
+            n = sc.n_devices
             splits_t = res.splits_tuple(gi)
             feasible = bool(res.feasible[gi])
             link = grid.link_variant(sc)
@@ -793,7 +1330,9 @@ def sweep_scalar(grid: ScenarioGrid, solver: str = "optimal_dp") -> SweepResult:
     """The un-batched reference: one scalar solve per scenario (the
     per-scenario Python loop the batched engine replaces). Used as the
     parity oracle in tests and the baseline in benchmark speedup
-    reporting."""
+    reporting. Device mixes flow through :meth:`ScenarioGrid.cost_model`
+    (each scenario's :class:`SplitCostModel` carries its own fleet), so
+    this loop is also the heterogeneous-fleet oracle."""
     combine = "max" if grid.objective == "bottleneck" else "sum"
     rows = []
     solve_time = 0.0

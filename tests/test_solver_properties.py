@@ -122,6 +122,124 @@ class TestFleetSizeAxis:
                     res, s)
 
 
+class TestPerScenarioFleetSizes:
+    """Heterogeneous fleet sizes batch in one pass: scenario ``s`` solved
+    for its own ``n_devices[s]`` must equal a standalone solve of the
+    ``C[s, :n_s]`` prefix."""
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_dp_and_greedy_match_scalar_oracle(self, C, combine, seed):
+        Sn, N, L, _ = C.shape
+        ns = np.random.RandomState(seed).randint(1, N + 1, size=Sn)
+        for solver in ("batched_dp", "batched_greedy"):
+            oracle = S.SOLVERS[SW.SCALAR_ORACLES[solver]]
+            res = SW.solve_batched(C, solver=solver, combine=combine,
+                                   n_devices=ns)
+            assert res.n_devices_s is not None
+            for s in range(Sn):
+                n = int(ns[s])
+                assert_bit_identical(
+                    oracle(scalar_fn(C[s, :n]), L, n, combine=combine),
+                    res, s)
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]),
+           width=st.sampled_from([1, 2, 8]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=25, deadline=None)
+    def test_beam_matches_standalone_batched_beam(self, C, combine, width,
+                                                  seed):
+        """The per-scenario-n beam is element-wise identical to solving
+        each scenario's prefix tensor alone — including under exact
+        cost ties (same arithmetic, unlike the scalar-beam caveat)."""
+        Sn, N, L, _ = C.shape
+        ns = np.random.RandomState(seed).randint(1, N + 1, size=Sn)
+        het = SW.batched_beam_search(C, beam_width=width, combine=combine,
+                                     n_devices=ns)
+        for s in range(Sn):
+            n = int(ns[s])
+            per = SW.batched_beam_search(C[s:s + 1, :n], beam_width=width,
+                                         combine=combine)
+            assert per.splits_tuple(0) == het.splits_tuple(s)
+            if math.isinf(per.cost_s[0]):
+                assert math.isinf(het.cost_s[s])
+            else:
+                assert per.cost_s[0] == het.cost_s[s]
+
+    def test_n_devices_validation(self):
+        C = np.full((3, 2, 4, 4), 1.0)
+        with pytest.raises(ValueError):
+            SW.batched_optimal_dp(C, n_devices=[1, 2])  # wrong length
+        with pytest.raises(ValueError):
+            SW.batched_optimal_dp(C, n_devices=[1, 2, 3])  # 3 > N
+        with pytest.raises(ValueError):
+            SW.batched_optimal_dp(C, n_devices=[0, 1, 2])  # 0 < 1
+        with pytest.raises(ValueError):
+            SW.batched_optimal_dp(C, n_devices=[1, 2, 2], return_all_k=True)
+
+
+class TestAllKBeam:
+    """One batched beam pass answers every fleet size — and each answer
+    equals the per-k batched beam exactly (the all-k beam contract)."""
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]),
+           width=st.sampled_from([1, 2, 8]))
+    @settings(max_examples=25, deadline=None)
+    def test_all_k_matches_per_k_beam(self, C, combine, width):
+        Sn, N, L, _ = C.shape
+        all_k = SW.batched_beam_search_all_k(C, beam_width=width,
+                                             combine=combine)
+        assert sorted(all_k) == list(range(1, N + 1))
+        for n, res in all_k.items():
+            per = SW.batched_beam_search(C[:, :n], beam_width=width,
+                                         combine=combine)
+            assert res.n_devices == n
+            assert np.array_equal(res.splits, per.splits)
+            fin = np.isfinite(per.cost_s)
+            assert np.array_equal(fin, np.isfinite(res.cost_s))
+            assert (res.cost_s[fin] == per.cost_s[fin]).all()
+            assert np.array_equal(res.feasible, per.feasible)
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]))
+    @settings(max_examples=20, deadline=None)
+    def test_all_k_greedy_matches_per_k_greedy(self, C, combine):
+        """The block all-k greedy carries the same contract — and since
+        per-k greedy is bit-identical to the scalar solver, so is every
+        all-k block."""
+        Sn, N, L, _ = C.shape
+        all_k = SW.batched_greedy_search_all_k(C, combine=combine)
+        assert sorted(all_k) == list(range(1, N + 1))
+        for n, res in all_k.items():
+            per = SW.batched_greedy_search(C[:, :n], combine=combine)
+            assert np.array_equal(res.splits, per.splits)
+            fin = np.isfinite(per.cost_s)
+            assert np.array_equal(fin, np.isfinite(res.cost_s))
+            assert (res.cost_s[fin] == per.cost_s[fin]).all()
+            assert np.array_equal(res.feasible, per.feasible)
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]))
+    @settings(max_examples=10, deadline=None)
+    def test_subset_fleet_sizes(self, C, combine):
+        Sn, N, L, _ = C.shape
+        sizes = sorted({1, N})
+        sub = SW.batched_beam_search_all_k(C, combine=combine,
+                                           fleet_sizes=sizes)
+        assert sorted(sub) == sizes
+        for n in sizes:
+            per = SW.batched_beam_search(C[:, :n], combine=combine)
+            assert np.array_equal(sub[n].splits, per.splits)
+
+    def test_fleet_sizes_validated(self):
+        C = np.full((2, 3, 5, 5), 1.0)
+        with pytest.raises(ValueError):
+            SW.batched_beam_search_all_k(C, fleet_sizes=(2, 2))
+        with pytest.raises(ValueError):
+            SW.batched_beam_search_all_k(C, fleet_sizes=(0,))
+        with pytest.raises(ValueError):
+            SW.batched_beam_search_all_k(C, fleet_sizes=(4,))
+
+
 class TestSolverInvariants:
     """Cross-solver dominance properties the oracle relationship implies."""
 

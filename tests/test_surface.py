@@ -10,6 +10,7 @@ import pytest
 from repro.core.adaptive import (
     AdaptiveSplitManager,
     LinkEstimator,
+    fleet_managers,
     surface_parity_report,
 )
 from repro.core.latency import (
@@ -24,6 +25,7 @@ from repro.core.profiles import ESP_NOW, PROTOCOLS, paper_cost_model
 from repro.core.surface import (
     DegradationSurface,
     build_surface,
+    build_surfaces,
     refit_link,
 )
 from repro.core.sweep import ScenarioGrid
@@ -132,6 +134,134 @@ class TestBuildSurface:
             m.link.packet_time_s() * s for s in (1.0, 4.0))
         assert ps.loss_p == (0.0, 0.1)
         assert surf2.n_devices == 2
+
+
+# ---------------------------------------------------------------------------
+# Multi-N families: one batched solve, every fleet size
+# ---------------------------------------------------------------------------
+
+
+def _assert_protocol_surfaces_equal(a, b, ctx=""):
+    import numpy as np
+
+    assert a.packet_time_s == b.packet_time_s, ctx
+    assert a.loss_p == b.loss_p, ctx
+    assert np.array_equal(a.splits, b.splits), ctx
+    assert np.array_equal(a.chunk_bytes, b.chunk_bytes), ctx
+    assert np.array_equal(a.latency_s, b.latency_s), ctx  # exact, incl +inf
+    assert np.array_equal(a.runner_splits, b.runner_splits), ctx
+    assert np.array_equal(a.runner_latency_s, b.runner_latency_s), ctx
+
+
+FAMILY_GRID = {"pt_scale": (1.0, 8.0, 64.0), "loss_p": (0.0, 0.2)}
+
+
+class TestMultiNSurfaceFamily:
+    @pytest.mark.parametrize("solver",
+                             ["batched_dp", "batched_beam", "batched_greedy"])
+    def test_family_node_identical_to_single_builds(self, solver):
+        """build_surfaces (ONE batched pass for all fleet sizes) must be
+        node-for-node `==` to per-N build_surface calls — the multi-N
+        extension of the bit-exactness contract."""
+        m = switchy_cost_model()
+        fam = build_surfaces(m, {"lk": m.link}, (1, 2, 3), solver=solver,
+                             **FAMILY_GRID)
+        assert sorted(fam) == [1, 2, 3]
+        for n, surf in fam.items():
+            assert surf.n_devices == n
+            single = build_surface(m, {"lk": m.link}, n, solver=solver,
+                                   **FAMILY_GRID)
+            for name in surf.protocols:
+                _assert_protocol_surfaces_equal(
+                    surf.protocols[name], single.protocols[name],
+                    ctx=f"{solver} n={n} {name}")
+
+    def test_family_shares_one_solve(self):
+        m = switchy_cost_model()
+        fam = build_surfaces(m, {"lk": m.link}, (2, 3), **FAMILY_GRID)
+        # one batched pass: every surface reports the SAME family wall
+        assert fam[2].solve_time_s == fam[3].solve_time_s
+        assert fam[2].build_time_s == fam[3].build_time_s
+
+    def test_sizes_validated(self):
+        m = switchy_cost_model()
+        with pytest.raises(ValueError):
+            build_surfaces(m, {"lk": m.link}, ())
+        with pytest.raises(ValueError):
+            build_surfaces(m, {"lk": m.link}, (2, 2))
+        with pytest.raises(ValueError):
+            build_surfaces(m, {"lk": m.link}, (0,))
+
+    def test_grid_mix_errors_are_valueerrors(self):
+        m = switchy_cost_model()
+        plain = ScenarioGrid(models={"switchy": m.profile},
+                             links={"lk": m.link}, n_devices=(2,),
+                             devices=tuple(m.devices))
+        with pytest.raises(ValueError, match="no device_mixes"):
+            plain.degradation_surface(mix="gateway")
+        mixed = ScenarioGrid(models={"switchy": m.profile},
+                             links={"lk": m.link}, n_devices=(2,),
+                             devices=tuple(m.devices),
+                             device_mixes={"mx": tuple(m.devices)})
+        with pytest.raises(ValueError, match="unknown device mix"):
+            mixed.degradation_surface(mix="typo")
+        # valid mix still works
+        surf = mixed.degradation_surface(mix="mx")
+        assert surf.n_devices == 2
+
+    def test_grid_degradation_surfaces(self):
+        m = switchy_cost_model()
+        grid = ScenarioGrid(
+            models={"switchy": m.profile}, links={"lk": m.link},
+            n_devices=(2, 3), loss_p=(None, 0.1), rate_scale=(1.0, 0.25),
+            devices=tuple(m.devices))
+        fam = grid.degradation_surfaces()
+        assert sorted(fam) == [2, 3]
+        for n, surf in fam.items():
+            single = grid.degradation_surface(n_devices=n)
+            assert surf.n_devices == n
+            for name in surf.protocols:
+                _assert_protocol_surfaces_equal(
+                    surf.protocols[name], single.protocols[name])
+
+    def test_heterogeneous_devices_node_parity(self):
+        """A per-position heterogeneous fleet (distinct DeviceProfiles
+        per device) keeps the node-exact oracle-equivalence contract:
+        the manager's surface matches its own exact re-solve at every
+        node."""
+        m = switchy_cost_model()
+        hetero = replace(
+            m, devices=(m.devices[0],
+                        replace(m.devices[0], name="mid",
+                                compute_scale=0.5),
+                        replace(m.devices[0], name="srv",
+                                compute_scale=0.05,
+                                tensor_alloc_s_per_byte=0.0)))
+        mgr = AdaptiveSplitManager(
+            cost_model=hetero, protocols={"lk": m.link}, n_devices=3,
+            solver="optimal_dp", surface_grid=FAMILY_GRID)
+        assert surface_parity_report(mgr) == []
+
+    def test_fleet_managers_one_pass_equals_auto(self):
+        m = switchy_cost_model()
+        mgrs = fleet_managers(m, {"lk": m.link}, (2, 3, 2),
+                              solver="optimal_dp", surface_grid=FAMILY_GRID)
+        assert sorted(mgrs) == [2, 3]
+        for n, mgr in mgrs.items():
+            auto = AdaptiveSplitManager(
+                cost_model=m, protocols={"lk": m.link}, n_devices=n,
+                solver="optimal_dp", surface_grid=FAMILY_GRID)
+            for name in mgr.surface.protocols:
+                _assert_protocol_surfaces_equal(
+                    mgr.surface.protocols[name],
+                    auto.surface.protocols[name], ctx=f"n={n}")
+            assert mgr.current.splits == auto.current.splits
+            assert surface_parity_report(mgr) == []
+
+    def test_fleet_managers_rejects_scalar_only_solver(self):
+        m = switchy_cost_model()
+        with pytest.raises(ValueError):
+            fleet_managers(m, {"lk": m.link}, (2,), solver="first_fit")
 
 
 # ---------------------------------------------------------------------------

@@ -447,6 +447,14 @@ class TestSweepResultSerialization:
         with pytest.raises(ValueError):
             SW.stack_cost_tensors([m1, m2], 2)
 
+    def test_heterogeneous_fleet_sizes_share_one_group_solve(self):
+        """Mixed fleet sizes of one model batch in a single pass (no
+        per-(model, N) grouping) and still match the scalar oracle."""
+        grid = tiny_grid()
+        assert len(set(grid.n_devices)) > 1
+        result = SW.sweep(grid, solver="batched_dp")
+        assert SW.parity_report(result, SW.sweep_scalar(grid)) == []
+
     def test_infeasible_scenarios_reported_not_dropped(self):
         # memory limit below any single layer's weight -> nothing fits
         layers = tuple(
@@ -466,3 +474,128 @@ class TestSweepResultSerialization:
         assert math.isinf(result.rows[0].total_latency_s)
         with pytest.raises(LookupError):
             result.best()
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous device mixes (per-scenario profile gather)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def hetero_grids(draw):
+    """Grids whose scenarios mix device classes: a small bank of random
+    DeviceProfiles, 1-2 named mixes drawing from it (broadcast or
+    per-position), optional shared homogeneous fleet, 1-2 fleet sizes."""
+    L = draw(st.integers(4, 9))
+    prof = synthetic_model(draw, L)
+    bank = [
+        synthetic_device(draw, constrain_mem=draw(st.integers(0, 1)) == 1)
+        for _ in range(draw(st.integers(2, 3)))
+    ]
+    sizes = tuple(sorted(draw(st.sets(st.integers(1, min(4, L)),
+                                      min_size=1, max_size=2))))
+    n_max = max(sizes)
+    mixes = {}
+    for mi in range(draw(st.integers(1, 2))):
+        if draw(st.booleans()):  # broadcast mix (one profile, any N)
+            mixes[f"mix{mi}"] = (bank[draw(st.integers(0, len(bank) - 1))],)
+        else:  # per-position mix covering the largest fleet
+            mixes[f"mix{mi}"] = tuple(
+                bank[draw(st.integers(0, len(bank) - 1))]
+                for _ in range(n_max))
+    return SW.ScenarioGrid(
+        models={"synth": prof},
+        links={"lk": synthetic_link(draw)},
+        n_devices=sizes,
+        loss_p=(None, 0.1),
+        rate_scale=(1.0, 0.5),
+        devices=(bank[0],) if draw(st.booleans()) else (),
+        device_mixes=mixes,
+    )
+
+
+class TestHeterogeneousMixes:
+    """Per-scenario device-mix batched solves == a scalar loop over the
+    mixed DeviceProfiles (the heterogeneous-fleet parity contract)."""
+
+    @given(grid=hetero_grids())
+    @settings(max_examples=15, deadline=None)
+    def test_dp_and_greedy_match_scalar_loop(self, grid):
+        for solver, oracle in (("batched_dp", "optimal_dp"),
+                               ("batched_greedy", "greedy")):
+            batched = SW.sweep(grid, solver=solver)
+            scalar = SW.sweep_scalar(grid, solver=oracle)
+            assert SW.parity_report(batched, scalar) == []
+            for rb, rs in zip(batched.rows, scalar.rows):
+                if rb.feasible:
+                    # bit-identical objective, not approx
+                    assert rb.objective_cost_s == rs.objective_cost_s
+                    assert rb.total_latency_s == pytest.approx(
+                        rs.total_latency_s, rel=1e-12)
+
+    @given(grid=hetero_grids())
+    @settings(max_examples=10, deadline=None)
+    def test_beam_matches_standalone_batched_beam(self, grid):
+        """Group-batched beam == one-scenario batched beam per scenario
+        (exact, including ties — same arithmetic per scenario)."""
+        batched = SW.sweep(grid, solver="batched_beam", beam_width=4)
+        for row in batched.rows:
+            single = plan_split(grid.cost_model(row.scenario),
+                                row.scenario.n_devices,
+                                solver="batched_beam", beam_width=4)
+            assert row.splits == single.splits
+
+    def test_mix_axis_enumeration_and_fields(self):
+        grid = tiny_grid()
+        dev2 = DeviceProfile("d2", compute_scale=0.5)
+        mixed = SW.ScenarioGrid(
+            models=grid.models, links=grid.links, n_devices=(2, 3),
+            devices=grid.devices,
+            device_mixes={"fast_head": (dev2, grid.devices[0],
+                                        grid.devices[0])},
+        )
+        # shared fleet stays on the axis as mix=None
+        assert mixed.mix_names == (None, "fast_head")
+        assert mixed.size == len(mixed.scenarios()) == grid.size // 2
+        mixes = {sc.mix for sc in mixed.scenarios()}
+        assert mixes == {None, "fast_head"}
+        assert mixed.devices_for(mixed.scenarios()[0]) == grid.devices
+        result = SW.sweep(mixed)
+        assert SW.parity_report(result, SW.sweep_scalar(mixed)) == []
+        # mix lands in serialization + describe
+        header = result.to_csv().splitlines()[0].split(",")
+        assert "mix" in header
+        d = result.rows[-1].to_dict()
+        assert d["mix"] == "fast_head"
+        assert "mix=fast_head" in result.rows[-1].scenario.describe()
+        assert result.best(mix="fast_head").scenario.mix == "fast_head"
+
+    def test_plan_split_batch_per_model_device_tuples(self):
+        """Regression: per-scenario fleet sizes must not require every
+        cost model's device tuple to cover the LARGEST fleet in the
+        batch — each model's tuple only covers its own fleet."""
+        grid = tiny_grid()
+        base = grid.cost_model(grid.scenarios()[0])
+        gw = DeviceProfile("gw", compute_scale=0.25)
+        small = replace(base, devices=(grid.devices[0], gw))  # 2 devices
+        big = replace(base, devices=(grid.devices[0], grid.devices[0], gw))
+        plans = plan_split_batch([small, big], [2, 3], solver="batched_dp")
+        for m, p, n in zip((small, big), plans, (2, 3)):
+            ref = plan_split(m, n, solver="optimal_dp")
+            assert p.splits == ref.splits
+            assert p.n_devices == n
+
+    def test_mix_validation(self):
+        grid = tiny_grid()
+        dev = grid.devices[0]
+        with pytest.raises(ValueError):  # multi-profile mix too short
+            SW.ScenarioGrid(models=grid.models, links=grid.links,
+                            n_devices=(3,), devices=grid.devices,
+                            device_mixes={"short": (dev, dev)})
+        with pytest.raises(ValueError):  # empty mix
+            SW.ScenarioGrid(models=grid.models, links=grid.links,
+                            n_devices=(2,), devices=grid.devices,
+                            device_mixes={"none": ()})
+        with pytest.raises(ValueError):  # no devices at all
+            SW.ScenarioGrid(models=grid.models, links=grid.links,
+                            n_devices=(2,))

@@ -1,0 +1,126 @@
+"""Docs gate (CI job `docs`; also run by tests/test_docs.py).
+
+Two checks, both about keeping ``docs/`` truthful as the code moves:
+
+1. **Code blocks run** — every fenced ```python block in ``docs/*.md``
+   is executed in a fresh namespace (repo ``src/`` on the path). A
+   block immediately preceded by an ``<!-- no-run -->`` comment is only
+   compiled, not executed (for illustrative fragments). Bash blocks
+   and plain fences are ignored.
+
+2. **API coverage** — every public (non-underscore, non-module) symbol
+   bound in ``repro.core.__init__`` must be mentioned by name in
+   ``docs/api.md``, so the API page cannot silently fall behind the
+   exports.
+
+Usage:  python tools/check_docs.py   (exit 0 = docs green)
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+import types
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SRC = ROOT / "src"
+DOCS = ROOT / "docs"
+NO_RUN = "<!-- no-run -->"
+
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+
+def iter_python_blocks(text: str):
+    """Yield (start_lineno, code, runnable) for ```python fences."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = _FENCE.match(lines[i])
+        if m and m.group(1) == "python":
+            runnable = True
+            j = i - 1
+            while j >= 0 and not lines[j].strip():
+                j -= 1
+            if j >= 0 and NO_RUN in lines[j]:
+                runnable = False
+            body = []
+            i += 1
+            start = i + 1  # 1-indexed first code line
+            while i < len(lines) and not _FENCE.match(lines[i]):
+                body.append(lines[i])
+                i += 1
+            yield start, "\n".join(body), runnable
+        i += 1
+
+
+def check_code_blocks() -> list[str]:
+    failures: list[str] = []
+    if str(SRC) not in sys.path:
+        sys.path.insert(0, str(SRC))
+    for md in sorted(DOCS.glob("*.md")):
+        for lineno, code, runnable in iter_python_blocks(md.read_text()):
+            label = f"{md.relative_to(ROOT)}:{lineno}"
+            try:
+                compiled = compile(code, label, "exec")
+            except SyntaxError as e:
+                failures.append(f"{label}: syntax error: {e}")
+                continue
+            if not runnable:
+                continue
+            try:
+                exec(compiled, {"__name__": f"docs_block_{lineno}"})
+            except Exception as e:  # noqa: BLE001 - report, don't crash
+                failures.append(f"{label}: {type(e).__name__}: {e}")
+    return failures
+
+
+def public_core_symbols() -> list[str]:
+    if str(SRC) not in sys.path:
+        sys.path.insert(0, str(SRC))
+    import repro.core as core
+
+    return sorted(
+        name
+        for name, obj in vars(core).items()
+        if not name.startswith("_")
+        and not isinstance(obj, types.ModuleType)
+    )
+
+
+def check_api_coverage() -> list[str]:
+    api_text = (DOCS / "api.md").read_text()
+    return [name for name in public_core_symbols() if name not in api_text]
+
+
+def main() -> int:
+    if not DOCS.is_dir():
+        print("docs/ directory missing", file=sys.stderr)
+        return 2
+    block_failures = check_code_blocks()
+    missing = check_api_coverage()
+    ok = True
+    if block_failures:
+        ok = False
+        print("doc code blocks failed:", file=sys.stderr)
+        for f in block_failures:
+            print(f"  {f}", file=sys.stderr)
+    if missing:
+        ok = False
+        print("public repro.core symbols missing from docs/api.md:",
+              file=sys.stderr)
+        for name in missing:
+            print(f"  {name}", file=sys.stderr)
+    if ok:
+        n_blocks = sum(
+            1
+            for md in DOCS.glob("*.md")
+            for _ in iter_python_blocks(md.read_text())
+        )
+        print(f"docs OK: {n_blocks} python blocks checked, "
+              f"{len(public_core_symbols())} public symbols covered")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
