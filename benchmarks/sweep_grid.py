@@ -9,7 +9,16 @@ splits, and reports scenarios/sec + speedup.
 Usage:
   PYTHONPATH=src python benchmarks/sweep_grid.py            # full grid (512 scenarios)
   PYTHONPATH=src python benchmarks/sweep_grid.py --smoke    # CI smoke (256 scenarios)
-  ... [--backend jax] [--json BENCH_sweep.json] [--csv sweep.csv]
+  ... [--backend jax|sharded] [--json BENCH_sweep.json] [--csv sweep.csv]
+
+The report always carries a ``sharded`` section: the same grid solved
+with the scenario axis partitioned over every local JAX device
+(``repro.core.shard``), asserted node-identical to the single-device
+JAX path. Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the CI ``multi-device`` job does) to exercise a real mesh; on a plain
+host it degenerates to one shard. Both JAX paths are warmed up before
+timing so the recorded walls are steady-state (compile excluded), per
+the ``BatchedSolverResult.wall_time_s`` comparability contract.
 
 The JSON artifact (``BENCH_sweep.json`` by default) is the
 machine-readable perf record future PRs compare against.
@@ -44,9 +53,47 @@ def build_grid(smoke: bool) -> ScenarioGrid:
     )
 
 
+def run_sharded(grid, known=None) -> dict:
+    """The ``sharded`` section: the grid swept with the scenario axis
+    partitioned over every local JAX device, verified node-identical
+    (splits, feasibility, objective) to the single-device JAX path it
+    shards. ``known`` maps backend -> an already warmed-and-timed
+    ``(SweepResult, wall_s)`` pair from the main comparison, so a
+    ``--backend jax``/``sharded`` invocation never re-solves the grid
+    it just solved."""
+    from repro.core.shard import scenario_shards
+
+    def timed(backend):
+        if known and backend in known:
+            return known[backend]
+        sweep(grid, solver="batched_dp", backend=backend)  # warm: compile once
+        t0 = time.perf_counter()
+        res = sweep(grid, solver="batched_dp", backend=backend)
+        return res, time.perf_counter() - t0
+
+    jax_ref, jax_wall = timed("jax")
+    sharded, sharded_wall = timed("sharded")
+
+    node_identical = all(
+        a.splits == b.splits and a.feasible == b.feasible
+        and a.objective_cost_s == b.objective_cost_s
+        for a, b in zip(jax_ref.rows, sharded.rows))
+    return {
+        "n_shards": scenario_shards(),
+        "wall_s": round(sharded_wall, 4),
+        "solve_s": round(sharded.solve_time_s, 4),
+        "jax_single_device_wall_s": round(jax_wall, 4),
+        "jax_single_device_solve_s": round(jax_ref.solve_time_s, 4),
+        "scenarios_per_sec": round(sharded.n_scenarios / sharded_wall, 1),
+        "node_identical_to_jax": node_identical,
+    }
+
+
 def run(smoke: bool = True, backend: str = "numpy") -> dict:
     grid = build_grid(smoke)
 
+    if backend in ("jax", "sharded"):
+        sweep(grid, solver="batched_dp", backend=backend)  # warm: compile once
     t0 = time.perf_counter()
     batched = sweep(grid, solver="batched_dp", backend=backend)
     batched_wall = time.perf_counter() - t0
@@ -78,6 +125,10 @@ def run(smoke: bool = True, backend: str = "numpy") -> dict:
         "scenarios_per_sec_scalar": round(grid.size / scalar_wall, 1),
         "parity_ok": not mismatches,
         "parity_mismatches": mismatches[:10],
+        "sharded": run_sharded(
+            grid,
+            known={backend: (batched, batched_wall)}
+            if backend in ("jax", "sharded") else None),
         "best": {
             name: {
                 "scenario": row.scenario.describe(),
@@ -103,7 +154,8 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grid (256 scenarios, one model)")
-    ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"))
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax", "sharded"))
     ap.add_argument("--json", default="BENCH_sweep.json",
                     help="path for the machine-readable result (empty to skip)")
     ap.add_argument("--csv", default="",
@@ -122,6 +174,11 @@ def main() -> None:
           f"-> {report['scenarios_per_sec_scalar']} scenarios/s")
     print(f"speedup: {report['speedup_x']}x  "
           f"parity (bit-identical splits): {report['parity_ok']}")
+    sh = report["sharded"]
+    print(f"sharded: {sh['n_shards']} shard(s), {sh['wall_s']}s "
+          f"({sh['scenarios_per_sec']} scenarios/s; 1-device jax "
+          f"{sh['jax_single_device_wall_s']}s) "
+          f"node-identical to jax: {sh['node_identical_to_jax']}")
     for name, best in report["best"].items():
         print(f"best[{name}]: {best['scenario']} splits={best['splits']} "
               f"latency {best['total_latency_s']}s")
@@ -142,12 +199,14 @@ def main() -> None:
 
     if args.backend == "numpy":
         # the f64 NumPy backend is bit-identical to the scalar oracle;
-        # jax (f32 by default) may break exact-cost ties differently
+        # jax/sharded (f32 by default) may break exact-cost ties differently
         assert report["parity_ok"], "batched sweep diverged from the scalar oracle"
     elif not report["parity_ok"]:
         print(f"note: backend={args.backend} differs from the scalar oracle on "
               f"{len(report['parity_mismatches'])}+ scenarios (expected: float32 "
               f"tie-breaking; use --backend numpy for bit-exact parity)")
+    assert report["sharded"]["node_identical_to_jax"], \
+        "sharded sweep diverged from the single-device JAX path"
     if not math.isfinite(report["speedup_x"]) or report["speedup_x"] < 10:
         print(f"WARNING: speedup {report['speedup_x']}x below the 10x target")
 

@@ -10,6 +10,9 @@ Public API (documented in ``docs/api.md``; layer map in
   sweep      — batched solvers over stacked C[k,a,b] cost tensors +
                ScenarioGrid fleet sweeps (protocol x mix x fleet x loss
                x rate), all-k beam, per-scenario fleet-size vectors
+  shard      — scenario-axis sharding over the local JAX device mesh
+               (shard_map + pad/unpad; backend="sharded" everywhere the
+               batched DP runs)
   surface    — precomputed degradation surfaces (per-protocol packet-time
                x loss grids -> best plan + switch points + interpolation)
                for O(1) adaptive replanning; build_surfaces solves every
@@ -69,6 +72,14 @@ from repro.core.sweep import (  # noqa: F401
     batched_total_cost,
     stack_cost_tensors,
     sweep_scalar,
+)
+# NOTE: `repro.core.shard` likewise stays a submodule attribute (it
+# imports sweep, so it must come after it here). Importing these names
+# is cheap — JAX loads lazily, on the first sharded solve.
+from repro.core.shard import (  # noqa: F401
+    scenario_shards,
+    sharded_dp_tables,
+    sharded_optimal_dp,
 )
 from repro.core.solvers import (  # noqa: F401
     SOLVERS,

@@ -140,7 +140,11 @@ class AdaptiveSplitManager:
     replan_threshold: float = 0.10  # re-plan when >10% better is available
     solver: str = "beam"
     surface: DegradationSurface | str | None = "auto"
-    surface_grid: dict | None = None  # extra kwargs for build_surface
+    # extra kwargs for build_surface — including backend="jax"/"sharded"
+    # to build the surface on the sharded sweep engine (solver
+    # "optimal_dp" only; note the f32 node-parity caveat in
+    # docs/architecture.md)
+    surface_grid: dict | None = None
     history: list[PlanDecision] = field(default_factory=list)
 
     def __post_init__(self):

@@ -148,7 +148,11 @@ def plan_split_batch(
     stacked at the largest size and each scenario reads its own
     prefix). Returns one :class:`SplitPlan` per input, in order. The
     amortization is the point: S scenarios cost one tensor solve
-    instead of S Python-loop DP runs (see ``benchmarks/sweep_grid.py``)."""
+    instead of S Python-loop DP runs (see ``benchmarks/sweep_grid.py``).
+
+    ``backend``: ``"numpy"`` (bit-parity float64 default), ``"jax"``,
+    or ``"sharded"`` (scenario axis over the local JAX device mesh —
+    :mod:`repro.core.shard`), for ``solver="batched_dp"`` only."""
     if not cost_models:
         return []
     L = cost_models[0].profile.num_layers

@@ -427,6 +427,7 @@ def build_surface(
     pt_scale: Sequence[float] = DEFAULT_PT_SCALES,
     loss_p: Sequence[float | None] | None = DEFAULT_LOSS_GRID,
     solver: str = "batched_beam",
+    backend: str = "numpy",
     beam_width: int = 8,
     chunk_candidates: Sequence[int] | None = None,
 ) -> DegradationSurface:
@@ -457,16 +458,23 @@ def build_surface(
         same convention as :meth:`ScenarioGrid.link_variant
         <repro.core.sweep.ScenarioGrid.link_variant>`.
       solver: a :data:`repro.core.sweep.BATCHED_SOLVERS` name.
+      backend: solver backend for ``solver="batched_dp"``: ``"numpy"``
+        (default — the node-exact ``==`` parity path), ``"jax"``, or
+        ``"sharded"`` (scenario axis over the local JAX device mesh;
+        :mod:`repro.core.shard`). Non-NumPy backends run float32 by
+        default, so node decisions are cost-close rather than
+        bit-identical to the re-solve oracle unless JAX x64 is enabled.
       beam_width: Algorithm-1 width when ``solver="batched_beam"``.
       chunk_candidates: explicit activation-chunk candidates for
         :func:`optimize_chunk_size` (None → per-protocol defaults).
 
     Returns the surface for ``n_devices`` (node decisions bit-identical
-    to the legacy re-solve at every grid node)."""
+    to the legacy re-solve at every grid node on the default NumPy
+    backend)."""
     return build_surfaces(
         cost_model, protocols, (n_devices,), pt_scale=pt_scale,
-        loss_p=loss_p, solver=solver, beam_width=beam_width,
-        chunk_candidates=chunk_candidates,
+        loss_p=loss_p, solver=solver, backend=backend,
+        beam_width=beam_width, chunk_candidates=chunk_candidates,
     )[n_devices]
 
 
@@ -477,6 +485,7 @@ def build_surfaces(
     pt_scale: Sequence[float] = DEFAULT_PT_SCALES,
     loss_p: Sequence[float | None] | None = DEFAULT_LOSS_GRID,
     solver: str = "batched_beam",
+    backend: str = "numpy",
     beam_width: int = 8,
     chunk_candidates: Sequence[int] | None = None,
 ) -> dict[int, DegradationSurface]:
@@ -495,10 +504,16 @@ def build_surfaces(
     :func:`build_surface` with that single fleet size (the property
     suite asserts exact ``==``). ``build_time_s``/``solve_time_s`` on
     each surface record the SHARED family build (one pass), not a
-    per-size cost. Args otherwise as in :func:`build_surface`."""
+    per-size cost. ``backend`` selects the DP backend (``"jax"`` /
+    ``"sharded"`` accepted for ``solver="batched_dp"`` only — see
+    :func:`build_surface` for the parity caveat). Args otherwise as in
+    :func:`build_surface`."""
     if solver not in SW.BATCHED_SOLVERS:
         raise ValueError(f"unknown batched solver {solver!r}; "
                          f"options: {sorted(SW.BATCHED_SOLVERS)}")
+    if backend != "numpy" and solver != "batched_dp":
+        raise ValueError(f"{solver} supports backend='numpy' only "
+                         f"(got {backend!r})")
     sizes = tuple(n_devices)
     if not sizes:
         raise ValueError("n_devices must name at least one fleet size")
@@ -545,7 +560,10 @@ def build_surfaces(
     res_by_n: dict[int, SW.BatchedSolverResult]
     if solver == "batched_dp":
         # all-k trick: the DP table at device k IS the k-device answer
-        all_k = SW.batched_optimal_dp(C, combine=combine, return_all_k=True)
+        # (on every backend — the jax/sharded kernels return the whole
+        # per-device table stack)
+        all_k = SW.batched_optimal_dp(C, combine=combine, backend=backend,
+                                      return_all_k=True)
         res_by_n = {n: all_k[n] for n in sizes}
         solve_time = all_k[n_max].wall_time_s
     elif solver == "batched_beam":

@@ -240,6 +240,73 @@ class TestAllKBeam:
             SW.batched_beam_search_all_k(C, fleet_sizes=(4,))
 
 
+class TestJaxBackendContract:
+    """``backend="jax"`` (and the sharded path riding the same kernel)
+    now carries the full solver contract. Float32 rounding may break
+    exact-cost near-ties differently from the float64 oracle, so these
+    properties assert what survives any rounding: identical
+    feasibility, cost parity within f32 tolerance, and zero regret of
+    the reported splits when re-priced in float64. (Bitwise x64 parity
+    and fixed-seed splits equality live in ``tests/test_shard.py``.)"""
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=15, deadline=None)
+    def test_per_scenario_n_devices_with_inf_padding(self, C, combine, seed):
+        """Frozen-row subsetting on the JAX backend: +inf device slices
+        beyond each scenario's own fleet size (stack_cost_tensors
+        padding) never poison a live row."""
+        Sn, N, L, _ = C.shape
+        ns = np.random.RandomState(seed).randint(1, N + 1, size=Sn)
+        C = C.copy()
+        for s in range(Sn):
+            C[s, ns[s]:] = INF
+        a = SW.batched_optimal_dp(C, combine=combine, n_devices=ns)
+        b = SW.batched_optimal_dp(C, combine=combine, n_devices=ns,
+                                  backend="jax")
+        assert np.array_equal(a.feasible, b.feasible)
+        fin = a.feasible
+        assert np.allclose(a.cost_s[fin], b.cost_s[fin], rtol=1e-4)
+        for s in np.flatnonzero(fin):
+            n = int(ns[s])
+            repriced = S.total_cost(scalar_fn(C[s, :n]),
+                                    b.splits_tuple(s), L, combine)
+            assert repriced <= float(a.cost_s[s]) * (1 + 1e-4)
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]))
+    @settings(max_examples=10, deadline=None)
+    def test_all_k_jax_matches_numpy_all_k(self, C, combine):
+        Sn, N, L, _ = C.shape
+        ref = SW.batched_optimal_dp(C, combine=combine, return_all_k=True)
+        got = SW.batched_optimal_dp(C, combine=combine, return_all_k=True,
+                                    backend="jax")
+        assert sorted(got) == sorted(ref)
+        for n in ref:
+            assert np.array_equal(ref[n].feasible, got[n].feasible)
+            fin = ref[n].feasible
+            assert np.allclose(ref[n].cost_s[fin], got[n].cost_s[fin],
+                               rtol=1e-4)
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_sharded_node_identical_to_jax(self, C, combine, seed):
+        """The acceptance contract, as a property: the sharded path is
+        node-identical (exact ==) to the single-device JAX path — same
+        kernel, same per-scenario arithmetic, only the scenario axis is
+        partitioned."""
+        from repro.core import shard as SH
+
+        Sn, N, L, _ = C.shape
+        ns = np.random.RandomState(seed).randint(1, N + 1, size=Sn)
+        for kw in ({}, {"n_devices": ns}):
+            b = SW.batched_optimal_dp(C, combine=combine, backend="jax", **kw)
+            c = SH.sharded_optimal_dp(C, combine=combine, **kw)
+            assert np.array_equal(b.splits, c.splits)
+            assert np.array_equal(b.cost_s, c.cost_s)
+            assert np.array_equal(b.feasible, c.feasible)
+
+
 class TestSolverInvariants:
     """Cross-solver dominance properties the oracle relationship implies."""
 
