@@ -106,14 +106,19 @@ def main(argv: list[str] | None = None) -> None:
         from benchmarks import surface_replan
 
         surf_report = surface_replan.run(smoke=True)
+        a = surf_report["async"]
         csv_lines.append(
             f"surface_replan[0],{surf_report['observe_us_surface']},"
             f"speedup={surf_report['speedup_x']}x"
             f"_nodes={surf_report['n_nodes']}"
-            f"_parity={surf_report['parity_ok']}")
+            f"_parity={surf_report['parity_ok']}"
+            f"_async_inflight={a['inflight_over_steady_x']}x"
+            f"_async_parity={a['parity_ok']}")
         print(f"=== surface_replan (smoke): {surf_report['n_nodes']} nodes, "
               f"{surf_report['speedup_x']}x observe() speedup, "
-              f"parity={surf_report['parity_ok']} ===")
+              f"parity={surf_report['parity_ok']}; async in-flight "
+              f"{a['inflight_over_steady_x']}x steady-state, "
+              f"async parity={a['parity_ok']} ===")
     if "roofline" in selected:
         try:
             timed("roofline",

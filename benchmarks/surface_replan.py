@@ -13,10 +13,19 @@ fleet size 2..5 built by ``build_surfaces`` in ONE batched solve
 per-N ``build_surface`` loop, asserting the family is node-for-node
 ``==`` to the per-N builds.
 
+A third section (``async``) measures stale-while-revalidate rebuilds:
+observe() p50/p99 while a re-centered surface rebuild is IN FLIGHT
+(deterministically — the build sits un-run on a ManualExecutor) vs the
+blocking per-observe envelope re-solve it replaces and vs the wall a
+synchronous in-observe rebuild would stall the loop for; plus the
+drift-to-adoption lag on the real background executor. The
+async-adopted surface is asserted node-identical to the same
+``build_surfaces`` call made synchronously.
+
 Usage:
   PYTHONPATH=src python benchmarks/surface_replan.py            # full grid
   PYTHONPATH=src python benchmarks/surface_replan.py --smoke    # CI smoke
-  ... [--json BENCH_surface.json]
+  ... [--sections observe multi_n async] [--json BENCH_surface.json]
 
 The JSON artifact (``BENCH_surface.json``) is the machine-readable perf
 record CI uploads alongside ``BENCH_sweep.json``.
@@ -31,12 +40,17 @@ import time
 import numpy as np
 
 from repro.core.adaptive import AdaptiveSplitManager, surface_parity_report
+from repro.core.async_replan import ManualExecutor
 from repro.core.profiles import ESP_NOW, PROTOCOLS, paper_cost_model
 from repro.core.surface import build_surface, build_surfaces
 
 N_DEVICES = 5
 FAMILY_SIZES = (2, 3, 4, 5)
 SPEEDUP_TARGET = 50.0
+SECTIONS = ("observe", "multi_n", "async")
+# acceptance: in-flight observe() p50 stays within this factor of the
+# steady-state surface-hit p50 (the stale-while-revalidate contract)
+INFLIGHT_TARGET_X = 2.0
 
 # drifting-link trace: (packet-time factor over nominal, observes)
 TRACE = ((1, 50), (20, 100), (100, 150), (400, 200), (30, 100), (1, 100))
@@ -118,70 +132,240 @@ def _family_section(smoke: bool) -> dict:
     }
 
 
-def run(smoke: bool = True) -> dict:
-    surface_mgr, resolve_mgr = _managers(smoke)
-    surf = surface_mgr.surface
+def _percentile(samples: list[float], q: float) -> float:
+    """Nearest-rank percentile of raw per-call samples."""
+    s = sorted(samples)
+    return s[min(len(s) - 1, int(q / 100.0 * len(s)))]
 
-    resolve_s = _drive(resolve_mgr, repeats=1)
-    surface_s = _drive(surface_mgr, repeats=3 if smoke else 10)
-    # the same node-by-node oracle check tier-1 runs (tests/test_surface.py)
-    mismatches = surface_parity_report(surface_mgr)
-    family = _family_section(smoke)
 
-    total = surface_mgr.surface_hits + surface_mgr.exact_fallbacks
+def _observe_samples(mgr, latency_s: float, n: int,
+                     nbytes: int = 5488) -> list[float]:
+    """Per-observe wall seconds for ``n`` hops at a fixed latency."""
+    out = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        mgr.observe("esp_now", nbytes, latency_s)
+        out.append(time.perf_counter() - t0)
+    return out
+
+
+def _surfaces_node_equal(a, b) -> bool:
+    return all(
+        a.protocols[k].packet_time_s == b.protocols[k].packet_time_s
+        and a.protocols[k].loss_p == b.protocols[k].loss_p
+        and np.array_equal(a.protocols[k].splits, b.protocols[k].splits)
+        and np.array_equal(a.protocols[k].chunk_bytes,
+                           b.protocols[k].chunk_bytes)
+        and np.array_equal(a.protocols[k].latency_s,
+                           b.protocols[k].latency_s)
+        for k in a.protocols)
+
+
+def _async_section(smoke: bool) -> dict:
+    """Stale-while-revalidate: observe() while a rebuild is in flight.
+
+    The in-flight window is exact, not a race: the rebuild job sits
+    un-run on a ManualExecutor while observe() latency is sampled, then
+    the job runs and a later observe() adopts the result (parity with
+    the synchronous build asserted). Drift-to-adoption lag is measured
+    separately on the real single-worker-thread executor."""
+    grid = {"pt_scale": (1.0, 4.0, 16.0, 64.0, 256.0, 512.0),
+            "loss_p": (0.0, 0.1, 0.3)} if smoke else {}
+    cost_model = paper_cost_model("mobilenet_v2", "esp_now")
+    nbytes = 5488
+    good = ESP_NOW.transmission_latency_s(nbytes)
+    deep = 5000 * good  # far beyond the 512x envelope
+    n_samples = 2000 if smoke else 5000
+
+    ex = ManualExecutor()
+    mgr = AdaptiveSplitManager(
+        cost_model=cost_model, protocols=dict(PROTOCOLS),
+        n_devices=N_DEVICES, solver="optimal_dp", surface_grid=grid,
+        async_rebuild=ex)
+
+    # steady state: every observe is a surface hit
+    _observe_samples(mgr, good, 300)  # warm caches
+    steady = _observe_samples(mgr, good, n_samples)
+
+    # drift out of the envelope; the re-centered rebuild queues on the
+    # (never-run) executor and the EWMA settles at the deep estimate
+    _observe_samples(mgr, deep, 120)
+    assert ex.pending() == 1, "rebuild was not coalesced to one job"
+    stale0, exact0 = mgr.stale_serves, mgr.exact_fallbacks
+    inflight = _observe_samples(mgr, deep, n_samples)
+    stale_serves = mgr.stale_serves - stale0
+    exact_inflight = mgr.exact_fallbacks - exact0
+
+    # blocking baseline 1: the sync manager's per-observe envelope
+    # re-solve on the identical drifted state
+    sync_mgr = AdaptiveSplitManager(
+        cost_model=cost_model, protocols=dict(PROTOCOLS),
+        n_devices=N_DEVICES, solver="optimal_dp", surface_grid=grid)
+    _observe_samples(sync_mgr, deep, 120)
+    resolve = _observe_samples(sync_mgr, deep, min(400, n_samples))
+
+    # blocking baseline 2: the wall a synchronous in-observe rebuild
+    # would stall the serving loop for (the actual queued request)
+    req = mgr._rebuilder.last_request
+    t0 = time.perf_counter()
+    sync_build = mgr._rebuilder.build_sync(req)
+    blocking_rebuild_s = time.perf_counter() - t0
+
+    # swap-on-ready + adoption parity: run the build, adopt on the next
+    # observe, and keep cycling until the settled state is covered
+    ex.run_all()
+    _observe_samples(mgr, deep, 1)
+    first_adopted = mgr.surface
+    parity_ok = (mgr.surface_swaps == 1
+                 and _surfaces_node_equal(first_adopted,
+                                          sync_build[N_DEVICES]))
+    cycles = 1
+    est = mgr.estimators["esp_now"]
+    while not mgr.surface.in_envelope("esp_now", est.packet_time_estimate,
+                                      est.loss_estimate) and cycles < 6:
+        ex.run_all()
+        _observe_samples(mgr, deep, 2)
+        cycles += 1
+    post = _observe_samples(mgr, deep, n_samples // 2)
+
+    # drift-to-adoption lag on the REAL background executor: observes
+    # keep flowing on the serving thread while the worker rebuilds
+    lag_mgr = AdaptiveSplitManager(
+        cost_model=cost_model, protocols=dict(PROTOCOLS),
+        n_devices=N_DEVICES, solver="optimal_dp", surface_grid=grid,
+        async_rebuild=True)
+    _observe_samples(lag_mgr, good, 50)
+    t0 = time.perf_counter()
+    lag_obs = 0
+    while lag_mgr.surface_swaps == 0 and lag_obs < 2_000_000:
+        lag_mgr.observe("esp_now", nbytes, deep)
+        lag_obs += 1
+    lag_s = time.perf_counter() - t0
+    lag_mgr.close()
+
+    steady_p50 = _percentile(steady, 50)
+    inflight_p50 = _percentile(inflight, 50)
     return {
+        "n_samples": n_samples,
+        "steady_hit_us_p50": round(steady_p50 * 1e6, 2),
+        "steady_hit_us_p99": round(_percentile(steady, 99) * 1e6, 2),
+        "inflight_us_p50": round(inflight_p50 * 1e6, 2),
+        "inflight_us_p99": round(_percentile(inflight, 99) * 1e6, 2),
+        "inflight_over_steady_x": round(inflight_p50 / steady_p50, 2),
+        "post_adoption_us_p50": round(_percentile(post, 50) * 1e6, 2),
+        "blocking_resolve_us_p50": round(_percentile(resolve, 50) * 1e6, 2),
+        "blocking_resolve_over_inflight_x": round(
+            _percentile(resolve, 50) / inflight_p50, 1),
+        "blocking_rebuild_s": round(blocking_rebuild_s, 4),
+        "stale_serves_inflight": stale_serves,
+        "exact_fallbacks_inflight": exact_inflight,
+        "rebuild_requests": mgr.rebuild_requests,
+        "builds_started": mgr._rebuilder.builds_started,
+        "surface_swaps": mgr.surface_swaps,
+        "adoption_cycles": cycles,
+        "drift_to_adoption_s": round(lag_s, 4),
+        "drift_to_adoption_observes": lag_obs,
+        "parity_ok": parity_ok,
+    }
+
+
+def run(smoke: bool = True, sections: tuple[str, ...] = SECTIONS) -> dict:
+    report: dict = {
         "benchmark": "surface_replan",
         "mode": "smoke" if smoke else "full",
         "n_devices": N_DEVICES,
-        "n_protocols": len(surf.protocols),
-        "n_nodes": surf.n_nodes,
-        "n_switch_points": len(surf.switch_points()),
-        "surface_build_s": round(surf.build_time_s, 4),
-        "surface_solve_s": round(surf.solve_time_s, 4),
-        "observe_us_surface": round(surface_s * 1e6, 2),
-        "observe_us_resolve": round(resolve_s * 1e6, 2),
-        "speedup_x": round(resolve_s / surface_s, 1),
-        "surface_hit_rate": round(surface_mgr.surface_hits / max(1, total), 4),
-        "exact_fallbacks": surface_mgr.exact_fallbacks,
-        "plans_agree_end_of_trace":
-            surface_mgr.current.splits == resolve_mgr.current.splits
-            and surface_mgr.current.protocol == resolve_mgr.current.protocol,
-        "parity_ok": not mismatches,
-        "parity_mismatches": mismatches[:10],
-        "multi_n": family,
+        "sections": list(sections),
     }
+    if "observe" in sections:
+        surface_mgr, resolve_mgr = _managers(smoke)
+        surf = surface_mgr.surface
+
+        resolve_s = _drive(resolve_mgr, repeats=1)
+        surface_s = _drive(surface_mgr, repeats=3 if smoke else 10)
+        # the same node-by-node oracle check tier-1 runs
+        # (tests/test_surface.py)
+        mismatches = surface_parity_report(surface_mgr)
+
+        total = surface_mgr.surface_hits + surface_mgr.exact_fallbacks
+        report.update({
+            "n_protocols": len(surf.protocols),
+            "n_nodes": surf.n_nodes,
+            "n_switch_points": len(surf.switch_points()),
+            "surface_build_s": round(surf.build_time_s, 4),
+            "surface_solve_s": round(surf.solve_time_s, 4),
+            "observe_us_surface": round(surface_s * 1e6, 2),
+            "observe_us_resolve": round(resolve_s * 1e6, 2),
+            "speedup_x": round(resolve_s / surface_s, 1),
+            "surface_hit_rate": round(
+                surface_mgr.surface_hits / max(1, total), 4),
+            "exact_fallbacks": surface_mgr.exact_fallbacks,
+            "plans_agree_end_of_trace":
+                surface_mgr.current.splits == resolve_mgr.current.splits
+                and surface_mgr.current.protocol
+                == resolve_mgr.current.protocol,
+            "parity_ok": not mismatches,
+            "parity_mismatches": mismatches[:10],
+        })
+    if "multi_n" in sections:
+        report["multi_n"] = _family_section(smoke)
+    if "async" in sections:
+        report["async"] = _async_section(smoke)
+    return report
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grid (fewer surface nodes)")
+    ap.add_argument("--sections", nargs="+", choices=SECTIONS,
+                    default=list(SECTIONS), metavar="SECTION",
+                    help=f"sections to run (default: all of "
+                         f"{', '.join(SECTIONS)})")
     ap.add_argument("--json", default="BENCH_surface.json",
                     help="path for the machine-readable result (empty to skip)")
     args = ap.parse_args()
 
     print("\n=== surface_replan: O(1) surface lookup vs per-observe re-solve ===")
-    report = run(smoke=args.smoke)
-    print(f"surface: {report['n_nodes']} nodes / {report['n_protocols']} "
-          f"protocols, {report['n_switch_points']} switch points, "
-          f"built in {report['surface_build_s']}s "
-          f"(solver {report['surface_solve_s']}s)")
-    print(f"observe(): surface {report['observe_us_surface']} us  "
-          f"re-solve {report['observe_us_resolve']} us  "
-          f"-> {report['speedup_x']}x")
-    print(f"surface hit rate {report['surface_hit_rate']}, "
-          f"{report['exact_fallbacks']} envelope fallbacks; "
-          f"end-of-trace plans agree: {report['plans_agree_end_of_trace']}")
-    print(f"node parity vs re-solve oracle (exact ==): {report['parity_ok']}")
-    if not report["parity_ok"]:
-        for m in report["parity_mismatches"]:
-            print("  MISMATCH:", m)
-    fam = report["multi_n"]
-    print(f"multi-N family (sizes {fam['sizes']}): one all-k solve "
-          f"{fam['family_build_s']}s (solver {fam['family_solve_s']}s) vs "
-          f"per-N loop {fam['per_n_loop_s']}s (solver {fam['per_n_solve_s']}s)"
-          f" -> build {fam['build_speedup_x']}x, solve "
-          f"{fam['solve_speedup_x']}x; node parity: {fam['parity_ok']}")
+    report = run(smoke=args.smoke, sections=tuple(args.sections))
+    if "observe" in args.sections:
+        print(f"surface: {report['n_nodes']} nodes / {report['n_protocols']} "
+              f"protocols, {report['n_switch_points']} switch points, "
+              f"built in {report['surface_build_s']}s "
+              f"(solver {report['surface_solve_s']}s)")
+        print(f"observe(): surface {report['observe_us_surface']} us  "
+              f"re-solve {report['observe_us_resolve']} us  "
+              f"-> {report['speedup_x']}x")
+        print(f"surface hit rate {report['surface_hit_rate']}, "
+              f"{report['exact_fallbacks']} envelope fallbacks; "
+              f"end-of-trace plans agree: "
+              f"{report['plans_agree_end_of_trace']}")
+        print(f"node parity vs re-solve oracle (exact ==): "
+              f"{report['parity_ok']}")
+        if not report["parity_ok"]:
+            for m in report["parity_mismatches"]:
+                print("  MISMATCH:", m)
+    fam = report.get("multi_n")
+    if fam is not None:
+        print(f"multi-N family (sizes {fam['sizes']}): one all-k solve "
+              f"{fam['family_build_s']}s (solver {fam['family_solve_s']}s) vs "
+              f"per-N loop {fam['per_n_loop_s']}s (solver {fam['per_n_solve_s']}s)"
+              f" -> build {fam['build_speedup_x']}x, solve "
+              f"{fam['solve_speedup_x']}x; node parity: {fam['parity_ok']}")
+    a = report.get("async")
+    if a is not None:
+        print(f"async: observe() in-flight p50 {a['inflight_us_p50']} us "
+              f"(p99 {a['inflight_us_p99']} us) vs steady-state hit "
+              f"{a['steady_hit_us_p50']} us -> {a['inflight_over_steady_x']}x; "
+              f"blocking envelope re-solve {a['blocking_resolve_us_p50']} us "
+              f"({a['blocking_resolve_over_inflight_x']}x the in-flight path); "
+              f"a synchronous rebuild would stall {a['blocking_rebuild_s']}s")
+        print(f"async: {a['stale_serves_inflight']} stale serves / "
+              f"{a['exact_fallbacks_inflight']} bounded exact fallbacks "
+              f"in-flight; drift->adoption "
+              f"{a['drift_to_adoption_s']}s over "
+              f"{a['drift_to_adoption_observes']} non-blocked observes "
+              f"({a['adoption_cycles']} re-center cycle(s)); "
+              f"async==sync node parity: {a['parity_ok']}")
 
     if args.json:
         with open(args.json, "w") as f:
@@ -189,11 +373,20 @@ def main() -> None:
             f.write("\n")
         print(f"wrote {args.json}")
 
-    assert report["parity_ok"], "surface diverged from the re-solve oracle"
-    assert fam["parity_ok"], "multi-N family diverged from per-N builds"
-    if report["speedup_x"] < SPEEDUP_TARGET:
-        print(f"WARNING: speedup {report['speedup_x']}x below the "
-              f"{SPEEDUP_TARGET}x target")
+    if "observe" in args.sections:
+        assert report["parity_ok"], "surface diverged from the re-solve oracle"
+        if report["speedup_x"] < SPEEDUP_TARGET:
+            print(f"WARNING: speedup {report['speedup_x']}x below the "
+                  f"{SPEEDUP_TARGET}x target")
+    if fam is not None:
+        assert fam["parity_ok"], "multi-N family diverged from per-N builds"
+    if a is not None:
+        assert a["parity_ok"], \
+            "async-adopted surface diverged from the synchronous build"
+        if a["inflight_over_steady_x"] > INFLIGHT_TARGET_X:
+            print(f"WARNING: in-flight observe() p50 is "
+                  f"{a['inflight_over_steady_x']}x steady-state (target "
+                  f"<= {INFLIGHT_TARGET_X}x)")
 
 
 if __name__ == "__main__":

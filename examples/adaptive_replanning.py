@@ -11,12 +11,20 @@ batched sweep engine at startup, so each observe() is an O(1) grid
 lookup + hysteresis check instead of a Beam-Search re-solve — the
 surface also reports the *switch points* where the optimal plan changes.
 
+The second act drives the link BEYOND the surface envelope with
+async_rebuild on: observe() keeps serving from the stale surface
+(stale-while-revalidate) while a re-centered rebuild runs "in the
+background" — here on a deterministic ManualExecutor so the in-flight
+window is visible — and a later observe() atomically swaps the rebuilt
+surface in, restoring the O(1) path at the new operating point.
+
 Run: PYTHONPATH=src python examples/adaptive_replanning.py
 """
 
 import time
 
 from repro.core.adaptive import AdaptiveSplitManager
+from repro.core.async_replan import ManualExecutor
 from repro.core.profiles import ESP_NOW, PROTOCOLS, paper_cost_model
 
 
@@ -67,6 +75,33 @@ def main():
         print(f"  step {d.step:4d}: {d.protocol:8s} splits={d.splits} "
               f"chunk={d.chunk_bytes}B predicted={d.predicted_latency_s:.3f}s "
               f"({d.reason})")
+
+    # -- act two: drift past the envelope, rebuild without blocking --------
+    print("\n--- async stale-while-revalidate (drift beyond the envelope) ---")
+    ex = ManualExecutor()
+    amgr = AdaptiveSplitManager(
+        cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+        protocols=dict(PROTOCOLS), n_devices=2,
+        surface_grid={"pt_scale": (1.0, 4.0, 16.0), "loss_p": (0.0, 0.1)},
+        async_rebuild=ex,  # deterministic executor: WE run the build
+    )
+    deep = 3000 * ESP_NOW.transmission_latency_s(nbytes)  # 3000x nominal
+    for _ in range(120):
+        amgr.observe("esp_now", nbytes, deep)
+    print(f"in-flight: {amgr.stale_serves} observes served from the STALE "
+          f"surface, {amgr.exact_fallbacks} bounded exact fallbacks, "
+          f"{ex.pending()} rebuild queued (envelope max was 16x nominal)")
+    while ex.pending():  # "background" build completes; next observe swaps
+        ex.run_all()
+        amgr.observe("esp_now", nbytes, deep)
+    h0 = amgr.surface_hits
+    for _ in range(30):
+        amgr.observe("esp_now", nbytes, deep)
+    d = amgr.current
+    print(f"adopted {amgr.surface_swaps} rebuilt surface(s) "
+          f"(generation {amgr._rebuilder.generation}); O(1) lookups are "
+          f"back: {amgr.surface_hits - h0}/30 hits at the new operating "
+          f"point -> plan {d.protocol} splits={d.splits}")
 
 
 if __name__ == "__main__":

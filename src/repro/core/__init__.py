@@ -17,6 +17,9 @@ Public API (documented in ``docs/api.md``; layer map in
                x loss grids -> best plan + switch points + interpolation)
                for O(1) adaptive replanning; build_surfaces solves every
                fleet size in one batched pass
+  async_replan — stale-while-revalidate surface rebuilds: SurfaceRebuilder
+               runs re-centered build_surfaces on a background executor,
+               generation-versioned atomic swap-on-ready
   adaptive   — LinkEstimator + AdaptiveSplitManager runtime replanning;
                fleet_managers for mixed-fleet-size deployments
   profiles   — paper-calibrated ESP32 + protocol tables; TPU v5e constants
@@ -92,8 +95,18 @@ from repro.core.solvers import (  # noqa: F401
     random_fit,
     total_cost,
 )
+# NOTE: `repro.core.async_replan` likewise stays a submodule attribute;
+# it imports surface, so it must come after it (and before adaptive,
+# which imports it).
+from repro.core.async_replan import (  # noqa: F401
+    ManualExecutor,
+    RebuildRequest,
+    SurfaceRebuilder,
+    recentered_axes,
+)
 # NOTE: `repro.core.adaptive` likewise stays a submodule attribute; it
-# imports planner/surface/sweep, so it must come after them here.
+# imports planner/surface/sweep/async_replan, so it must come after
+# them here.
 from repro.core.adaptive import (  # noqa: F401
     AdaptiveSplitManager,
     LinkEstimator,

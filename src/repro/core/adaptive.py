@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import solvers as S
 from repro.core import sweep as SW
+from repro.core.async_replan import SurfaceRebuilder
 from repro.core.latency import LinkProfile, SplitCostModel
 from repro.core.planner import SplitPlan, _build_plan, plan_split, plans_from_batched
 from repro.core.surface import (  # noqa: F401  (optimize_chunk_size re-exported)
@@ -132,6 +133,31 @@ class AdaptiveSplitManager:
     * a prebuilt :class:`DegradationSurface` — use it as-is.
     * ``None`` — legacy behavior: a full batched re-solve on every
       ``observe()`` (the benchmark baseline).
+
+    ``async_rebuild`` controls what happens when estimates leave the
+    surface envelope (requires a surface — raises otherwise):
+
+    * ``False``/``None`` (default) — synchronous behavior: every
+      out-of-envelope ``observe()`` blocks on an exact batched re-solve
+      and the surface is never rebuilt.
+    * ``True`` — stale-while-revalidate: drift enqueues a re-centered
+      surface rebuild on a background
+      :class:`~repro.core.async_replan.SurfaceRebuilder` (single worker
+      thread) while ``observe()`` keeps serving from the stale surface;
+      the exact re-solve runs only when the estimate has moved
+      materially (``stale_rtol``/``stale_loss_tol``) since the last
+      one, bounding the in-flight fallback cost. The rebuilt surface is
+      swapped in atomically on a later ``observe()``
+      (``surface_swaps`` counts adoptions, ``rebuild_requests`` the
+      drift triggers, ``stale_serves`` the observes answered from the
+      stale decision while a rebuild was pending).
+    * an executor (anything with ``submit(fn)``, e.g.
+      :class:`~repro.core.async_replan.ManualExecutor`) — as ``True``
+      but builds run on the injected executor (deterministic tests).
+    * a prebuilt :class:`~repro.core.async_replan.SurfaceRebuilder` —
+      share one rebuilder across managers; a whole fleet's drifted
+      scenarios then batch into ONE multi-size solve per cycle (see
+      :func:`fleet_managers`).
     """
 
     cost_model: SplitCostModel  # device/profile side (protocol swapped in)
@@ -145,6 +171,15 @@ class AdaptiveSplitManager:
     # "optimal_dp" only; note the f32 node-parity caveat in
     # docs/architecture.md)
     surface_grid: dict | None = None
+    # async out-of-envelope handling: False/None (sync re-solve), True
+    # (background thread), an executor with submit(), or a shared
+    # SurfaceRebuilder — see the class docstring
+    async_rebuild: object | bool | None = None
+    # staleness window for the in-flight fallback: the exact re-solve
+    # repeats only when the estimate moved more than this since the
+    # last one (relative on packet time, absolute on loss)
+    stale_rtol: float = 0.10
+    stale_loss_tol: float = 0.02
     history: list[PlanDecision] = field(default_factory=list)
 
     def __post_init__(self):
@@ -170,6 +205,27 @@ class AdaptiveSplitManager:
                 # batched twin to precompute with: keep the legacy
                 # re-solve-per-observe path instead of refusing to start
                 self.surface = None
+        self.rebuild_requests = 0
+        self.surface_swaps = 0
+        self.stale_serves = 0
+        self._rebuilder: SurfaceRebuilder | None = None
+        self._fallback_state: dict[str, tuple[float, float]] | None = None
+        if self.async_rebuild:
+            if self.surface is None:
+                raise ValueError(
+                    f"async_rebuild needs a degradation surface to "
+                    f"revalidate; solver {self.solver!r} has no batched "
+                    f"twin (or surface=None was forced)")
+            if isinstance(self.async_rebuild, SurfaceRebuilder):
+                self._rebuilder = self.async_rebuild
+            else:
+                self._rebuilder = SurfaceRebuilder(
+                    self.cost_model, self.protocols,
+                    solver=self._batched_solver_name(),
+                    executor=(None if self.async_rebuild is True
+                              else self.async_rebuild),
+                    **(self.surface_grid or {}),
+                )
         self.current: PlanDecision | None = None
         self._replan("initial")
 
@@ -180,20 +236,31 @@ class AdaptiveSplitManager:
 
         With a surface this is O(1): per-protocol grid lookups + one
         hysteresis comparison. The solver only runs when an estimate
-        leaves the surface envelope (``exact_fallbacks`` counts those)."""
+        leaves the surface envelope (``exact_fallbacks`` counts those) —
+        and with ``async_rebuild`` even that is bounded: drift enqueues
+        a background rebuild and the in-flight window is served from
+        the stale decision (``stale_serves``) unless the estimate keeps
+        moving materially."""
         self._step += 1
         self.estimators[protocol].observe_hop(nbytes, latency_s, retries)
+        if self._rebuilder is not None:
+            self._adopt_ready_surface()
         if self.surface is None:
             self._observe_resolve()
             return
-        states = {name: (est._packet_time_s, est._loss)
+        # single-sourced on the estimate accessors — the SAME view
+        # _observe_resolve prices via current_profile(); building states
+        # from the raw EWMA fields here once let the envelope lookup and
+        # the re-solve disagree during the loss warm-up window
+        states = {name: (est.packet_time_estimate, est.loss_estimate)
                   for name, est in self.estimators.items()}
         hit = self.surface.best_lookup(states)
         if hit is None:  # outside the envelope (or nothing feasible on it)
-            self.exact_fallbacks += 1
-            self._observe_resolve(reason_suffix=" [envelope re-solve]")
+            self._observe_off_surface(states)
             return
         self.surface_hits += 1
+        if self._fallback_state is not None:
+            self._fallback_state = None  # back inside: next drift re-solves
         if self.current is None:
             self._adopt(hit.protocol, hit.splits, hit.chunk_bytes,
                         hit.latency_s, "initial")
@@ -212,6 +279,72 @@ class AdaptiveSplitManager:
                         hit.latency_s,
                         f"estimated {cur_lat:.3f}s -> {hit.latency_s:.3f}s "
                         f"available")
+
+    def _observe_off_surface(self, states: dict[str, tuple[float, float]]):
+        """An estimate left the surface envelope. Synchronous mode: exact
+        re-solve every time. Async mode (stale-while-revalidate): enqueue
+        a re-centered rebuild on material movement and otherwise keep
+        serving the current (stale) decision — the exact re-solve runs
+        once per material drift step, not once per observe."""
+        if self._rebuilder is not None:
+            moved = self._states_moved(states)
+            if moved:
+                self.rebuild_requests += 1
+                self._rebuilder.request(self.n_devices, states)
+            elif self.current is not None:
+                self.stale_serves += 1
+                return
+        self.exact_fallbacks += 1
+        self._observe_resolve(reason_suffix=" [envelope re-solve]")
+        self._fallback_state = dict(states)
+
+    def _states_moved(self, states: dict[str, tuple[float, float]]) -> bool:
+        """Has any estimate moved materially since the last exact
+        fallback re-solve? (The staleness window: within it, the stale
+        decision keeps serving.)"""
+        prev = self._fallback_state
+        if prev is None:
+            return True
+        for name, (pt, lp) in states.items():
+            pt0, lp0 = prev[name]
+            if abs(pt - pt0) > self.stale_rtol * pt0 \
+                    or abs(lp - lp0) > self.stale_loss_tol:
+                return True
+        return False
+
+    def _adopt_ready_surface(self):
+        """Atomic swap-on-ready: if the rebuilder finished a NEWER
+        surface for this fleet size, adopt it (one reference swap) and
+        reset the staleness window. A rebuild FAILURE also resets the
+        window before propagating — otherwise a settled estimate would
+        sit inside the staleness tolerance forever and the failed
+        rebuild would never be re-requested."""
+        try:
+            ready = self._rebuilder.poll(self.n_devices)
+        except Exception:
+            self._fallback_state = None  # next drifted observe re-requests
+            raise
+        if ready is not None:
+            self.surface = ready
+            self.surface_swaps += 1
+            self._fallback_state = None
+
+    @property
+    def rebuilder(self) -> SurfaceRebuilder | None:
+        """The async rebuilder in use (None in synchronous mode). For a
+        fleet this is the SHARED rebuilder — shut it down once via
+        ``managers[n].rebuilder.shutdown()`` when the fleet retires."""
+        return self._rebuilder
+
+    def close(self):
+        """Release the background rebuild executor this manager created
+        (``async_rebuild=True`` or an injected executor). A SHARED
+        rebuilder (passed in as a ``SurfaceRebuilder``) is left running
+        — its owner closes it. Safe to call repeatedly; the manager
+        keeps serving from its current surface afterwards."""
+        if self._rebuilder is not None \
+                and not isinstance(self.async_rebuild, SurfaceRebuilder):
+            self._rebuilder.shutdown()
 
     def _observe_resolve(self, reason_suffix: str = ""):
         """The legacy per-observe path: full batched re-solve."""
@@ -371,6 +504,7 @@ def fleet_managers(
     n_devices: Sequence[int],
     solver: str = "beam",
     surface_grid: dict | None = None,
+    async_rebuild: object | bool | None = None,
     **manager_kwargs,
 ) -> dict[int, AdaptiveSplitManager]:
     """Adaptive managers for a heterogeneous fleet of deployments — one
@@ -391,7 +525,14 @@ def fleet_managers(
     (like ``AdaptiveSplitManager.surface_grid``); ``manager_kwargs``
     reach each :class:`AdaptiveSplitManager` (e.g.
     ``replan_threshold``). Duplicate sizes collapse; returned dict is
-    keyed by fleet size in first-seen order."""
+    keyed by fleet size in first-seen order.
+
+    ``async_rebuild`` (``True`` or an executor) gives the WHOLE fleet
+    ONE shared :class:`~repro.core.async_replan.SurfaceRebuilder`:
+    every manager's drifted scenarios queue on it and each rebuild
+    cycle batches all pending fleet sizes into a single multi-size
+    ``build_surfaces`` solve (the same all-k pass the initial family
+    build uses) — N drifting managers cost one solve, not N."""
     sizes = tuple(dict.fromkeys(int(n) for n in n_devices))
     batched = _batched_twin(solver)
     if batched not in SW.BATCHED_SOLVERS:
@@ -401,10 +542,18 @@ def fleet_managers(
             f"{', '.join(sorted(SW.BATCHED_SOLVERS))}")
     surfaces = build_surfaces(cost_model, protocols, sizes,
                               solver=batched, **(surface_grid or {}))
+    rebuilder: object | bool | None = async_rebuild
+    if async_rebuild and not isinstance(async_rebuild, SurfaceRebuilder):
+        rebuilder = SurfaceRebuilder(
+            cost_model, dict(protocols), solver=batched,
+            executor=None if async_rebuild is True else async_rebuild,
+            **(surface_grid or {}),
+        )
     return {
         n: AdaptiveSplitManager(
             cost_model=cost_model, protocols=dict(protocols), n_devices=n,
-            solver=solver, surface=surfaces[n], **manager_kwargs)
+            solver=solver, surface=surfaces[n], async_rebuild=rebuilder,
+            **manager_kwargs)
         for n in sizes
     }
 

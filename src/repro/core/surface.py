@@ -50,6 +50,13 @@ from repro.core.latency import LinkProfile, SplitCostModel
 
 INF = float("inf")
 
+# Loss estimates at or above this map to the identical re-fitted link
+# (the refit_link clamp), so surface queries clamp the loss coordinate
+# here EXACTLY — the loss-axis mirror of the packet-time saturation
+# floor. Keep in sync with nothing: refit_link below is the single
+# source and everything else reads this constant.
+LOSS_CLAMP = 0.9
+
 __all__ = [
     "DEFAULT_LOSS_GRID",
     "DEFAULT_PT_SCALES",
@@ -78,7 +85,11 @@ def refit_link(base: LinkProfile, packet_time_s: float,
     Args:
       base: the protocol's deployment-time :class:`LinkProfile`.
       packet_time_s: estimated expected per-packet time.
-      loss_p: estimated loss probability (clamped to 0.9 on the link).
+      loss_p: estimated loss probability, clamped into
+        ``[0, LOSS_CLAMP]`` BEFORE any arithmetic — every estimate at
+        or above the clamp maps to the identical link, so surface
+        lookups may clamp the loss coordinate exactly (the loss-axis
+        mirror of the packet-time saturation floor).
 
     Returns the base profile re-fitted so that
     ``profile.packet_time_s()`` reproduces the estimate: the
@@ -97,9 +108,10 @@ def refit_link(base: LinkProfile, packet_time_s: float,
     arithmetic in one place only) breaks the node-exact ``==`` parity
     that ``tests/test_surface.py`` and ``benchmarks/surface_replan.py``
     assert."""
-    serial = base.mtu_bytes / (base.rate_bytes_per_s * (1.0 - max(loss_p, 0.0)))
+    loss = min(max(loss_p, 0.0), LOSS_CLAMP)
+    serial = base.mtu_bytes / (base.rate_bytes_per_s * (1.0 - loss))
     t_ack = max(0.0, packet_time_s - serial - base.t_prop_s)
-    return replace(base, t_ack_s=t_ack, loss_p=min(loss_p, 0.9))
+    return replace(base, t_ack_s=t_ack, loss_p=loss)
 
 
 def optimize_chunk_size(
@@ -273,9 +285,22 @@ class DegradationSurface:
                     loss_p: float) -> bool:
         """Below-minimum packet times count as inside: the axis minimum
         is the refit saturation floor, below which every estimate maps
-        to the same link (see :func:`_cell`'s ``clamp_low``)."""
+        to the same link (see :func:`_cell`'s ``clamp_low``). Loss is
+        clamped at ``LOSS_CLAMP`` the same way: every estimate at or
+        above it re-fits to the identical link, so an axis reaching the
+        clamp covers all heavier loss exactly."""
         plo, phi, llo, lhi = self._env[protocol]
-        return packet_time_s <= phi and llo <= loss_p <= lhi
+        loss = min(loss_p, LOSS_CLAMP)
+        return packet_time_s <= phi and llo <= loss <= lhi
+
+    def covers(self, states: Mapping[str, tuple[float, float]]) -> bool:
+        """True when EVERY ``{protocol: (packet_time_s, loss_p)}`` state
+        is inside its protocol's envelope — the condition under which
+        :meth:`best_lookup` can rank protocols without a re-solve (the
+        async rebuilder re-centers axes precisely so the drifted states
+        satisfy this on the rebuilt surface)."""
+        return all(self.in_envelope(name, pt, lp)
+                   for name, (pt, lp) in states.items())
 
     def lookup(self, protocol: str, packet_time_s: float,
                loss_p: float) -> SurfaceLookup:
@@ -283,7 +308,7 @@ class DegradationSurface:
         p = self.protocols[protocol]
         i0, i1, wt, ok_t = _cell(p.packet_time_s, packet_time_s,
                                  clamp_low=True)
-        j0, j1, wl, ok_l = _cell(p.loss_p, loss_p)
+        j0, j1, wl, ok_l = _cell(p.loss_p, min(loss_p, LOSS_CLAMP))
         ni = i1 if wt >= 0.5 else i0
         nj = j1 if wl >= 0.5 else j0
         node = p._nodes[ni][nj]
@@ -311,7 +336,7 @@ class DegradationSurface:
         for name, (pt, lp) in states.items():
             p = self.protocols[name]
             i0, i1, wt, ok_t = _cell(p.packet_time_s, pt, clamp_low=True)
-            j0, j1, wl, ok_l = _cell(p.loss_p, lp)
+            j0, j1, wl, ok_l = _cell(p.loss_p, min(lp, LOSS_CLAMP))
             if not (ok_t and ok_l):
                 return None
             node = p._nodes[i1 if wt >= 0.5 else i0][j1 if wl >= 0.5 else j0]
@@ -478,6 +503,34 @@ def build_surface(
     )[n_devices]
 
 
+def _resolve_axes(
+    base: LinkProfile,
+    pt_scale: Sequence[float],
+    loss_p: Sequence[float | None] | None,
+) -> tuple[tuple[float, ...], tuple[float, ...]]:
+    """One protocol's resolved (packet-time, loss) axes — the SINGLE
+    source of the scale→axis mapping, shared by surface construction
+    and the async rebuilder's envelope prediction
+    (:meth:`repro.core.async_replan.RebuildRequest.covers` must agree
+    with what ``build_surfaces`` will actually build).
+
+    The packet-time axis minimum is the refit saturation floor
+    (loss-free serialization + propagation): :func:`refit_link` maps
+    every packet time at or below it to the identical link, so
+    estimates that run FASTER than the loss-inflated nominal stay on
+    the surface (clamped exactly) instead of forcing re-solve
+    fallbacks. ``None`` loss entries resolve to the protocol's base
+    loss (the :meth:`ScenarioGrid.link_variant
+    <repro.core.sweep.ScenarioGrid.link_variant>` convention)."""
+    floor = base.mtu_bytes / base.rate_bytes_per_s + base.t_prop_s
+    pts = tuple(sorted({base.packet_time_s() * s for s in pt_scale}
+                       | {floor}))
+    losses = tuple(sorted(
+        {base.loss_p} if loss_p is None
+        else {base.loss_p if lp is None else lp for lp in loss_p}))
+    return pts, losses
+
+
 def build_surfaces(
     cost_model: SplitCostModel,
     protocols: Mapping[str, LinkProfile],
@@ -533,17 +586,7 @@ def build_surfaces(
     axes: dict[str, tuple[tuple[float, ...], tuple[float, ...]]] = {}
     links: list[LinkProfile] = []
     for name, base in protocols.items():
-        # the axis minimum is the refit saturation floor (loss-free
-        # serialization + propagation): refit_link maps every packet time
-        # at or below it to the identical link, so estimates that run
-        # FASTER than the loss-inflated nominal stay on the surface
-        # (clamped exactly) instead of forcing re-solve fallbacks
-        floor = base.mtu_bytes / base.rate_bytes_per_s + base.t_prop_s
-        pts = tuple(sorted({base.packet_time_s() * s for s in pt_scale}
-                           | {floor}))
-        losses = tuple(sorted(
-            {base.loss_p} if loss_p is None
-            else {base.loss_p if lp is None else lp for lp in loss_p}))
+        pts, losses = _resolve_axes(base, pt_scale, loss_p)
         axes[name] = (pts, losses)
         for pt in pts:
             for lp in losses:

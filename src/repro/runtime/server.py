@@ -15,7 +15,7 @@ the datacenter analogue is a batched decode server whose model may be
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +25,32 @@ from repro.core.latency import LinkProfile
 from repro.core.planner import SplitPlan
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+
+
+class DrainTruncated(RuntimeError):
+    """``run_until_drained`` hit ``max_ticks`` with work still queued or
+    active. ``result`` carries the partial generations produced so far
+    (a :class:`DrainResult`, ``drained=False``)."""
+
+    def __init__(self, result: "DrainResult"):
+        super().__init__(
+            f"run_until_drained truncated after {result.ticks} ticks "
+            f"with requests still pending")
+        self.result = result
+
+
+class DrainResult(dict):
+    """``{rid: [tokens]}`` plus drain metadata.
+
+    A plain ``dict`` subclass so existing callers keep indexing it, with
+    ``drained`` (False = ``max_ticks`` hit with work remaining — the
+    generations are PARTIAL) and ``ticks`` (server steps consumed).
+    """
+
+    def __init__(self, out: dict[int, list[int]], drained: bool, ticks: int):
+        super().__init__(out)
+        self.drained = drained
+        self.ticks = ticks
 
 
 @dataclass
@@ -51,9 +77,15 @@ class SplitLatencyMeter:
     :class:`~repro.core.adaptive.AdaptiveSplitManager`) and ``protocol``
     are set, every metered hop is fed to ``manager.observe()`` — with a
     precomputed degradation surface that is an O(1) lookup, cheap enough
-    to run on every token — and when the manager adopts a new decision
-    the meter swaps in the re-materialized plan (``replans`` counts the
-    swaps)."""
+    to run on every token; with the manager's ``async_rebuild`` on,
+    out-of-envelope drift enqueues a background surface rebuild, so the
+    token loop never blocks on one — and when the manager adopts a new
+    decision the meter swaps in the re-materialized plan (``replans``
+    counts the swaps). If the adopted decision switched protocol, the
+    meter's ``protocol`` AND pricing ``link`` follow it (the new
+    protocol's base profile at the adopted chunk size): hops after a
+    cross-protocol replan ride the new link, they are no longer priced
+    on the abandoned one."""
 
     plan: SplitPlan | None = None
     link: LinkProfile | None = None
@@ -77,6 +109,17 @@ class SplitLatencyMeter:
                 self.manager.observe(self.protocol, nbytes, hop_s)
                 if len(self.manager.history) != decisions:
                     self.plan = self.manager.current_plan()
+                    adopted = self.manager.current
+                    if adopted is not None \
+                            and adopted.protocol != self.protocol:
+                        # cross-protocol replan: hops now ride the NEW
+                        # protocol's link (at the adopted chunk size) —
+                        # pricing them on the abandoned link kept feeding
+                        # the old protocol's estimator forever
+                        self.protocol = adopted.protocol
+                        base = self.manager.protocols[adopted.protocol]
+                        self.link = replace(
+                            base, mtu_bytes=adopted.chunk_bytes)
                     self.replans += 1
                     break  # the remaining hops belonged to the old plan
 
@@ -151,11 +194,27 @@ class Server:
                 del self.active[s]
         return emitted
 
-    def run_until_drained(self, max_ticks: int = 10_000) -> dict[int, list[int]]:
+    def run_until_drained(self, max_ticks: int = 10_000, *,
+                          on_truncate: str = "return") -> DrainResult:
+        """Tick until every request retires or ``max_ticks`` elapse.
+
+        Hitting ``max_ticks`` with work still pending used to return the
+        partial generations indistinguishably from a clean drain. Now
+        the truncation is surfaced: with ``on_truncate="return"`` the
+        :class:`DrainResult` carries ``drained=False``; with
+        ``on_truncate="raise"`` a :class:`DrainTruncated` (its
+        ``result`` holds the partial output) is raised instead."""
+        if on_truncate not in ("return", "raise"):
+            raise ValueError(f"on_truncate must be 'return' or 'raise', "
+                             f"got {on_truncate!r}")
         out: dict[int, list[int]] = {}
         ticks = 0
         while (self.queue or self.active) and ticks < max_ticks:
             for rid, tok in self.step():
                 out.setdefault(rid, []).append(tok)
             ticks += 1
-        return out
+        result = DrainResult(out, drained=not (self.queue or self.active),
+                             ticks=ticks)
+        if not result.drained and on_truncate == "raise":
+            raise DrainTruncated(result)
+        return result

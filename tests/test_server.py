@@ -9,7 +9,12 @@ from repro.core.profiles import ESP_NOW, ICI
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
 from repro.models.graph import arch_layer_graph
-from repro.runtime.server import Request, Server, SplitLatencyMeter
+from repro.runtime.server import (
+    DrainTruncated,
+    Request,
+    Server,
+    SplitLatencyMeter,
+)
 
 CFG = ModelConfig("srv", "dense", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
                   d_ff=64, vocab=64, head_dim=8, dtype="float32", remat=False,
@@ -87,3 +92,106 @@ class TestServer:
         assert meter.replans >= 1
         assert meter.plan.splits == mgr.current.splits
         assert meter.plan.solver == "surface"
+
+    def test_meter_cross_protocol_replan_swaps_link(self):
+        """Regression: after an adoption that switched protocol the meter
+        kept pricing hops on the OLD link (and feeding the old
+        protocol's estimator). On a cross-protocol swap the meter must
+        follow the adopted decision: new protocol name, new pricing
+        link (the new protocol's base profile at the adopted chunk)."""
+        from dataclasses import replace
+
+        from repro.core.adaptive import AdaptiveSplitManager
+        from repro.core.profiles import PROTOCOLS, paper_cost_model
+
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+            protocols=dict(PROTOCOLS), n_devices=2,
+            surface_grid={"pt_scale": (1.0, 16.0, 256.0),
+                          "loss_p": (0.0, 0.1)})
+        assert mgr.current.protocol == "esp_now"
+        # collapse ESP-NOW 400x: deep enough that switching protocol pays
+        dead = replace(ESP_NOW,
+                       rate_bytes_per_s=ESP_NOW.rate_bytes_per_s / 400)
+        meter = SplitLatencyMeter(plan=mgr.current_plan(), link=dead,
+                                  bytes_per_token=5488,
+                                  manager=mgr, protocol="esp_now")
+        for _ in range(300):
+            meter.on_token()
+            if mgr.current.protocol != "esp_now":
+                break
+        assert mgr.current.protocol != "esp_now"
+        # the meter followed the adopted decision across the switch
+        assert meter.protocol == mgr.current.protocol
+        assert meter.link.name == PROTOCOLS[mgr.current.protocol].name
+        assert meter.link.mtu_bytes == mgr.current.chunk_bytes
+        # and subsequent hops are priced + observed on the NEW protocol
+        hops0, step0 = meter.hops, mgr._step
+        meter.on_token()
+        assert meter.hops > hops0 and mgr._step > step0
+
+    def test_token_loop_never_blocks_on_async_rebuild(self, params):
+        """With async_rebuild the serving loop keeps emitting tokens
+        while a (deterministic, never-run) surface rebuild is in
+        flight; running the build lets a later token adopt it."""
+        from dataclasses import replace
+
+        from repro.core.adaptive import AdaptiveSplitManager
+        from repro.core.async_replan import ManualExecutor
+        from repro.core.profiles import PROTOCOLS, paper_cost_model
+
+        ex = ManualExecutor()
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+            protocols=dict(PROTOCOLS), n_devices=2,
+            surface_grid={"pt_scale": (1.0, 4.0, 16.0),
+                          "loss_p": (0.0, 0.1)},
+            async_rebuild=ex)
+        # a link collapsed far beyond the (small) surface envelope
+        dead = replace(ESP_NOW,
+                       rate_bytes_per_s=ESP_NOW.rate_bytes_per_s / 5000)
+        meter = SplitLatencyMeter(plan=mgr.current_plan(), link=dead,
+                                  bytes_per_token=5488,
+                                  manager=mgr, protocol="esp_now")
+        server = Server(CFG, params, slots=1, max_seq=128, meter=meter)
+        server.submit(Request(0, np.array([1], np.int32),
+                              max_new_tokens=60))
+        out = server.run_until_drained()
+        assert out.drained and len(out[0]) == 60  # every token emitted
+        assert ex.pending() >= 1  # a rebuild was queued, never executed
+        assert mgr.surface_swaps == 0  # and thus never adopted mid-flight
+        assert mgr.stale_serves > 0  # the loop served from stale state
+        ex.run_all()  # the background build "completes"
+        server.submit(Request(1, np.array([2], np.int32),
+                              max_new_tokens=5))
+        server.run_until_drained()
+        assert mgr.surface_swaps >= 1  # swap-on-ready during serving
+
+    def test_run_until_drained_reports_drained(self, params):
+        server = Server(CFG, params, slots=2, max_seq=64)
+        server.submit(Request(0, np.array([1], np.int32), max_new_tokens=4))
+        out = server.run_until_drained()
+        assert out.drained
+        assert out.ticks >= 4
+        assert out[0] and len(out[0]) == 4
+
+    def test_run_until_drained_flags_truncation(self, params):
+        """Regression: hitting max_ticks used to return PARTIAL
+        generations indistinguishable from a clean drain."""
+        server = Server(CFG, params, slots=1, max_seq=64)
+        server.submit(Request(0, np.array([1], np.int32), max_new_tokens=50))
+        out = server.run_until_drained(max_ticks=3)
+        assert not out.drained
+        assert out.ticks == 3
+        assert len(out[0]) == 3  # partial — and now labeled as such
+        assert server.active  # work really was left behind
+
+    def test_run_until_drained_raise_mode(self, params):
+        server = Server(CFG, params, slots=1, max_seq=64)
+        server.submit(Request(0, np.array([1], np.int32), max_new_tokens=50))
+        with pytest.raises(DrainTruncated) as ei:
+            server.run_until_drained(max_ticks=2, on_truncate="raise")
+        assert not ei.value.result.drained
+        assert len(ei.value.result[0]) == 2  # partial output preserved
+        with pytest.raises(ValueError):
+            server.run_until_drained(on_truncate="sometimes")
