@@ -11,17 +11,30 @@ Usage:
   PYTHONPATH=src python benchmarks/sweep_grid.py --smoke    # CI smoke (256 scenarios)
   ... [--backend jax|sharded] [--json BENCH_sweep.json] [--csv sweep.csv]
 
-The report always carries a ``sharded`` section: the same grid solved
+The report always carries a ``sharded`` section — the same grid solved
 with the scenario axis partitioned over every local JAX device
 (``repro.core.shard``), asserted node-identical to the single-device
-JAX path. Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
-(the CI ``multi-device`` job does) to exercise a real mesh; on a plain
-host it degenerates to one shard. Both JAX paths are warmed up before
-timing so the recorded walls are steady-state (compile excluded), per
-the ``BatchedSolverResult.wall_time_s`` comparability contract.
+JAX path — and a ``pallas`` section: the grid solved by the fused
+cost-construction + DP kernel (``repro.core.pallas_dp``,
+``backend="pallas"``), which never materializes the ``C[S, N, L, L]``
+tensor. The pallas section asserts every node matches the JAX path
+exactly OR is an exact-cost tie (zero float64-repriced regret — the
+fused construction rounds <=1 ulp differently, so exact ties may break
+toward a different equally-optimal plan; see the pallas_dp module
+docstring). Off-TPU the kernel runs in interpret mode: the recorded
+wall times exercise the Pallas *interpreter* and assert correctness
+only — the >=10x fusion target is a real-accelerator claim.
+
+Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+CI ``multi-device`` job does) to exercise a real mesh for the sharded
+section; on a plain host it degenerates to one shard. All JAX-side
+paths are warmed up before timing so the recorded walls are
+steady-state (compile excluded), per the
+``BatchedSolverResult.wall_time_s`` comparability contract.
 
 The JSON artifact (``BENCH_sweep.json`` by default) is the
-machine-readable perf record future PRs compare against.
+machine-readable perf record future PRs compare against
+(``tools/check_bench.py`` gates CI smoke runs on it).
 """
 
 from __future__ import annotations
@@ -53,26 +66,29 @@ def build_grid(smoke: bool) -> ScenarioGrid:
     )
 
 
+def timed_sweep(grid, backend, known):
+    """Warm (compile once), then time one steady-state sweep of ``grid``
+    on ``backend``. ``known`` caches ``backend -> (SweepResult, wall_s)``
+    across report sections, so the jax reference (and a ``--backend
+    jax``/``sharded``/``pallas`` main run) is never re-solved."""
+    if backend not in known:
+        sweep(grid, solver="batched_dp", backend=backend)  # warm
+        t0 = time.perf_counter()
+        res = sweep(grid, solver="batched_dp", backend=backend)
+        known[backend] = (res, time.perf_counter() - t0)
+    return known[backend]
+
+
 def run_sharded(grid, known=None) -> dict:
     """The ``sharded`` section: the grid swept with the scenario axis
     partitioned over every local JAX device, verified node-identical
     (splits, feasibility, objective) to the single-device JAX path it
-    shards. ``known`` maps backend -> an already warmed-and-timed
-    ``(SweepResult, wall_s)`` pair from the main comparison, so a
-    ``--backend jax``/``sharded`` invocation never re-solves the grid
-    it just solved."""
+    shards."""
     from repro.core.shard import scenario_shards
 
-    def timed(backend):
-        if known and backend in known:
-            return known[backend]
-        sweep(grid, solver="batched_dp", backend=backend)  # warm: compile once
-        t0 = time.perf_counter()
-        res = sweep(grid, solver="batched_dp", backend=backend)
-        return res, time.perf_counter() - t0
-
-    jax_ref, jax_wall = timed("jax")
-    sharded, sharded_wall = timed("sharded")
+    known = {} if known is None else known
+    jax_ref, jax_wall = timed_sweep(grid, "jax", known)
+    sharded, sharded_wall = timed_sweep(grid, "sharded", known)
 
     node_identical = all(
         a.splits == b.splits and a.feasible == b.feasible
@@ -89,14 +105,76 @@ def run_sharded(grid, known=None) -> dict:
     }
 
 
+def run_pallas(grid, known=None) -> dict:
+    """The ``pallas`` section: the grid swept by the fused kernel
+    (``C`` never materialized), verified against the single-device JAX
+    path. Every node must either match exactly or be an exact-cost tie
+    — each divergent node's two plans are repriced with the float64
+    scalar cost model and must agree to ~1 ulp (both optimal)."""
+    from repro.core import solvers as S
+    from repro.core.pallas_dp import DEFAULT_BLOCK_S, pallas_interpret_default
+
+    known = {} if known is None else known
+    jax_ref, jax_wall = timed_sweep(grid, "jax", known)
+    pallas, pallas_wall = timed_sweep(grid, "pallas", known)
+
+    combine = "max" if grid.objective == "bottleneck" else "sum"
+
+    def reprice(sc, splits):
+        m = grid.cost_model(sc)
+        return S.total_cost(m.cost_segment_fn(), splits,
+                            m.profile.num_layers, combine)
+
+    node_identical = True
+    n_ties = 0
+    ties_ok = True
+    costs_ok = True
+    for a, b in zip(jax_ref.rows, pallas.rows):
+        ca, cb = a.objective_cost_s, b.objective_cost_s
+        if math.isinf(ca) or math.isinf(cb):
+            costs_ok = costs_ok and math.isinf(ca) and math.isinf(cb)
+        else:
+            costs_ok = costs_ok and abs(ca - cb) <= 1e-5 * abs(ca)
+        if a.splits == b.splits and a.feasible == b.feasible:
+            continue
+        node_identical = False
+        n_ties += 1
+        if a.feasible != b.feasible:
+            ties_ok = False
+            continue
+        ra, rb = reprice(a.scenario, a.splits), reprice(b.scenario, b.splits)
+        if abs(ra - rb) > 1e-12 * max(abs(ra), 1e-300):
+            ties_ok = False
+    return {
+        "interpret": pallas_interpret_default(),
+        "block_s": DEFAULT_BLOCK_S,
+        "wall_s": round(pallas_wall, 4),
+        "solve_s": round(pallas.solve_time_s, 4),
+        "build_s": round(pallas.build_time_s, 4),
+        "jax_wall_s": round(jax_wall, 4),
+        "scenarios_per_sec": round(pallas.n_scenarios / pallas_wall, 1),
+        "node_identical_to_jax": node_identical,
+        "n_tie_divergences": n_ties,
+        "divergences_are_exact_ties": ties_ok,
+        "costs_allclose_to_jax": costs_ok,
+        "note": ("interpret mode times the Pallas interpreter, not a "
+                 "compiled kernel: correctness only; the >=10x fusion "
+                 "target applies on real accelerator hardware"
+                 if pallas_interpret_default() else
+                 "compiled pallas kernel (Mosaic)"),
+    }
+
+
 def run(smoke: bool = True, backend: str = "numpy") -> dict:
     grid = build_grid(smoke)
 
-    if backend in ("jax", "sharded"):
-        sweep(grid, solver="batched_dp", backend=backend)  # warm: compile once
-    t0 = time.perf_counter()
-    batched = sweep(grid, solver="batched_dp", backend=backend)
-    batched_wall = time.perf_counter() - t0
+    known: dict = {}
+    if backend == "numpy":
+        t0 = time.perf_counter()
+        batched = sweep(grid, solver="batched_dp", backend=backend)
+        batched_wall = time.perf_counter() - t0
+    else:
+        batched, batched_wall = timed_sweep(grid, backend, known)
 
     t0 = time.perf_counter()
     scalar = sweep_scalar(grid, solver="optimal_dp")
@@ -125,10 +203,8 @@ def run(smoke: bool = True, backend: str = "numpy") -> dict:
         "scenarios_per_sec_scalar": round(grid.size / scalar_wall, 1),
         "parity_ok": not mismatches,
         "parity_mismatches": mismatches[:10],
-        "sharded": run_sharded(
-            grid,
-            known={backend: (batched, batched_wall)}
-            if backend in ("jax", "sharded") else None),
+        "sharded": run_sharded(grid, known),
+        "pallas": run_pallas(grid, known),
         "best": {
             name: {
                 "scenario": row.scenario.describe(),
@@ -155,7 +231,7 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized grid (256 scenarios, one model)")
     ap.add_argument("--backend", default="numpy",
-                    choices=("numpy", "jax", "sharded"))
+                    choices=("numpy", "jax", "sharded", "pallas"))
     ap.add_argument("--json", default="BENCH_sweep.json",
                     help="path for the machine-readable result (empty to skip)")
     ap.add_argument("--csv", default="",
@@ -179,6 +255,12 @@ def main() -> None:
           f"({sh['scenarios_per_sec']} scenarios/s; 1-device jax "
           f"{sh['jax_single_device_wall_s']}s) "
           f"node-identical to jax: {sh['node_identical_to_jax']}")
+    pa = report["pallas"]
+    print(f"pallas: {pa['wall_s']}s ({pa['scenarios_per_sec']} scenarios/s"
+          f"{'; interpret mode' if pa['interpret'] else ''}) "
+          f"node-identical to jax: {pa['node_identical_to_jax']} "
+          f"({pa['n_tie_divergences']} exact-cost tie divergence(s), "
+          f"all verified zero-regret: {pa['divergences_are_exact_ties']})")
     for name, best in report["best"].items():
         print(f"best[{name}]: {best['scenario']} splits={best['splits']} "
               f"latency {best['total_latency_s']}s")
@@ -207,6 +289,12 @@ def main() -> None:
               f"tie-breaking; use --backend numpy for bit-exact parity)")
     assert report["sharded"]["node_identical_to_jax"], \
         "sharded sweep diverged from the single-device JAX path"
+    # pallas node-identity contract: every node matches jax exactly, or
+    # is a verified exact-cost tie (both plans optimal, zero f64 regret)
+    assert report["pallas"]["divergences_are_exact_ties"], \
+        "pallas sweep diverged from the JAX path beyond exact-cost ties"
+    assert report["pallas"]["costs_allclose_to_jax"], \
+        "pallas sweep costs drifted from the JAX path"
     if not math.isfinite(report["speedup_x"]) or report["speedup_x"] < 10:
         print(f"WARNING: speedup {report['speedup_x']}x below the 10x target")
 

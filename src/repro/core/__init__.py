@@ -13,6 +13,9 @@ Public API (documented in ``docs/api.md``; layer map in
   shard      — scenario-axis sharding over the local JAX device mesh
                (shard_map + pad/unpad; backend="sharded" everywhere the
                batched DP runs)
+  pallas_dp  — Pallas kernel fusing cost-tensor construction with the
+               DP recurrence in scenario tiles (backend="pallas"; C is
+               never materialized; interpret mode off-TPU)
   surface    — precomputed degradation surfaces (per-protocol packet-time
                x loss grids -> best plan + switch points + interpolation)
                for O(1) adaptive replanning; build_surfaces solves every
@@ -62,6 +65,7 @@ from repro.core.surface import (  # noqa: F401
 # here — `repro.core.sweep` must keep resolving to the submodule
 # (`from repro.core.sweep import sweep` for the function).
 from repro.core.sweep import (  # noqa: F401
+    DP_BACKENDS,
     BatchedSolverResult,
     Scenario,
     ScenarioGrid,
@@ -83,6 +87,15 @@ from repro.core.shard import (  # noqa: F401
     scenario_shards,
     sharded_dp_tables,
     sharded_optimal_dp,
+)
+# NOTE: `repro.core.pallas_dp` likewise stays a submodule attribute (it
+# imports sweep too). JAX/Pallas load lazily, on the first pallas solve.
+from repro.core.pallas_dp import (  # noqa: F401
+    pallas_dp_tables,
+    pallas_fused_dp_tables,
+    pallas_fused_optimal_dp,
+    pallas_interpret_default,
+    pallas_optimal_dp,
 )
 from repro.core.solvers import (  # noqa: F401
     SOLVERS,

@@ -1,0 +1,555 @@
+"""Pallas fused cost-construction + DP kernel (``backend="pallas"``).
+
+The batched JAX backend (:func:`repro.core.sweep._dp_jax`) consumes a
+fully materialized ``C[S, N, L, L]`` cost tensor: every scenario's
+per-device segment-cost matrix is built on the host, shipped to the
+accelerator, and round-tripped through HBM before the recurrence reads
+each entry exactly once. At fleet scale the tensor build rivals the
+solve itself (BENCH_sweep.json) and the ``S`` axis — the one axis
+related work multiplies (per-device channels, heterogeneous platforms)
+— pays for bandwidth, not math.
+
+This module moves the construction INSIDE the kernel. The cost tensor
+decomposes exactly as the sweep engine already assembles it::
+
+    C[s, k, a, b] = local[k, a, b] + tx[s, b]
+
+where ``local`` is the link-independent per-device local-cost stack
+(``(N, L, L)``, from the ``(DeviceProfile, is_first)`` bank) and ``tx``
+is the per-scenario transmission vector (``(S, L)``). A Pallas kernel
+tiles the scenario axis over a 1-D grid; each grid step holds one
+``(block_s, L)`` DP row tile plus the shared ``local`` stack in
+VMEM and fuses ``local + tx`` into the ``min``/``argmin`` reduction of
+device step ``k`` — the 4-D ``C`` tensor never exists, on host or
+device. Per-scenario VMEM footprint is ``O(N * L^2)`` for the shared
+stack plus ``O(block_s * L)`` rows, not ``O(S * N * L^2)``.
+
+Two kernel modes share one body:
+
+* **dense** — consumes a prebuilt ``C`` (the :func:`repro.core.sweep.
+  batched_optimal_dp` seam takes a tensor, so ``backend="pallas"``
+  must too). Arithmetic is ordered exactly like the JAX backend's
+  ``vmap``/``lax.scan`` kernel, so dense-mode tables and parents are
+  bit-identical to ``backend="jax"`` — the property-test contract.
+* **fused** — consumes ``(local, tx)`` (or a ``(bank, bank_idx, tx)``
+  triple for heterogeneous device mixes) and never materializes ``C``.
+  The only arithmetic difference from the jax backend is construction
+  rounding: fused computes ``f32(local) + f32(tx)`` where the dense
+  path computes ``f32(local64 + tx64)`` — a <=1 ulp cost wobble. Plan
+  nodes are therefore identical EXCEPT under exact-cost ties, where
+  the wobble may break the tie toward a different equally-optimal
+  plan (zero float64-repriced regret — the same class of divergence
+  the float32 jax backend already shows against the float64 oracle;
+  ``benchmarks/sweep_grid.py --backend pallas`` verifies every
+  divergent node is such a tie). Costs are always allclose.
+
+Tiling: ``L`` is +inf-padded to the 128-lane float32 tile and ``S`` is
+replica-padded to a ``block_s`` multiple (default 8, the float32
+sublane tile). Padding is semantically invisible — +inf candidates
+never win a first-minimum ``argmin``, replica rows are sliced off
+before anything reads them.
+
+CPU/CI: Pallas lowers to Mosaic on TPU; elsewhere the ``interpret=``
+escape hatch (default ON off-TPU, see :func:`pallas_interpret_default`)
+runs the same kernel through the Pallas interpreter — identical
+numerics and tie-breaks, no speedup. The CI ``pallas`` job asserts
+correctness in interpret mode; the >=10x fusion win is a real-hardware
+claim.
+
+Entry points up the stack: ``batched_optimal_dp(backend="pallas")``
+(dense), ``sweep(grid, backend="pallas")`` and ``build_surfaces(...,
+backend="pallas")`` (fused, via :func:`pallas_fused_optimal_dp`), and
+``sharded_dp_tables(kernel="pallas")`` (dense kernel under
+``shard_map`` — sharding partitions the scenario grid axis, the
+per-tile math is untouched).
+
+Precision follows the active JAX config like every JAX-side backend:
+float32 by default, float64 when ``jax.config.jax_enable_x64`` is on.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import sweep as SW
+
+__all__ = [
+    "LANE",
+    "DEFAULT_BLOCK_S",
+    "pallas_interpret_default",
+    "pallas_dp_tables",
+    "pallas_fused_dp_tables",
+    "pallas_optimal_dp",
+    "pallas_fused_optimal_dp",
+]
+
+INF = float("inf")
+
+# float32 TPU tile: 8 sublanes x 128 lanes. L pads to the lane multiple,
+# the scenario grid steps in sublane-multiple blocks.
+LANE = 128
+DEFAULT_BLOCK_S = 8
+
+# Incremented every time the pallas solver is (re)traced; a same-shape
+# repeat call must leave it unchanged (jit-cache regression test in
+# tests/test_pallas_dp.py — same pattern as sweep._DP_JAX_TRACE_COUNT).
+_PALLAS_TRACE_COUNT = 0
+
+
+def pallas_interpret_default() -> bool:
+    """Whether ``interpret=None`` means interpret mode: True off-TPU.
+
+    On TPU the kernel compiles through Mosaic; everywhere else (CPU CI,
+    GPU hosts without a Triton lowering for this kernel) the Pallas
+    interpreter runs the same tile program with identical numerics."""
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def _pad_lanes(L: int) -> int:
+    """L padded up to the 128-lane tile multiple (min one full lane)."""
+    return max(LANE, -(-L // LANE) * LANE)
+
+
+def _pad_rows(S: int, block_s: int) -> int:
+    """S padded up to a whole number of scenario blocks."""
+    return -(-S // block_s) * block_s
+
+
+def _dp_step_tile(dp, ck_shift, ns, k, combine):
+    """One fused device step on a scenario tile — the Pallas twin of the
+    ``lax.scan`` body in :func:`repro.core.sweep._dp_jax_kernel`.
+
+    ``dp`` is the ``(T, L)`` running table, ``ck_shift[t, a, b]`` the
+    segment cost of layers ``[a+2, b+1]`` on device ``k`` (already
+    boundary-shifted so candidate ``a`` aligns with parent ``a + 1``),
+    ``ns`` the ``(T, 1)`` per-scenario fleet sizes. Candidate order,
+    first-minimum ``argmin`` and the frozen-row mask mirror the jax
+    kernel exactly — +inf-padded lanes never win, scenarios whose fleet
+    completed at ``n_s < k`` carry their stale table forward."""
+    import jax.numpy as jnp
+
+    if combine == "sum":
+        cand = dp[:, :, None] + ck_shift
+    else:
+        cand = jnp.maximum(dp[:, :, None], ck_shift)
+    ndp = jnp.min(cand, axis=1)
+    arg = jnp.where(jnp.isfinite(ndp),
+                    jnp.argmin(cand, axis=1).astype(jnp.int32) + 1, -1)
+    act = ns >= k
+    ndp = jnp.where(act, ndp, dp)
+    arg = jnp.where(act, arg, -1)
+    return ndp, arg
+
+
+def _dense_kernel(N: int, Lp: int, combine: str):
+    """Kernel body for a prebuilt per-tile cost tensor ``C``."""
+    import jax.numpy as jnp
+
+    def kernel(C_ref, ns_ref, dp0_ref, dps_ref, args_ref):
+        ns = ns_ref[...]            # (T, 1) int32
+        dp = C_ref[:, 0, 0, :]      # (T, Lp): device-1 row, a == 0
+        dp0_ref[...] = dp
+        for k in range(2, N + 1):   # unrolled: N is small and static
+            ck = C_ref[:, k - 1]    # (T, Lp, Lp)
+            ck_shift = jnp.concatenate(
+                [ck[:, 1:], jnp.full((ck.shape[0], 1, Lp), INF, ck.dtype)],
+                axis=1)
+            dp, arg = _dp_step_tile(dp, ck_shift, ns, k, combine)
+            dps_ref[:, k - 2, :] = dp
+            args_ref[:, k - 2, :] = arg
+
+    return kernel
+
+
+def _fused_kernel(N: int, Lp: int, combine: str):
+    """Kernel body fusing ``C = local + tx`` into the recurrence.
+
+    ``local`` (the shared ``(N, Lp, Lp)`` per-device stack) and ``tx``
+    (the ``(T, Lp)`` per-tile transmission rows) are the ONLY inputs —
+    each device step materializes one boundary-shifted ``(T, Lp, Lp)``
+    candidate slab in VMEM registers and reduces it immediately; the
+    full ``C[S, N, L, L]`` tensor never exists."""
+    import jax.numpy as jnp
+
+    def kernel(local_ref, tx_ref, ns_ref, dp0_ref, dps_ref, args_ref):
+        tx = tx_ref[...]            # (T, Lp)
+        ns = ns_ref[...]            # (T, 1) int32
+        # device-1 row fused on the fly: C[s, 0, 0, b] = local[0,0,b]+tx[s,b]
+        dp = local_ref[0, 0, :][None, :] + tx
+        dp0_ref[...] = dp
+        for k in range(2, N + 1):
+            ck = local_ref[k - 1]   # (Lp, Lp), shared across the tile
+            ck_shift = jnp.concatenate(
+                [ck[1:], jnp.full((1, Lp), INF, ck.dtype)], axis=0)
+            ckf = ck_shift[None, :, :] + tx[:, None, :]
+            dp, arg = _dp_step_tile(dp, ckf, ns, k, combine)
+            dps_ref[:, k - 2, :] = dp
+            args_ref[:, k - 2, :] = arg
+
+    return kernel
+
+
+def _raw_pallas_fn(mode: str, combine: str, block_s: int, interpret: bool):
+    """The traceable (unjitted) pallas_call wrapper for one kernel mode.
+
+    Shape-polymorphic: the ``pallas_call`` (grid, block specs, output
+    shapes) is constructed at trace time from the operand shapes, so one
+    wrapper serves every (S, N, L) — jit re-specializes per shape like
+    every other backend. Shared with :mod:`repro.core.shard` for
+    ``kernel="pallas"`` sharded solves (each shard traces this exact
+    function, so sharded and single-device pallas answers stay
+    node-identical). Callers pass pre-padded operands: ``Lp`` a lane
+    multiple (+inf padding), ``Sp`` a ``block_s`` multiple (replica
+    rows), ``ns`` as an ``(Sp, 1)`` int32 column."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental import pallas as pl
+
+    if mode == "dense":
+
+        def fn(Cp, nsp):
+            Sp, N, Lp, _ = Cp.shape
+            return pl.pallas_call(
+                _dense_kernel(N, Lp, combine),
+                grid=(Sp // block_s,),
+                in_specs=[
+                    pl.BlockSpec((block_s, N, Lp, Lp),
+                                 lambda i: (i, 0, 0, 0)),
+                    pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+                ],
+                out_specs=[
+                    pl.BlockSpec((block_s, Lp), lambda i: (i, 0)),
+                    pl.BlockSpec((block_s, N - 1, Lp), lambda i: (i, 0, 0)),
+                    pl.BlockSpec((block_s, N - 1, Lp), lambda i: (i, 0, 0)),
+                ],
+                out_shape=[
+                    jax.ShapeDtypeStruct((Sp, Lp), Cp.dtype),
+                    jax.ShapeDtypeStruct((Sp, N - 1, Lp), Cp.dtype),
+                    jax.ShapeDtypeStruct((Sp, N - 1, Lp), jnp.int32),
+                ],
+                interpret=interpret,
+            )(Cp, nsp)
+
+        return fn
+
+    if mode == "fused":
+
+        def fn(localp, txp, nsp):
+            N, Lp, _ = localp.shape
+            Sp = txp.shape[0]
+            return pl.pallas_call(
+                _fused_kernel(N, Lp, combine),
+                grid=(Sp // block_s,),
+                in_specs=[
+                    # the local stack rides along whole: same block every
+                    # grid step (index map pins it), so it loads once
+                    pl.BlockSpec((N, Lp, Lp), lambda i: (0, 0, 0)),
+                    pl.BlockSpec((block_s, Lp), lambda i: (i, 0)),
+                    pl.BlockSpec((block_s, 1), lambda i: (i, 0)),
+                ],
+                out_specs=[
+                    pl.BlockSpec((block_s, Lp), lambda i: (i, 0)),
+                    pl.BlockSpec((block_s, N - 1, Lp), lambda i: (i, 0, 0)),
+                    pl.BlockSpec((block_s, N - 1, Lp), lambda i: (i, 0, 0)),
+                ],
+                out_shape=[
+                    jax.ShapeDtypeStruct((Sp, Lp), localp.dtype),
+                    jax.ShapeDtypeStruct((Sp, N - 1, Lp), localp.dtype),
+                    jax.ShapeDtypeStruct((Sp, N - 1, Lp), jnp.int32),
+                ],
+                interpret=interpret,
+            )(localp, txp, nsp)
+
+        return fn
+
+    raise ValueError(f"unknown pallas kernel mode {mode!r}")
+
+
+@functools.lru_cache(maxsize=None)
+def _pallas_dp_solver(mode: str, combine: str, block_s: int,
+                      interpret: bool):
+    """Jitted entry to :func:`_raw_pallas_fn`, cached per configuration.
+
+    ``jax.jit``'s executable cache keys on operand shapes, so two
+    same-shape calls compile exactly once (regression-tested via
+    :data:`_PALLAS_TRACE_COUNT`, the :data:`repro.core.sweep.
+    _DP_JAX_TRACE_COUNT` pattern)."""
+    import jax
+
+    fn = _raw_pallas_fn(mode, combine, block_s, interpret)
+
+    def solve(*operands):
+        global _PALLAS_TRACE_COUNT
+        _PALLAS_TRACE_COUNT += 1  # Python side effect: runs at trace only
+        return fn(*operands)
+
+    return jax.jit(solve)
+
+
+def _resolve_opts(block_s: int | None, interpret: bool | None):
+    bs = DEFAULT_BLOCK_S if block_s is None else int(block_s)
+    if bs < 1:
+        raise ValueError(f"block_s must be >= 1, got {block_s}")
+    itp = pallas_interpret_default() if interpret is None else bool(interpret)
+    return bs, itp
+
+
+def _pad_ns_column(ns_arr: np.ndarray, Sn: int, Sp: int) -> np.ndarray:
+    nsp = np.zeros((Sp, 1), dtype=np.int32)
+    nsp[:Sn, 0] = ns_arr
+    if Sp > Sn:
+        nsp[Sn:, 0] = ns_arr[-1]  # replica rows keep a valid fleet size
+    return nsp
+
+
+def _trivial_tables(dp0, Sn: int, N: int, L: int, dtype):
+    """Host-side tables for the kernel-free cases (N == 1 or S == 0)."""
+    dps = np.zeros((Sn, max(N - 1, 0), L), dtype=dtype)
+    args = np.full((Sn, max(N - 1, 0), L), -1, dtype=np.int32)
+    return SW._dp_tables_to_numpy(dp0, dps, args, Sn, N, L)
+
+
+def pallas_dp_tables(
+    C: np.ndarray,
+    combine: str = "sum",
+    ns: np.ndarray | None = None,
+    *,
+    block_s: int | None = None,
+    interpret: bool | None = None,
+):
+    """(dp_per_k, parents) DP tables from the dense-mode Pallas kernel.
+
+    The pallas twin of :func:`repro.core.sweep._dp_jax` — same return
+    contract, same frozen-row ``ns`` semantics, and bit-identical
+    tables AND parents (dense mode reorders no arithmetic; it only
+    tiles the scenario axis). ``L`` is +inf-padded to the 128-lane
+    tile, ``S`` replica-padded to a ``block_s`` multiple; padding is
+    sliced off before returning. ``interpret=None`` resolves via
+    :func:`pallas_interpret_default`."""
+    C = np.asarray(C, dtype=np.float64)
+    Sn, N, L, _ = C.shape
+    ns_arr = np.full(Sn, N, dtype=np.int64) if ns is None \
+        else np.asarray(ns, dtype=np.int64)
+    import jax
+
+    dtype = jax.dtypes.canonicalize_dtype(np.float64)
+    if N == 1 or Sn == 0:
+        # no recurrence to run: device-1 row IS the answer (cast like the
+        # jit boundary would), and an empty scenario axis has no tiles
+        return _trivial_tables(C[:, 0, 0, :].astype(dtype), Sn, N, L, dtype)
+    bs, itp = _resolve_opts(block_s, interpret)
+    Lp, Sp = _pad_lanes(L), _pad_rows(Sn, bs)
+    Cp = np.full((Sp, N, Lp, Lp), INF, dtype=np.float64)
+    Cp[:Sn, :, :L, :L] = C
+    if Sp > Sn:
+        Cp[Sn:] = Cp[Sn - 1]  # replica rows: already-valid inputs
+    nsp = _pad_ns_column(ns_arr, Sn, Sp)
+    import jax.numpy as jnp
+
+    solver = _pallas_dp_solver("dense", combine, bs, itp)
+    dp0, dps, args = solver(jnp.asarray(Cp, dtype=dtype), jnp.asarray(nsp))
+    dp0 = np.asarray(dp0)[:Sn, :L]
+    dps = np.asarray(dps)[:Sn, :, :L]
+    args = np.asarray(args)[:Sn, :, :L]
+    return SW._dp_tables_to_numpy(dp0, dps, args, Sn, N, L)
+
+
+def _fused_tables_arrays(local, tx, ns_arr, combine, bs, itp, dtype):
+    """Unpadded (dp0, dps, args) from the fused kernel; N >= 2, S >= 1."""
+    N, L, _ = local.shape
+    Sn = tx.shape[0]
+    Lp, Sp = _pad_lanes(L), _pad_rows(Sn, bs)
+    localp = np.full((N, Lp, Lp), INF, dtype=np.float64)
+    localp[:, :L, :L] = local
+    txp = np.zeros((Sp, Lp), dtype=np.float64)
+    txp[:Sn, :L] = tx
+    if Sp > Sn:
+        txp[Sn:] = txp[Sn - 1]
+    nsp = _pad_ns_column(ns_arr, Sn, Sp)
+    import jax.numpy as jnp
+
+    solver = _pallas_dp_solver("fused", combine, bs, itp)
+    dp0, dps, args = solver(jnp.asarray(localp, dtype=dtype),
+                            jnp.asarray(txp, dtype=dtype),
+                            jnp.asarray(nsp))
+    return (np.asarray(dp0)[:Sn, :L],
+            np.asarray(dps)[:Sn, :, :L],
+            np.asarray(args)[:Sn, :, :L])
+
+
+def _fused_dp0_host(local, tx, dtype):
+    """The N == 1 fused answer, cast exactly like the jit boundary."""
+    return local[0, 0, :].astype(dtype)[None, :] + tx.astype(dtype)
+
+
+def pallas_fused_dp_tables(
+    local: np.ndarray,
+    tx: np.ndarray,
+    combine: str = "sum",
+    ns: np.ndarray | None = None,
+    *,
+    block_s: int | None = None,
+    interpret: bool | None = None,
+):
+    """(dp_per_k, parents) DP tables WITHOUT ever materializing ``C``.
+
+    ``local`` is the shared per-device local-cost stack ``(N, L, L)``
+    (``SplitCostModel.local_cost_tensor``), ``tx`` the per-scenario
+    transmission vectors ``(S, L)``; the kernel fuses
+    ``C[s,k] = local[k] + tx[s]`` into each reduction step. Plan nodes
+    (parents) match the dense path exactly except under exact-cost
+    ties; dp costs may differ by construction rounding (<=1 ulp per
+    entry — see the module docstring). Heterogeneous device mixes go
+    through
+    :func:`pallas_fused_optimal_dp`, which subgroups scenarios by
+    device stack before calling this."""
+    local = np.asarray(local, dtype=np.float64)
+    tx = np.asarray(tx, dtype=np.float64)
+    if local.ndim != 3 or local.shape[1] != local.shape[2]:
+        raise ValueError(f"local must be (N, L, L), got {local.shape}")
+    N, L, _ = local.shape
+    if tx.ndim != 2 or tx.shape[1] != L:
+        raise ValueError(f"tx must be (S, {L}), got {tx.shape}")
+    Sn = tx.shape[0]
+    ns_arr = np.full(Sn, N, dtype=np.int64) if ns is None \
+        else np.asarray(ns, dtype=np.int64)
+    import jax
+
+    dtype = jax.dtypes.canonicalize_dtype(np.float64)
+    if N == 1 or Sn == 0:
+        return _trivial_tables(_fused_dp0_host(local, tx, dtype),
+                               Sn, N, L, dtype)
+    bs, itp = _resolve_opts(block_s, interpret)
+    dp0, dps, args = _fused_tables_arrays(local, tx, ns_arr, combine,
+                                          bs, itp, dtype)
+    return SW._dp_tables_to_numpy(dp0, dps, args, Sn, N, L)
+
+
+def pallas_optimal_dp(
+    C: np.ndarray,
+    combine: str = "sum",
+    return_all_k: bool = False,
+    n_devices: np.ndarray | Sequence[int] | int | None = None,
+    *,
+    block_s: int | None = None,
+    interpret: bool | None = None,
+):
+    """Exact split DP on the dense-mode Pallas kernel.
+
+    The standalone entry behind ``batched_optimal_dp(backend="pallas")``
+    — same arguments and return types, plus the pallas knobs
+    (``block_s`` scenario tile, ``interpret`` escape hatch). Carries the
+    full solver contract (per-scenario ``n_devices`` frozen rows,
+    ``return_all_k``, the shared timing scope) and is node-identical to
+    ``backend="jax"``: bit-equal tables, bit-equal parents."""
+    Sn, N, L, ns = SW._validate_dp_inputs(C, return_all_k, n_devices)
+    t0 = time.perf_counter()
+    dp_per_k, parents = pallas_dp_tables(C, combine, ns=ns,
+                                         block_s=block_s,
+                                         interpret=interpret)
+    return SW._results_from_dp_tables(dp_per_k, parents, L, N, Sn,
+                                      "pallas", ns, return_all_k, t0)
+
+
+def pallas_fused_optimal_dp(
+    bank: np.ndarray,
+    bank_idx: np.ndarray | None,
+    tx: np.ndarray,
+    combine: str = "sum",
+    return_all_k: bool = False,
+    n_devices: np.ndarray | Sequence[int] | int | None = None,
+    *,
+    block_s: int | None = None,
+    interpret: bool | None = None,
+):
+    """Exact split DP from compact profiles — ``C`` is never built.
+
+    The fused entry behind ``sweep(grid, backend="pallas")`` and
+    ``build_surfaces(..., backend="pallas")``:
+
+    Args:
+      bank: ``(B, L, L)`` local-cost bank (one matrix per distinct
+        ``(DeviceProfile, is_first)`` pair, the sweep engine's profile
+        bank) — or, when ``bank_idx is None``, the shared per-device
+        ``(N, L, L)`` local stack itself (the homogeneous / surface
+        case).
+      bank_idx: ``(S, N)`` integer rows into ``bank`` (scenario ``s``'s
+        device ``k`` uses ``bank[bank_idx[s, k]]``), or ``None``.
+      tx: ``(S, L)`` per-scenario transmission vectors.
+      combine / return_all_k / n_devices: the
+        :func:`repro.core.sweep.batched_optimal_dp` solver contract.
+
+    Heterogeneous mixes are subgrouped by distinct device stack (device
+    slots at or beyond a scenario's own ``n_devices`` are dead filler
+    and are canonicalized first, so mixes differing only in dead slots
+    share a launch); each subgroup runs one fused kernel pass and the
+    tables scatter back into grid order. The bank is small by
+    construction — distinct stacks, not scenarios, bound the subgroup
+    count."""
+    bank = np.asarray(bank, dtype=np.float64)
+    tx = np.asarray(tx, dtype=np.float64)
+    if tx.ndim != 2:
+        raise ValueError(f"tx must be (S, L), got {tx.shape}")
+    Sn, L = tx.shape
+    if bank.ndim != 3 or bank.shape[1:] != (L, L):
+        raise ValueError(f"bank must be (B, {L}, {L}), got {bank.shape}")
+
+    if bank_idx is None:
+        N = bank.shape[0]
+        if return_all_k and n_devices is not None:
+            raise ValueError("return_all_k and per-scenario n_devices "
+                             "are mutually exclusive")
+        ns = None if n_devices is None else SW._normalize_ns(n_devices, Sn, N)
+        t0 = time.perf_counter()
+        dp_per_k, parents = pallas_fused_dp_tables(
+            bank, tx, combine, ns=ns, block_s=block_s, interpret=interpret)
+        return SW._results_from_dp_tables(dp_per_k, parents, L, N, Sn,
+                                          "pallas", ns, return_all_k, t0)
+
+    bank_idx = np.asarray(bank_idx, dtype=np.int64)
+    if bank_idx.ndim != 2 or bank_idx.shape[0] != Sn:
+        raise ValueError(
+            f"bank_idx must be ({Sn}, N), got {bank_idx.shape}")
+    N = bank_idx.shape[1]
+    if return_all_k and n_devices is not None:
+        raise ValueError("return_all_k and per-scenario n_devices "
+                         "are mutually exclusive")
+    ns = None if n_devices is None else SW._normalize_ns(n_devices, Sn, N)
+    import jax
+
+    dtype = jax.dtypes.canonicalize_dtype(np.float64)
+    t0 = time.perf_counter()
+    ns_arr = np.full(Sn, N, dtype=np.int64) if ns is None else ns
+    if Sn == 0 or N == 1:
+        dp0 = np.empty((Sn, L), dtype=dtype)
+        for s in range(Sn):
+            dp0[s] = _fused_dp0_host(bank[bank_idx[s]], tx[s:s + 1],
+                                     dtype)[0]
+        dp_per_k, parents = _trivial_tables(dp0, Sn, N, L, dtype)
+        return SW._results_from_dp_tables(dp_per_k, parents, L, N, Sn,
+                                          "pallas", ns, return_all_k, t0)
+    bs, itp = _resolve_opts(block_s, interpret)
+    # canonicalize dead device slots (>= a scenario's own fleet size) to
+    # row 0 so stacks differing only there share one kernel launch —
+    # the solvers never read those slots (frozen-row contract)
+    canon = bank_idx.copy()
+    canon[np.arange(N)[None, :] >= ns_arr[:, None]] = 0
+    stacks, inv = np.unique(canon, axis=0, return_inverse=True)
+    dp0_all = np.empty((Sn, L), dtype=dtype)
+    dps_all = np.empty((Sn, N - 1, L), dtype=dtype)
+    args_all = np.empty((Sn, N - 1, L), dtype=np.int32)
+    for u in range(stacks.shape[0]):
+        sel = np.flatnonzero(inv == u)
+        d0, dv, ag = _fused_tables_arrays(
+            bank[stacks[u]], tx[sel], ns_arr[sel], combine, bs, itp, dtype)
+        dp0_all[sel], dps_all[sel], args_all[sel] = d0, dv, ag
+    dp_per_k, parents = SW._dp_tables_to_numpy(dp0_all, dps_all, args_all,
+                                               Sn, N, L)
+    return SW._results_from_dp_tables(dp_per_k, parents, L, N, Sn,
+                                      "pallas", ns, return_all_k, t0)

@@ -150,9 +150,12 @@ def plan_split_batch(
     amortization is the point: S scenarios cost one tensor solve
     instead of S Python-loop DP runs (see ``benchmarks/sweep_grid.py``).
 
-    ``backend``: ``"numpy"`` (bit-parity float64 default), ``"jax"``,
-    or ``"sharded"`` (scenario axis over the local JAX device mesh —
-    :mod:`repro.core.shard`), for ``solver="batched_dp"`` only."""
+    ``backend``: a :data:`repro.core.sweep.DP_BACKENDS` key —
+    ``"numpy"`` (bit-parity float64 default), ``"jax"``, ``"sharded"``
+    (scenario axis over the local JAX device mesh —
+    :mod:`repro.core.shard`), or ``"pallas"`` (scenario-tiled Pallas
+    kernel — :mod:`repro.core.pallas_dp`), for ``solver="batched_dp"``
+    only."""
     if not cost_models:
         return []
     L = cost_models[0].profile.num_layers

@@ -16,7 +16,9 @@ reads scenario ``t``. This module partitions exactly that axis:
   by construction, so per-scenario arithmetic is identical and results
   are node-identical to ``backend="jax"``). Padding rows are replicas
   of the last real scenario and are dropped before anything reads
-  them.
+  them. ``kernel="pallas"`` swaps in the dense-mode Pallas tile kernel
+  (:mod:`repro.core.pallas_dp`) per shard — bit-identical again, so
+  the two compose for free.
 * :func:`sharded_optimal_dp` — the :class:`~repro.core.sweep.
   BatchedSolverResult` wrapper: the full solver contract (per-scenario
   ``n_devices`` frozen-row subsetting, ``return_all_k``, the shared
@@ -84,11 +86,19 @@ def _pad_to_multiple(S: int, n_shards: int) -> int:
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_dp_solver(combine: str, n_shards: int):
+def _sharded_dp_solver(combine: str, n_shards: int, kernel: str = "jax",
+                       block_s: int = 0, interpret: bool = False):
     """Jitted ``shard_map`` wrapper over the shared DP kernel for one
-    (combine, shard-count) pair. Cached like the single-device solver
-    (:func:`repro.core.sweep._dp_jax_solver`): repeat same-shape calls
-    reuse the compiled executable, no retrace."""
+    (combine, shard-count, kernel) triple. Cached like the single-device
+    solver (:func:`repro.core.sweep._dp_jax_solver`): repeat same-shape
+    calls reuse the compiled executable, no retrace.
+
+    ``kernel="jax"`` maps the vmapped ``lax.scan`` kernel;
+    ``kernel="pallas"`` maps the dense-mode Pallas kernel
+    (:func:`repro.core.pallas_dp._raw_pallas_fn` — each shard traces
+    the exact single-device tile program, so sharded-pallas answers are
+    node-identical to single-device pallas, which is node-identical to
+    jax). ``block_s``/``interpret`` apply to the pallas kernel only."""
     import jax
 
     try:  # jax >= 0.6: shard_map's public home
@@ -98,15 +108,28 @@ def _sharded_dp_solver(combine: str, n_shards: int):
     from jax.sharding import Mesh
     from jax.sharding import PartitionSpec as P
 
+    rep_kwargs = {}
+    if kernel == "jax":
+        fn = SW._dp_jax_kernel(combine)  # the SAME per-scenario math
+    elif kernel == "pallas":
+        from repro.core import pallas_dp as PD
+
+        fn = PD._raw_pallas_fn("dense", combine, block_s, interpret)
+        # pallas_call has no shard_map replication rule; the check is
+        # moot anyway — every in/out spec partitions along "s"
+        rep_kwargs = {"check_rep": False}
+    else:
+        raise ValueError(f"unknown shard kernel {kernel!r}; "
+                         f"options: ['jax', 'pallas']")
     # local_devices, matching scenario_shards()'s local_device_count
     # validation — on a future multi-host mesh the global jax.devices()
     # would include non-addressable devices
     mesh = Mesh(np.array(jax.local_devices()[:n_shards]), ("s",))
-    kernel = SW._dp_jax_kernel(combine)  # the SAME per-scenario math
     sharded = shard_map(
-        kernel, mesh=mesh,
+        fn, mesh=mesh,
         in_specs=(P("s"), P("s")),
         out_specs=(P("s"), P("s"), P("s")),
+        **rep_kwargs,
     )
     return jax.jit(sharded)
 
@@ -116,6 +139,9 @@ def sharded_dp_tables(
     combine: str = "sum",
     ns: np.ndarray | None = None,
     n_shards: int | None = None,
+    kernel: str = "jax",
+    block_s: int | None = None,
+    interpret: bool | None = None,
 ):
     """(dp_per_k, parents) DP tables with the scenario axis sharded.
 
@@ -126,18 +152,51 @@ def sharded_dp_tables(
     that do not divide the shard count are padded with replicas of the
     last scenario (an already-valid input row, so padding introduces no
     new inf/nan patterns) and the padding rows are sliced off before
-    returning."""
+    returning.
+
+    ``kernel="pallas"`` runs the dense-mode Pallas tile kernel inside
+    each shard instead of the ``lax.scan`` kernel (the two are
+    bit-identical — :mod:`repro.core.pallas_dp`): inputs are +inf-padded
+    to the lane tile in ``L`` and replica-padded so every shard holds a
+    whole number of scenario blocks; ``block_s``/``interpret`` are the
+    pallas knobs (``None`` = the pallas defaults)."""
     Sn, N, L, _ = C.shape
     shards = scenario_shards(n_shards)
     ns_arr = np.full(Sn, N, dtype=np.int64) if ns is None \
         else np.asarray(ns, dtype=np.int64)
+    if kernel == "pallas":
+        from repro.core import pallas_dp as PD
+
+        if N == 1 or Sn == 0:  # kernel-free cases: no scenario tiles
+            return PD.pallas_dp_tables(C, combine, ns=ns_arr,
+                                       block_s=block_s, interpret=interpret)
+        import jax
+
+        bs, itp = PD._resolve_opts(block_s, interpret)
+        dtype = jax.dtypes.canonicalize_dtype(np.float64)
+        Lp = PD._pad_lanes(L)
+        Sp = Sn + _pad_to_multiple(Sn, shards * bs)  # whole blocks/shard
+        Cp = np.full((Sp, N, Lp, Lp), float("inf"), dtype=np.float64)
+        Cp[:Sn, :, :L, :L] = C
+        if Sp > Sn:
+            Cp[Sn:] = Cp[Sn - 1]
+        nsp = PD._pad_ns_column(ns_arr, Sn, Sp)
+        import jax.numpy as jnp
+
+        solver = _sharded_dp_solver(combine, shards, "pallas", bs, itp)
+        dp0, dps, args = solver(jnp.asarray(Cp, dtype=dtype),
+                                jnp.asarray(nsp))
+        dp0 = np.asarray(dp0)[:Sn, :L]
+        dps = np.asarray(dps)[:Sn, :, :L]
+        args = np.asarray(args)[:Sn, :, :L]
+        return SW._dp_tables_to_numpy(dp0, dps, args, Sn, N, L)
     pad = _pad_to_multiple(Sn, shards)
     if pad:
         C = np.concatenate([C, np.repeat(C[-1:], pad, axis=0)], axis=0)
         ns_arr = np.concatenate([ns_arr, np.repeat(ns_arr[-1:], pad)])
     import jax.numpy as jnp
 
-    solver = _sharded_dp_solver(combine, shards)
+    solver = _sharded_dp_solver(combine, shards, kernel)
     dp0, dps, args = solver(jnp.asarray(C), jnp.asarray(ns_arr))
     dp0, dps, args = np.asarray(dp0), np.asarray(dps), np.asarray(args)
     if pad:
@@ -151,6 +210,7 @@ def sharded_optimal_dp(
     return_all_k: bool = False,
     n_devices: np.ndarray | Sequence[int] | int | None = None,
     n_shards: int | None = None,
+    kernel: str = "jax",
 ):
     """Exact split DP with the scenario axis sharded over local devices.
 
@@ -158,13 +218,16 @@ def sharded_optimal_dp(
     ``batched_optimal_dp(backend="sharded")`` — same arguments and
     return types as :func:`repro.core.sweep.batched_optimal_dp`, plus
     ``n_shards`` to pin the shard count (default: every local JAX
-    device; see :func:`scenario_shards`). Per-scenario ``n_devices``
-    and ``return_all_k`` carry the full solver contract; results are
-    node-identical to the single-device JAX backend and cost-close to
-    the NumPy float64 oracle (bit-identical under an x64 JAX config)."""
+    device; see :func:`scenario_shards`) and ``kernel`` to pick the
+    per-shard tile program (``"jax"`` or ``"pallas"`` — see
+    :func:`sharded_dp_tables`; both are node-identical). Per-scenario
+    ``n_devices`` and ``return_all_k`` carry the full solver contract;
+    results are node-identical to the single-device JAX backend and
+    cost-close to the NumPy float64 oracle (bit-identical under an x64
+    JAX config)."""
     Sn, N, L, ns = SW._validate_dp_inputs(C, return_all_k, n_devices)
     t0 = time.perf_counter()
     dp_per_k, parents = sharded_dp_tables(C, combine, ns=ns,
-                                          n_shards=n_shards)
+                                          n_shards=n_shards, kernel=kernel)
     return SW._results_from_dp_tables(dp_per_k, parents, L, N, Sn,
                                       "sharded", ns, return_all_k, t0)

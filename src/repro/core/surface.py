@@ -483,10 +483,13 @@ def build_surface(
         same convention as :meth:`ScenarioGrid.link_variant
         <repro.core.sweep.ScenarioGrid.link_variant>`.
       solver: a :data:`repro.core.sweep.BATCHED_SOLVERS` name.
-      backend: solver backend for ``solver="batched_dp"``: ``"numpy"``
-        (default — the node-exact ``==`` parity path), ``"jax"``, or
-        ``"sharded"`` (scenario axis over the local JAX device mesh;
-        :mod:`repro.core.shard`). Non-NumPy backends run float32 by
+      backend: solver backend for ``solver="batched_dp"`` (a
+        :data:`repro.core.sweep.DP_BACKENDS` key): ``"numpy"`` (default
+        — the node-exact ``==`` parity path), ``"jax"``, ``"sharded"``
+        (scenario axis over the local JAX device mesh;
+        :mod:`repro.core.shard`), or ``"pallas"`` (the fused kernel
+        solves straight from the local stack + transmission vectors —
+        :mod:`repro.core.pallas_dp`). Non-NumPy backends run float32 by
         default, so node decisions are cost-close rather than
         bit-identical to the re-solve oracle unless JAX x64 is enabled.
       beam_width: Algorithm-1 width when ``solver="batched_beam"``.
@@ -558,8 +561,10 @@ def build_surfaces(
     suite asserts exact ``==``). ``build_time_s``/``solve_time_s`` on
     each surface record the SHARED family build (one pass), not a
     per-size cost. ``backend`` selects the DP backend (``"jax"`` /
-    ``"sharded"`` accepted for ``solver="batched_dp"`` only — see
-    :func:`build_surface` for the parity caveat). Args otherwise as in
+    ``"sharded"`` / ``"pallas"`` accepted for ``solver="batched_dp"``
+    only — see :func:`build_surface` for the parity caveat; the pallas
+    path hands the fused kernel ``local`` + ``TX`` and never ships the
+    stacked tensor to the device). Args otherwise as in
     :func:`build_surface`."""
     if solver not in SW.BATCHED_SOLVERS:
         raise ValueError(f"unknown batched solver {solver!r}; "
@@ -603,10 +608,20 @@ def build_surfaces(
     res_by_n: dict[int, SW.BatchedSolverResult]
     if solver == "batched_dp":
         # all-k trick: the DP table at device k IS the k-device answer
-        # (on every backend — the jax/sharded kernels return the whole
-        # per-device table stack)
-        all_k = SW.batched_optimal_dp(C, combine=combine, backend=backend,
-                                      return_all_k=True)
+        # (on every backend — the jax/sharded/pallas kernels return the
+        # whole per-device table stack)
+        if backend == "pallas":
+            # fused kernel: the solve consumes (local, TX) directly and
+            # never ships C to the device (the host-side C above only
+            # prices assembled nodes / chunk tuning)
+            from repro.core import pallas_dp as _pallas
+
+            all_k = _pallas.pallas_fused_optimal_dp(
+                local, None, TX, combine=combine, return_all_k=True)
+        else:
+            all_k = SW.batched_optimal_dp(C, combine=combine,
+                                          backend=backend,
+                                          return_all_k=True)
         res_by_n = {n: all_k[n] for n in sizes}
         solve_time = all_k[n_max].wall_time_s
     elif solver == "batched_beam":

@@ -10,9 +10,12 @@ communication-aware re-planning). This module amortizes them:
 * :func:`batched_optimal_dp` — the exact O(L² N) split DP, run over a
   stacked scenario axis in one array pass (NumPy float64, bit-identical
   to :func:`repro.core.solvers.optimal_dp`; optional JAX
-  ``vmap``/``lax.scan`` backend for accelerators, and a ``"sharded"``
+  ``vmap``/``lax.scan`` backend for accelerators, a ``"sharded"``
   backend that partitions the scenario axis over every local JAX
-  device — :mod:`repro.core.shard`).
+  device — :mod:`repro.core.shard` — and a ``"pallas"`` backend that
+  fuses cost construction into a scenario-tiled kernel so ``C`` is
+  never materialized — :mod:`repro.core.pallas_dp`; the
+  :data:`DP_BACKENDS` registry is the single source for the set).
 * :func:`batched_beam_search` / :func:`batched_greedy_search` — the
   paper's Algorithm 1/2 heuristics vectorized over scenarios,
   semantics-faithful to the scalar implementations (same pruning,
@@ -78,6 +81,7 @@ from repro.core import solvers as S
 INF = float("inf")
 
 __all__ = [
+    "DP_BACKENDS",
     "BatchedSolverResult",
     "Scenario",
     "ScenarioGrid",
@@ -267,7 +271,7 @@ class BatchedSolverResult:
     :func:`_dp_jax_solver`)."""
 
     solver: str
-    backend: str
+    backend: str  # a DP_BACKENDS key for batched_dp; "numpy" otherwise
     n_devices: int
     splits: np.ndarray  # (S, N-1) int64, -1 where infeasible/padding
     cost_s: np.ndarray  # (S,) float64 combined objective cost
@@ -486,6 +490,41 @@ def _validate_dp_inputs(C, return_all_k, n_devices):
     return Sn, N, L, ns
 
 
+def _dp_tables_numpy(C, combine, ns):
+    return _dp_numpy(C, combine, ns=ns)
+
+
+def _dp_tables_jax(C, combine, ns):
+    return _dp_jax(C, combine, ns=ns)
+
+
+def _dp_tables_sharded(C, combine, ns):
+    from repro.core import shard as _shard  # lazy: no import cycle
+
+    return _shard.sharded_dp_tables(C, combine, ns=ns)
+
+
+def _dp_tables_pallas(C, combine, ns):
+    from repro.core import pallas_dp as _pallas  # lazy: no import cycle
+
+    return _pallas.pallas_dp_tables(C, combine, ns=ns)
+
+
+# DP backend registry — THE single source of truth for which backends
+# exist. Every consumer (the dispatch below, the unknown-backend error,
+# BatchedSolverResult.backend values, the docs backend matrix, the CI
+# matrix) keys off this dict, so adding a backend is one entry here plus
+# its tables function. Each entry maps C -> (dp_per_k, parents) with the
+# shared frozen-row ``ns`` contract; result selection is common
+# (:func:`_results_from_dp_tables`).
+DP_BACKENDS: dict[str, Callable] = {
+    "numpy": _dp_tables_numpy,      # float64, the bit-parity oracle path
+    "jax": _dp_tables_jax,          # vmap + lax.scan, single device
+    "sharded": _dp_tables_sharded,  # scenario axis over the device mesh
+    "pallas": _dp_tables_pallas,    # fused-construction Pallas kernel
+}
+
+
 def batched_optimal_dp(
     C: np.ndarray,
     combine: str = "sum",
@@ -498,8 +537,10 @@ def batched_optimal_dp(
     Args:
       C: ``(S, N, L, L)`` stacked cost tensor (+inf = infeasible).
       combine: ``"sum"`` (Eq. 5 latency) or ``"max"`` (bottleneck).
-      backend: ``"numpy"`` (float64, the bit-parity path), ``"jax"``,
-        or ``"sharded"`` (:mod:`repro.core.shard`).
+      backend: a :data:`DP_BACKENDS` key — ``"numpy"`` (float64, the
+        bit-parity path), ``"jax"``, ``"sharded"``
+        (:mod:`repro.core.shard`), or ``"pallas"``
+        (:mod:`repro.core.pallas_dp`).
       return_all_k: return a dict ``{n: result}`` for every fleet size
         ``n = 1..N`` — the DP table at device ``k`` already answers the
         ``k``-device question, so a whole fleet-size axis costs one
@@ -520,21 +561,21 @@ def batched_optimal_dp(
     x64-enabled JAX config recovers tie-break parity; see
     :func:`_dp_jax`). ``backend="sharded"`` partitions the scenario
     axis over the local JAX device mesh (:mod:`repro.core.shard`) and
-    is node-identical to ``backend="jax"`` by construction. Every
-    backend honors per-scenario ``n_devices`` with the same frozen-row
-    semantics and supports ``return_all_k``."""
+    is node-identical to ``backend="jax"`` by construction.
+    ``backend="pallas"`` runs the scenario-tiled Pallas kernel
+    (:mod:`repro.core.pallas_dp`; interpret mode off-TPU) and is
+    bit-identical to ``backend="jax"`` — tables and parents — since the
+    dense-mode kernel reorders no arithmetic. Every backend honors
+    per-scenario ``n_devices`` with the same frozen-row semantics and
+    supports ``return_all_k``."""
     Sn, N, L, ns = _validate_dp_inputs(C, return_all_k, n_devices)
     t0 = time.perf_counter()
-    if backend == "numpy":
-        dp_per_k, parents = _dp_numpy(C, combine, ns=ns)
-    elif backend == "jax":
-        dp_per_k, parents = _dp_jax(C, combine, ns=ns)
-    elif backend == "sharded":
-        from repro.core import shard as _shard  # lazy: no import cycle
-
-        dp_per_k, parents = _shard.sharded_dp_tables(C, combine, ns=ns)
-    else:
-        raise ValueError(f"unknown backend {backend!r}")
+    try:
+        tables_fn = DP_BACKENDS[backend]
+    except KeyError:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"options: {sorted(DP_BACKENDS)}") from None
+    dp_per_k, parents = tables_fn(C, combine, ns)
     return _results_from_dp_tables(dp_per_k, parents, L, N, Sn, backend,
                                    ns, return_all_k, t0)
 
@@ -1326,10 +1367,13 @@ def sweep(
       grid: the scenario grid to price.
       solver: one of :data:`BATCHED_SOLVERS` (``batched_dp`` /
         ``batched_beam`` / ``batched_greedy``).
-      backend: ``"numpy"`` (bit-parity float64), ``"jax"``, or
-        ``"sharded"`` (scenario axis partitioned over the local JAX
-        device mesh; see :mod:`repro.core.shard`) — the latter two for
-        ``batched_dp`` only.
+      backend: a :data:`DP_BACKENDS` key — ``"numpy"`` (bit-parity
+        float64), ``"jax"``, ``"sharded"`` (scenario axis partitioned
+        over the local JAX device mesh; see :mod:`repro.core.shard`),
+        or ``"pallas"`` (cost construction fused into the kernel from
+        the profile bank + transmission vectors, ``C`` never
+        materialized; see :mod:`repro.core.pallas_dp`) — all but
+        ``"numpy"`` for ``batched_dp`` only.
       beam_width: beam width when ``solver="batched_beam"``.
 
     Returns a :class:`SweepResult` with one :class:`SweepRow` per
@@ -1411,19 +1455,30 @@ def sweep(
             # filler: the solvers never read them (the per-scenario
             # n_devices vector masks every k > n_s)
         TX = _group_tx_vectors(grid, profile, group)  # (S_g, L)
-        if bool((bank_idx == bank_idx[0]).all()):
-            # homogeneous group (every scenario the same device stack):
-            # broadcast one local tensor instead of gathering S copies
-            local = np.stack(bank_mats)[bank_idx[0]]  # (N_max, L, L)
-            C = local[None, :, :, :] + TX[:, None, None, :]
-        else:
-            C = np.stack(bank_mats)[bank_idx]  # (S_g, N_max, L, L) gather
-            C += TX[:, None, None, :]
-        build_time += time.perf_counter() - t0
+        bank = np.stack(bank_mats)
+        if backend == "pallas":
+            # fused path: the kernel builds C[s,k] = bank[idx] + TX[s]
+            # inside each reduction step — the (S_g, N, L, L) tensor is
+            # never materialized, on host or device
+            build_time += time.perf_counter() - t0
+            from repro.core import pallas_dp as _pallas  # lazy, like shard
 
-        kwargs = {"beam_width": beam_width} if solver == "batched_beam" else {}
-        res = solve_batched(C, solver=solver, combine=combine,
-                            backend=backend, n_devices=ns, **kwargs)
+            res = _pallas.pallas_fused_optimal_dp(
+                bank, bank_idx, TX, combine=combine, n_devices=ns)
+        else:
+            if bool((bank_idx == bank_idx[0]).all()):
+                # homogeneous group (every scenario the same device
+                # stack): broadcast one local tensor, don't gather S copies
+                local = bank[bank_idx[0]]  # (N_max, L, L)
+                C = local[None, :, :, :] + TX[:, None, None, :]
+            else:
+                C = bank[bank_idx]  # (S_g, N_max, L, L) gather
+                C += TX[:, None, None, :]
+            build_time += time.perf_counter() - t0
+
+            kwargs = {"beam_width": beam_width} if solver == "batched_beam" else {}
+            res = solve_batched(C, solver=solver, combine=combine,
+                                backend=backend, n_devices=ns, **kwargs)
         solve_time += res.wall_time_s
         per_scn_wall = res.wall_time_s / max(1, len(group))
 
@@ -1442,9 +1497,14 @@ def sweep(
                     if len(bounds) > 2 else 0.0
                 obj = float(res.cost_s[gi])
                 # device/transmission totals summed over all segments; for
-                # the "sum" objective device_s + transmission_s == objective
-                seg_sum = float(sum(C[gi, i, bounds[i], bounds[i + 1] - 1]
-                                    for i in range(len(bounds) - 1)))
+                # the "sum" objective device_s + transmission_s == objective.
+                # Priced from the bank + TX decomposition (bitwise equal to
+                # the C entries, which are built as exactly this f64 sum) so
+                # the pallas path needs no materialized tensor either.
+                seg_sum = float(sum(
+                    bank[bank_idx[gi, i], bounds[i], bounds[i + 1] - 1]
+                    + TX[gi, bounds[i + 1] - 1]
+                    for i in range(len(bounds) - 1)))
                 device_s = seg_sum - tx_total
                 total = obj + link.t_setup_s + link.t_feedback_s
                 rows[idx] = SweepRow(

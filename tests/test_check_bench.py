@@ -1,0 +1,183 @@
+"""Unit tests for the CI bench-regression gate (tools/check_bench.py).
+
+The gate is pure dict-checking, so the suite drives it with synthetic
+reports: a known-good report built from the gate's own key lists, then
+single-fault mutants (missing section, tripped correctness flag,
+collapsed speedup, grown overhead ratio) that must each fail. The
+committed baselines themselves must pass as their own candidates —
+that is exactly what CI runs.
+"""
+
+import copy
+import importlib.util
+import json
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parent.parent
+
+spec = importlib.util.spec_from_file_location(
+    "check_bench", ROOT / "tools" / "check_bench.py")
+CB = importlib.util.module_from_spec(spec)
+spec.loader.exec_module(CB)
+
+
+def _set(report, dotted, value):
+    node = report
+    *parents, leaf = dotted.split(".")
+    for part in parents:
+        node = node.setdefault(part, {})
+    node[leaf] = value
+
+
+def good_sweep():
+    """A candidate satisfying every sweep key, flag and ratio."""
+    r = {}
+    for key in CB.SWEEP_KEYS:
+        _set(r, key, 1.0)
+    for key in CB.SWEEP_FLAGS:
+        _set(r, key, True)
+    _set(r, "benchmark", "sweep_grid")
+    _set(r, "mode", "smoke")
+    _set(r, "backend", "numpy")
+    _set(r, "parity_ok", True)
+    _set(r, "speedup_x", 90.0)
+    _set(r, "pallas.interpret", True)
+    _set(r, "pallas.node_identical_to_jax", False)  # informational
+    _set(r, "pallas.n_tie_divergences", 33)
+    return r
+
+
+def good_surface():
+    r = {}
+    for key in CB.SURFACE_KEYS:
+        _set(r, key, 1.0)
+    for key in CB.SURFACE_FLAGS:
+        _set(r, key, True)
+    _set(r, "benchmark", "surface")
+    _set(r, "mode", "smoke")
+    _set(r, "speedup_x", 130.0)
+    _set(r, "async.inflight_over_steady_x", 0.8)
+    return r
+
+
+class TestCheckSweep:
+    def test_good_report_is_green(self):
+        assert CB.check_sweep(good_sweep(), good_sweep(), 3.0) == []
+
+    def test_missing_section_fails(self):
+        r = good_sweep()
+        del r["pallas"]
+        fails = CB.check_sweep(r, good_sweep(), 3.0)
+        assert any("pallas.wall_s" in f for f in fails)
+        assert any("pallas.costs_allclose_to_jax" in f for f in fails)
+
+    def test_tripped_correctness_flag_fails(self):
+        for flag in CB.SWEEP_FLAGS:
+            r = good_sweep()
+            _set(r, flag, False)
+            fails = CB.check_sweep(r, good_sweep(), 3.0)
+            assert any(flag in f for f in fails), flag
+
+    def test_speedup_collapse_fails_but_noise_passes(self):
+        base = good_sweep()
+        r = good_sweep()
+        _set(r, "speedup_x", 90.0 / 2)  # within 3x: noise
+        assert CB.check_sweep(r, base, 3.0) == []
+        _set(r, "speedup_x", 90.0 / 4)  # beyond 3x: collapse
+        fails = CB.check_sweep(r, base, 3.0)
+        assert any("speedup_x" in f and "collapsed" in f for f in fails)
+
+    def test_parity_required_only_for_numpy_backend(self):
+        # float32 backends may break exact-cost ties vs the f64 oracle
+        r = good_sweep()
+        _set(r, "backend", "pallas")
+        _set(r, "parity_ok", False)
+        assert CB.check_sweep(r, good_sweep(), 3.0) == []
+        _set(r, "backend", "numpy")
+        fails = CB.check_sweep(r, good_sweep(), 3.0)
+        assert any("parity_ok" in f for f in fails)
+
+    def test_no_baseline_skips_ratios_only(self):
+        r = good_sweep()
+        _set(r, "speedup_x", 0.001)
+        assert CB.check_sweep(r, None, 3.0) == []
+        _set(r, "sharded.node_identical_to_jax", False)
+        assert CB.check_sweep(r, None, 3.0) != []
+
+    def test_non_numeric_ratio_flagged(self):
+        r = good_sweep()
+        _set(r, "speedup_x", "fast")
+        fails = CB.check_sweep(r, good_sweep(), 3.0)
+        assert any("not numeric" in f for f in fails)
+
+
+class TestCheckSurface:
+    def test_good_report_is_green(self):
+        assert CB.check_surface(good_surface(), good_surface(), 3.0) == []
+
+    def test_lower_better_ratio_growth_fails(self):
+        base = good_surface()
+        r = good_surface()
+        _set(r, "async.inflight_over_steady_x", 0.8 * 2)  # noise
+        assert CB.check_surface(r, base, 3.0) == []
+        _set(r, "async.inflight_over_steady_x", 0.8 * 4)  # regression
+        fails = CB.check_surface(r, base, 3.0)
+        assert any("inflight_over_steady_x" in f and "grew" in f
+                   for f in fails)
+
+    def test_tripped_flag_fails(self):
+        r = good_surface()
+        _set(r, "plans_agree_end_of_trace", False)
+        assert CB.check_surface(r, good_surface(), 3.0) != []
+
+
+class TestCommittedBaselines:
+    """The committed full-run reports must pass as their own candidates
+    — the exact invocation the CI bench-smoke job makes, so a schema
+    drift in the benchmarks breaks HERE first, not on main."""
+
+    def test_bench_sweep_json_green(self):
+        with open(ROOT / "BENCH_sweep.json") as f:
+            rep = json.load(f)
+        assert CB.check_sweep(rep, copy.deepcopy(rep), 3.0) == []
+
+    def test_bench_surface_json_green(self):
+        with open(ROOT / "BENCH_surface.json") as f:
+            rep = json.load(f)
+        assert CB.check_surface(rep, copy.deepcopy(rep), 3.0) == []
+
+
+class TestCli:
+    def _dump(self, tmp_path, name, report):
+        p = tmp_path / name
+        p.write_text(json.dumps(report))
+        return str(p)
+
+    def test_green_run_exits_zero(self, tmp_path, capsys):
+        sweep = self._dump(tmp_path, "s.json", good_sweep())
+        surf = self._dump(tmp_path, "f.json", good_surface())
+        rc = CB.main(["--sweep", sweep, "--sweep-baseline", sweep,
+                      "--surface", surf, "--surface-baseline", surf])
+        assert rc == 0
+        assert "bench OK" in capsys.readouterr().out
+
+    def test_regression_exits_one(self, tmp_path, capsys):
+        base = self._dump(tmp_path, "base.json", good_sweep())
+        bad = good_sweep()
+        _set(bad, "pallas.divergences_are_exact_ties", False)
+        cand = self._dump(tmp_path, "cand.json", bad)
+        rc = CB.main(["--sweep", cand, "--sweep-baseline", base])
+        assert rc == 1
+        assert "regression" in capsys.readouterr().err
+
+    def test_nothing_to_check_is_usage_error(self):
+        with pytest.raises(SystemExit):
+            CB.main([])
+
+    def test_max_ratio_below_one_rejected(self, tmp_path):
+        sweep = self._dump(tmp_path, "s.json", good_sweep())
+        with pytest.raises(SystemExit):
+            CB.main(["--sweep", sweep, "--sweep-baseline", sweep,
+                     "--max-ratio", "0.5"])

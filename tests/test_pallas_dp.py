@@ -1,0 +1,391 @@
+"""Pallas backend suite (interpret mode on CPU — the CI ``pallas`` job).
+
+Dense mode (``backend="pallas"`` through :func:`repro.core.sweep.
+batched_optimal_dp`) reorders no arithmetic vs the JAX backend, so the
+contract here is exact ``==`` on splits, costs and feasibility —
+including non-tile-multiple scenario counts and layer counts straddling
+the 128-lane boundary, where the +inf lane padding and replica rows
+must stay invisible.
+
+Fused mode (:func:`repro.core.pallas_dp.pallas_fused_optimal_dp`, the
+``sweep()``/``build_surfaces()`` path) folds ``C = local + tx``
+construction into the kernel; the <=1 ulp construction rounding may
+break EXACT-cost ties toward a different equally-optimal plan, so
+fused assertions are: feasibility ``==``, costs allclose, and any
+divergent plan must reprice (float64) to the same optimum.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import pallas_dp as PD
+from repro.core import shard as SH
+from repro.core import solvers as S
+from repro.core import sweep as SW
+from repro.core.latency import (
+    DeviceProfile,
+    LayerCost,
+    LinkProfile,
+    ModelCostProfile,
+    SplitCostModel,
+)
+from repro.core.surface import build_surfaces
+
+INF = float("inf")
+
+# (S, N, L) corners: non-multiple-of-block_s S, L straddling the
+# 128-lane tile (130), single scenario, single device, L == N
+SHAPES = [(7, 4, 13), (1, 2, 5), (16, 3, 130), (5, 1, 9), (3, 6, 6)]
+
+
+def make_C(Sn, N, L, seed, inf_frac=0.15):
+    """Random dense cost tensor with invalid segments at +inf."""
+    rng = np.random.RandomState(seed)
+    C = rng.uniform(1e-3, 10.0, size=(Sn, N, L, L))
+    C[rng.random(size=C.shape) < inf_frac] = INF
+    il = np.tril_indices(L, -1)
+    C[:, :, il[0], il[1]] = INF  # a > b is not a segment
+    return C
+
+
+def make_ns(Sn, N, seed):
+    return np.random.RandomState(seed ^ 0x5EED).randint(1, N + 1, size=Sn)
+
+
+def reprice(C_s, splits, L, combine):
+    """Float64 scalar-oracle cost of one scenario's plan."""
+    return S.total_cost(
+        lambda a, b, k: float(C_s[k - 1, a - 1, b - 1]), splits, L, combine)
+
+
+def assert_same_or_exact_tie(a, b, C, combine, ctx=""):
+    """Fused-mode plan contract vs a dense result: identical nodes
+    except exact-cost ties (zero float64-repriced regret)."""
+    assert np.array_equal(a.feasible, b.feasible), ctx
+    fin = a.feasible
+    assert np.allclose(a.cost_s[fin], b.cost_s[fin], rtol=1e-5), ctx
+    L = C.shape[-1]
+    for s in np.flatnonzero(fin):
+        if a.splits_tuple(s) == b.splits_tuple(s):
+            continue
+        ra = reprice(C[s], a.splits_tuple(s), L, combine)
+        rb = reprice(C[s], b.splits_tuple(s), L, combine)
+        assert abs(ra - rb) <= 1e-12 * max(abs(ra), 1e-300), \
+            f"{ctx}: scenario {s} diverged with regret {rb - ra!r}"
+
+
+# ---------------------------------------------------------------------------
+# Dense mode: bitwise node-identity to backend="jax"
+# ---------------------------------------------------------------------------
+
+
+class TestDenseNodeIdentity:
+    @pytest.mark.parametrize("combine", ["sum", "max"])
+    @pytest.mark.parametrize("shape", SHAPES)
+    def test_bitwise_vs_jax(self, shape, combine):
+        Sn, N, L = shape
+        C = make_C(Sn, N, L, seed=hash(shape) & 0x7FFFFFFF)
+        ns = make_ns(Sn, N, seed=Sn * 31 + N)
+        for kw in ({}, {"n_devices": ns}):
+            a = SW.batched_optimal_dp(C, combine=combine, backend="jax", **kw)
+            b = SW.batched_optimal_dp(C, combine=combine, backend="pallas",
+                                      **kw)
+            assert b.backend == "pallas"
+            assert np.array_equal(a.splits, b.splits), (shape, combine, kw)
+            assert np.array_equal(a.cost_s, b.cost_s), (shape, combine, kw)
+            assert np.array_equal(a.feasible, b.feasible), (shape, combine, kw)
+
+    def test_all_k_bitwise_vs_jax(self):
+        C = make_C(6, 4, 12, seed=7)
+        ref = SW.batched_optimal_dp(C, return_all_k=True, backend="jax")
+        got = SW.batched_optimal_dp(C, return_all_k=True, backend="pallas")
+        assert sorted(got) == sorted(ref) == [1, 2, 3, 4]
+        for n in ref:
+            assert np.array_equal(ref[n].splits, got[n].splits), n
+            assert np.array_equal(ref[n].cost_s, got[n].cost_s), n
+            assert np.array_equal(ref[n].feasible, got[n].feasible), n
+
+    def test_odd_block_s_exercises_replica_padding(self):
+        """block_s=3 with S=7 pads to Sp=9: two replica rows that must
+        never leak into the real scenarios' answers."""
+        C = make_C(7, 3, 11, seed=11)
+        a = SW.batched_optimal_dp(C, backend="jax")
+        b = PD.pallas_optimal_dp(C, block_s=3)
+        assert np.array_equal(a.splits, b.splits)
+        assert np.array_equal(a.cost_s, b.cost_s)
+
+    def test_explicit_interpret_true(self):
+        C = make_C(4, 3, 9, seed=3)
+        a = SW.batched_optimal_dp(C, backend="jax")
+        b = PD.pallas_optimal_dp(C, interpret=True)
+        assert np.array_equal(a.splits, b.splits)
+
+    def test_empty_scenario_axis(self):
+        C = make_C(0, 3, 8, seed=1)
+        b = SW.batched_optimal_dp(C, backend="pallas")
+        assert b.splits.shape == (0, 2)
+        assert b.cost_s.shape == (0,)
+
+
+# ---------------------------------------------------------------------------
+# Fused mode: C never materialized; node-identical up to exact ties
+# ---------------------------------------------------------------------------
+
+
+def make_local_tx(Sn, N, L, seed):
+    rng = np.random.RandomState(seed)
+    local = rng.uniform(1e-3, 5.0, size=(N, L, L))
+    il = np.tril_indices(L, -1)
+    local[:, il[0], il[1]] = INF
+    local[rng.random(size=local.shape) < 0.1] = INF
+    tx = rng.uniform(0.0, 2.0, size=(Sn, L))
+    return local, tx
+
+
+class TestFusedKernel:
+    @pytest.mark.parametrize("combine", ["sum", "max"])
+    def test_matches_dense_on_materialized_C(self, combine):
+        Sn, N, L = 9, 4, 14
+        local, tx = make_local_tx(Sn, N, L, seed=21)
+        C = local[None, :, :, :] + tx[:, None, None, :]
+        a = SW.batched_optimal_dp(C, combine=combine, backend="jax")
+        b = PD.pallas_fused_optimal_dp(local, None, tx, combine=combine)
+        assert b.backend == "pallas"
+        assert_same_or_exact_tie(a, b, C, combine, ctx=f"fused/{combine}")
+
+    def test_frozen_rows_with_ns(self):
+        Sn, N, L = 8, 4, 10
+        local, tx = make_local_tx(Sn, N, L, seed=5)
+        C = local[None] + tx[:, None, None, :]
+        ns = make_ns(Sn, N, seed=5)
+        a = SW.batched_optimal_dp(C, n_devices=ns, backend="jax")
+        b = PD.pallas_fused_optimal_dp(local, None, tx, n_devices=ns)
+        assert_same_or_exact_tie(a, b, C, "sum", ctx="fused/ns")
+        assert np.array_equal(a.n_devices_s, b.n_devices_s)
+
+    def test_all_k(self):
+        Sn, N, L = 5, 4, 9
+        local, tx = make_local_tx(Sn, N, L, seed=9)
+        C = local[None] + tx[:, None, None, :]
+        ref = SW.batched_optimal_dp(C, return_all_k=True, backend="jax")
+        got = PD.pallas_fused_optimal_dp(local, None, tx, return_all_k=True)
+        assert sorted(got) == sorted(ref)
+        for n in ref:
+            assert_same_or_exact_tie(ref[n], got[n], C, "sum",
+                                     ctx=f"fused/all_k n={n}")
+
+    def test_single_device_stack(self):
+        local, tx = make_local_tx(6, 1, 7, seed=2)
+        C = local[None] + tx[:, None, None, :]
+        a = SW.batched_optimal_dp(C, backend="jax")
+        b = PD.pallas_fused_optimal_dp(local, None, tx)
+        assert np.array_equal(a.splits, b.splits)
+        assert np.allclose(a.cost_s, b.cost_s, rtol=1e-6)
+
+    def test_bank_idx_heterogeneous_mixes(self):
+        """(bank, bank_idx) subgrouping: scenarios sharing a device
+        stack share one fused launch; the scattered-back tables must
+        match solving the gathered dense tensor."""
+        Sn, N, L, B = 11, 3, 12, 4
+        rng = np.random.RandomState(17)
+        bank = rng.uniform(1e-3, 5.0, size=(B, L, L))
+        il = np.tril_indices(L, -1)
+        bank[:, il[0], il[1]] = INF
+        tx = rng.uniform(0.0, 2.0, size=(Sn, L))
+        bank_idx = rng.randint(0, B, size=(Sn, N))
+        ns = make_ns(Sn, N, seed=17)
+        C = bank[bank_idx] + tx[:, None, None, :]
+        a = SW.batched_optimal_dp(C, n_devices=ns, backend="jax")
+        b = PD.pallas_fused_optimal_dp(bank, bank_idx, tx, n_devices=ns)
+        assert_same_or_exact_tie(a, b, C, "sum", ctx="bank_idx")
+
+    def test_all_k_and_ns_mutually_exclusive(self):
+        local, tx = make_local_tx(3, 2, 5, seed=1)
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            PD.pallas_fused_optimal_dp(local, None, tx, return_all_k=True,
+                                       n_devices=[1, 2, 2])
+        bank_idx = np.zeros((3, 2), dtype=int)
+        with pytest.raises(ValueError, match="mutually exclusive"):
+            PD.pallas_fused_optimal_dp(local, bank_idx, tx,
+                                       return_all_k=True, n_devices=2)
+
+    def test_shape_validation(self):
+        local, tx = make_local_tx(3, 2, 5, seed=1)
+        with pytest.raises(ValueError, match="local must be"):
+            PD.pallas_fused_dp_tables(local[:, :, :3], tx)
+        with pytest.raises(ValueError, match="tx must be"):
+            PD.pallas_fused_dp_tables(local, tx[:, :3])
+        with pytest.raises(ValueError, match="bank_idx must be"):
+            PD.pallas_fused_optimal_dp(local, np.zeros((4, 2), dtype=int), tx)
+
+
+# ---------------------------------------------------------------------------
+# Composition: sharded shard_map over the pallas tile kernel
+# ---------------------------------------------------------------------------
+
+
+class TestShardKernel:
+    def test_sharded_pallas_node_identical(self):
+        C = make_C(7, 3, 10, seed=13)
+        ns = make_ns(7, 3, seed=13)
+        a = SH.sharded_optimal_dp(C, n_devices=ns, kernel="jax")
+        b = SH.sharded_optimal_dp(C, n_devices=ns, kernel="pallas")
+        c = SW.batched_optimal_dp(C, n_devices=ns, backend="pallas")
+        assert np.array_equal(a.splits, b.splits)
+        assert np.array_equal(a.cost_s, b.cost_s)
+        assert np.array_equal(a.feasible, b.feasible)
+        assert np.array_equal(b.splits, c.splits)
+        assert np.array_equal(b.cost_s, c.cost_s)
+
+    def test_unknown_shard_kernel_rejected(self):
+        C = make_C(2, 2, 5, seed=1)
+        with pytest.raises(ValueError, match="unknown shard kernel"):
+            SH.sharded_optimal_dp(C, kernel="mosaic")
+
+
+# ---------------------------------------------------------------------------
+# Integration: sweep() and build_surfaces() fused paths
+# ---------------------------------------------------------------------------
+
+
+def tiny_grid():
+    layers = tuple(
+        LayerCost(f"l{i}", t_infer_s=0.01 * (i + 1), act_bytes=200 * (5 - i),
+                  param_bytes=1_000, work_bytes=500)
+        for i in range(5)
+    )
+    prof = ModelCostProfile("toy", layers, input_bytes=128)
+    links = {
+        "fast": LinkProfile("fast", 512, 1e6, t_setup_s=0.1,
+                            t_feedback_s=0.01),
+        "slow": LinkProfile("slow", 256, 1e5, t_ack_s=1e-3, t_setup_s=0.02),
+    }
+    return SW.ScenarioGrid(
+        models={"toy": prof},
+        links=links,
+        n_devices=(2, 3),
+        loss_p=(None, 0.1),
+        rate_scale=(1.0, 0.5),
+        devices=(DeviceProfile("d", t_tensor_alloc_s=1e-3),
+                 DeviceProfile("e", compute_scale=1.4),
+                 DeviceProfile("f", compute_scale=0.8)),
+    )
+
+
+class TestSweepBackend:
+    def test_sweep_pallas_vs_jax(self):
+        grid = tiny_grid()
+        rj = SW.sweep(grid, backend="jax")
+        rp = SW.sweep(grid, backend="pallas")
+        assert rp.n_scenarios == rj.n_scenarios == grid.size
+        for a, b in zip(rj.rows, rp.rows):
+            assert a.feasible == b.feasible
+            if not a.feasible:
+                continue
+            assert b.objective_cost_s == pytest.approx(
+                a.objective_cost_s, rel=1e-5)
+            if a.splits == b.splits:
+                assert b.total_latency_s == pytest.approx(
+                    a.total_latency_s, rel=1e-5)
+                continue
+            # divergent plan: must be an exact-cost tie under the f64 oracle
+            m = grid.cost_model(a.scenario)
+            fn = m.cost_segment_fn()
+            L = m.profile.num_layers
+            ra = S.total_cost(fn, a.splits, L)
+            rb = S.total_cost(fn, b.splits, L)
+            assert abs(ra - rb) <= 1e-12 * max(abs(ra), 1e-300)
+
+    def test_sweep_rejects_unknown_backend(self):
+        grid = tiny_grid()
+        with pytest.raises(ValueError, match="unknown backend"):
+            SW.sweep(grid, backend="cuda")
+
+
+def switchy_cost_model():
+    layers = (
+        LayerCost("l1", t_infer_s=0.01, act_bytes=1500, param_bytes=100),
+        LayerCost("l2", t_infer_s=0.01, act_bytes=100, param_bytes=100,
+                  work_bytes=10_000),
+        LayerCost("l3", t_infer_s=0.01, act_bytes=0, param_bytes=100,
+                  work_bytes=10_000),
+    )
+    prof = ModelCostProfile("switchy", layers)
+    dev = DeviceProfile("d", tensor_alloc_s_per_byte=1e-6)
+    link = LinkProfile("lk", mtu_bytes=1000, rate_bytes_per_s=1e6)
+    return SplitCostModel(profile=prof, devices=(dev,), link=link)
+
+
+FAMILY_GRID = {"pt_scale": (1.0, 8.0, 64.0), "loss_p": (0.0, 0.2)}
+
+
+class TestSurfacesBackend:
+    def test_build_surfaces_pallas_vs_jax(self):
+        m = switchy_cost_model()
+        fam_j = build_surfaces(m, {"lk": m.link}, (1, 2, 3),
+                               solver="batched_dp", backend="jax",
+                               **FAMILY_GRID)
+        fam_p = build_surfaces(m, {"lk": m.link}, (1, 2, 3),
+                               solver="batched_dp", backend="pallas",
+                               **FAMILY_GRID)
+        assert sorted(fam_p) == sorted(fam_j) == [1, 2, 3]
+        for n in fam_j:
+            for name in fam_j[n].protocols:
+                a = fam_j[n].protocols[name]
+                b = fam_p[n].protocols[name]
+                assert a.packet_time_s == b.packet_time_s
+                assert a.loss_p == b.loss_p
+                # node latencies are host-f64 prices of the chosen plans:
+                # equal-cost tie divergence keeps them allclose
+                assert np.allclose(a.latency_s, b.latency_s, rtol=1e-9,
+                                   equal_nan=True), (n, name)
+                if not np.array_equal(a.splits, b.splits):
+                    ties = a.splits != b.splits
+                    assert np.allclose(a.latency_s[ties.any(axis=-1)],
+                                       b.latency_s[ties.any(axis=-1)],
+                                       rtol=1e-12), (n, name)
+
+
+# ---------------------------------------------------------------------------
+# jit caching, options, and the backend registry
+# ---------------------------------------------------------------------------
+
+
+class TestJitCaching:
+    def test_same_shape_repeat_does_not_retrace(self):
+        C = make_C(6, 3, 9, seed=23)
+        SW.batched_optimal_dp(C, backend="pallas")  # warm (traces at most once)
+        before = PD._PALLAS_TRACE_COUNT
+        SW.batched_optimal_dp(C, backend="pallas")
+        SW.batched_optimal_dp(make_C(6, 3, 9, seed=24), backend="pallas")
+        assert PD._PALLAS_TRACE_COUNT == before
+
+
+class TestOptionsAndRegistry:
+    def test_block_s_validated(self):
+        C = make_C(2, 2, 5, seed=1)
+        with pytest.raises(ValueError, match="block_s"):
+            PD.pallas_optimal_dp(C, block_s=0)
+
+    def test_interpret_default_is_on_off_tpu(self):
+        import jax
+
+        if jax.default_backend() == "tpu":
+            pytest.skip("TPU host: interpret defaults off")
+        assert PD.pallas_interpret_default() is True
+
+    def test_registry_is_the_backend_set(self):
+        assert set(SW.DP_BACKENDS) == {"numpy", "jax", "sharded", "pallas"}
+        for fn in SW.DP_BACKENDS.values():
+            assert callable(fn)
+
+    def test_unknown_backend_error_names_every_backend(self):
+        """Regression: the ValueError must enumerate the live registry,
+        not a hardcoded subset that rots when a backend lands."""
+        C = make_C(2, 2, 5, seed=1)
+        with pytest.raises(ValueError) as ei:
+            SW.batched_optimal_dp(C, backend="tpu")
+        msg = str(ei.value)
+        assert "'tpu'" in msg
+        for name in SW.DP_BACKENDS:
+            assert name in msg, f"error message omits backend {name!r}"

@@ -307,6 +307,73 @@ class TestJaxBackendContract:
             assert np.array_equal(b.feasible, c.feasible)
 
 
+class TestPallasBackendContract:
+    """``backend="pallas"`` (dense mode, interpret on CPU) carries the
+    full solver contract. The dense kernel reorders no arithmetic —
+    it only tiles the scenario axis — so beyond the rounding-robust
+    properties the jax backend gets, pallas owes a STRONGER one:
+    node-identity (exact ``==`` on splits, costs, feasibility) to
+    ``backend="jax"``. Fused-mode (construction folded into the
+    kernel) parity lives in ``tests/test_pallas_dp.py``."""
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_per_scenario_n_devices_with_inf_padding(self, C, combine, seed):
+        """Frozen-row subsetting on the pallas backend: +inf device
+        slices beyond each scenario's own fleet size never poison a
+        live row (same property as the jax class above)."""
+        Sn, N, L, _ = C.shape
+        ns = np.random.RandomState(seed).randint(1, N + 1, size=Sn)
+        C = C.copy()
+        for s in range(Sn):
+            C[s, ns[s]:] = INF
+        a = SW.batched_optimal_dp(C, combine=combine, n_devices=ns)
+        b = SW.batched_optimal_dp(C, combine=combine, n_devices=ns,
+                                  backend="pallas")
+        assert np.array_equal(a.feasible, b.feasible)
+        fin = a.feasible
+        assert np.allclose(a.cost_s[fin], b.cost_s[fin], rtol=1e-4)
+        for s in np.flatnonzero(fin):
+            n = int(ns[s])
+            repriced = S.total_cost(scalar_fn(C[s, :n]),
+                                    b.splits_tuple(s), L, combine)
+            assert repriced <= float(a.cost_s[s]) * (1 + 1e-4)
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]))
+    @settings(max_examples=8, deadline=None)
+    def test_all_k_pallas_matches_numpy_all_k(self, C, combine):
+        Sn, N, L, _ = C.shape
+        ref = SW.batched_optimal_dp(C, combine=combine, return_all_k=True)
+        got = SW.batched_optimal_dp(C, combine=combine, return_all_k=True,
+                                    backend="pallas")
+        assert sorted(got) == sorted(ref)
+        for n in ref:
+            assert np.array_equal(ref[n].feasible, got[n].feasible)
+            fin = ref[n].feasible
+            assert np.allclose(ref[n].cost_s[fin], got[n].cost_s[fin],
+                               rtol=1e-4)
+
+    @given(C=dense_tensors(), combine=st.sampled_from(["sum", "max"]),
+           seed=st.integers(0, 2**31 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_pallas_node_identical_to_jax(self, C, combine, seed):
+        """The acceptance contract, as a property: dense pallas is
+        node-identical (exact ==) to the single-device JAX path —
+        identical per-scenario float operation order, +inf lane
+        padding and replica rows are never observed."""
+        Sn, N, L, _ = C.shape
+        ns = np.random.RandomState(seed).randint(1, N + 1, size=Sn)
+        for kw in ({}, {"n_devices": ns}):
+            b = SW.batched_optimal_dp(C, combine=combine, backend="jax", **kw)
+            p = SW.batched_optimal_dp(C, combine=combine, backend="pallas",
+                                      **kw)
+            assert p.backend == "pallas"
+            assert np.array_equal(b.splits, p.splits)
+            assert np.array_equal(b.cost_s, p.cost_s)
+            assert np.array_equal(b.feasible, p.feasible)
+
+
 class TestSolverInvariants:
     """Cross-solver dominance properties the oracle relationship implies."""
 

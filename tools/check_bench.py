@@ -1,0 +1,196 @@
+"""Bench-regression gate (CI jobs ``bench-smoke`` and ``pallas``).
+
+Compares a freshly produced benchmark JSON (a ``--smoke`` run in CI)
+against the committed baseline (``BENCH_sweep.json`` /
+``BENCH_surface.json``) and fails on regression, so the benchmarks gate
+merges instead of only uploading artifacts nobody reads. Three checks
+per report:
+
+1. **Schema** — every required key is present (a section that silently
+   disappears is a regression, not a cleanup).
+2. **Correctness flags** — the parity/node-identity booleans the
+   benchmark asserts must be true in the candidate (``parity_ok`` on
+   the sweep report is only required for ``backend="numpy"`` runs —
+   float32 backends legitimately break exact-cost ties differently).
+3. **Ratio metrics** — dimensionless metrics (speedups, overhead
+   ratios) must stay within ``--max-ratio`` (default 3x) of the
+   baseline. Only dimensionless metrics are compared: the committed
+   baselines are ``full``-mode runs on other hardware, so absolute
+   wall times are not comparable, but a 90x speedup collapsing to 5x
+   is a regression on any host. The tolerance is deliberately generous
+   — this gate catches collapses, not noise.
+
+Usage:
+  python tools/check_bench.py --sweep BENCH_sweep_ci.json \
+      [--sweep-baseline BENCH_sweep.json] \
+      --surface BENCH_surface_ci.json \
+      [--surface-baseline BENCH_surface.json] [--max-ratio 3.0]
+
+Exit 0 = no regression. Unit-tested in ``tests/test_check_bench.py``
+with synthetic regressed reports.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# required keys (dotted = nested); flags must be True; ratios are
+# (dotted_key, "higher"|"lower") — higher-better may not collapse below
+# baseline/max_ratio, lower-better may not grow past baseline*max_ratio
+SWEEP_KEYS = (
+    "benchmark", "mode", "backend", "n_scenarios", "n_feasible",
+    "batched_wall_s", "batched_solve_s", "batched_build_s",
+    "scalar_wall_s", "speedup_x", "scenarios_per_sec_batched",
+    "parity_ok",
+    "sharded.n_shards", "sharded.wall_s", "sharded.node_identical_to_jax",
+    "pallas.interpret", "pallas.wall_s", "pallas.node_identical_to_jax",
+    "pallas.n_tie_divergences", "pallas.divergences_are_exact_ties",
+    "pallas.costs_allclose_to_jax",
+)
+SWEEP_FLAGS = (
+    "sharded.node_identical_to_jax",
+    "pallas.divergences_are_exact_ties",
+    "pallas.costs_allclose_to_jax",
+)
+SWEEP_RATIOS = (("speedup_x", "higher"),)
+
+SURFACE_KEYS = (
+    "benchmark", "mode", "n_nodes", "speedup_x", "parity_ok",
+    "plans_agree_end_of_trace", "surface_hit_rate",
+    "multi_n.parity_ok", "multi_n.solve_speedup_x",
+    "async.parity_ok", "async.inflight_over_steady_x",
+)
+SURFACE_FLAGS = (
+    "parity_ok", "plans_agree_end_of_trace",
+    "multi_n.parity_ok", "async.parity_ok",
+)
+SURFACE_RATIOS = (
+    ("speedup_x", "higher"),
+    ("async.inflight_over_steady_x", "lower"),
+)
+
+
+def _get(report: dict, dotted: str):
+    """(found, value) for a dotted key path into a nested report."""
+    node = report
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return False, None
+        node = node[part]
+    return True, node
+
+
+def check_report(
+    candidate: dict,
+    baseline: dict | None,
+    keys: tuple[str, ...],
+    flags: tuple[str, ...],
+    ratios: tuple[tuple[str, str], ...],
+    max_ratio: float,
+    label: str,
+) -> list[str]:
+    """All regressions found in one candidate report (empty = green)."""
+    failures: list[str] = []
+    for key in keys:
+        found, _ = _get(candidate, key)
+        if not found:
+            failures.append(f"{label}: missing required key {key!r}")
+    for key in flags:
+        found, value = _get(candidate, key)
+        if found and value is not True:
+            failures.append(f"{label}: correctness flag {key} is {value!r}")
+    if baseline is None:
+        return failures
+    for key, sense in ratios:
+        got_c, cand = _get(candidate, key)
+        got_b, base = _get(baseline, key)
+        if not (got_c and got_b):
+            continue  # schema check above already flags missing keys
+        try:
+            cand, base = float(cand), float(base)
+        except (TypeError, ValueError):
+            failures.append(f"{label}: {key} is not numeric "
+                            f"({cand!r} vs baseline {base!r})")
+            continue
+        if base <= 0:
+            continue  # degenerate baseline: nothing to ratio against
+        if sense == "higher" and cand < base / max_ratio:
+            failures.append(
+                f"{label}: {key} collapsed to {cand} "
+                f"(baseline {base}, floor {base / max_ratio:.3g})")
+        elif sense == "lower" and cand > base * max_ratio:
+            failures.append(
+                f"{label}: {key} grew to {cand} "
+                f"(baseline {base}, ceiling {base * max_ratio:.3g})")
+    return failures
+
+
+def check_sweep(candidate: dict, baseline: dict | None,
+                max_ratio: float) -> list[str]:
+    failures = check_report(candidate, baseline, SWEEP_KEYS, SWEEP_FLAGS,
+                            SWEEP_RATIOS, max_ratio, "sweep")
+    # the f64 numpy backend must match the scalar oracle bit-for-bit;
+    # f32 backends may legitimately break exact-cost ties differently
+    if candidate.get("backend") == "numpy" \
+            and candidate.get("parity_ok") is not True:
+        failures.append("sweep: parity_ok is not True on backend=numpy")
+    return failures
+
+
+def check_surface(candidate: dict, baseline: dict | None,
+                  max_ratio: float) -> list[str]:
+    return check_report(candidate, baseline, SURFACE_KEYS, SURFACE_FLAGS,
+                        SURFACE_RATIOS, max_ratio, "surface")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sweep", help="candidate sweep report (smoke run)")
+    ap.add_argument("--sweep-baseline",
+                    default=str(ROOT / "BENCH_sweep.json"),
+                    help="committed sweep baseline")
+    ap.add_argument("--surface", help="candidate surface report")
+    ap.add_argument("--surface-baseline",
+                    default=str(ROOT / "BENCH_surface.json"),
+                    help="committed surface baseline")
+    ap.add_argument("--max-ratio", type=float, default=3.0,
+                    help="tolerated ratio-metric drift vs baseline")
+    args = ap.parse_args(argv)
+    if not args.sweep and not args.surface:
+        ap.error("nothing to check: pass --sweep and/or --surface")
+    if args.max_ratio < 1.0:
+        ap.error(f"--max-ratio must be >= 1.0, got {args.max_ratio}")
+
+    failures: list[str] = []
+    checked = []
+    if args.sweep:
+        failures += check_sweep(_load(args.sweep),
+                                _load(args.sweep_baseline), args.max_ratio)
+        checked.append(f"sweep ({args.sweep} vs {args.sweep_baseline})")
+    if args.surface:
+        failures += check_surface(_load(args.surface),
+                                  _load(args.surface_baseline),
+                                  args.max_ratio)
+        checked.append(f"surface ({args.surface} vs {args.surface_baseline})")
+
+    if failures:
+        print("bench regression detected:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"bench OK: {'; '.join(checked)} within {args.max_ratio}x")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
