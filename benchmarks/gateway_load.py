@@ -1,0 +1,320 @@
+"""Fleet gateway load benchmark — >=10k concurrent sessions, one process.
+
+Drives :class:`repro.runtime.gateway.FleetGateway` through the serving
+story the gateway exists for, and certifies its contracts while timing
+them:
+
+* **registration** — bring up N sessions (O(1) surface-lookup initial
+  decisions: the whole per-size surface family is ONE batched solve at
+  gateway construction, so per-session cost is a lookup, not a solve);
+* **steady state** — waves of in-envelope observe events plus a token
+  loop subset, reporting handling p50/p99 from the gateway's own QoS
+  windows;
+* **churn** — drop/re-register a slice of the fleet mid-serving (each
+  departing session's adoption audit is checked before it goes);
+* **drift storm** — a slice of sessions reports ~100x nominal latency;
+  every drifted session requests a rebuild through its shared-rebuilder
+  handle and the requests coalesce into a handful of batched
+  ``build_surfaces`` calls on the REAL background executor
+  (``coalesce_x`` = requests per started build), then the fleet adopts
+  swap-on-ready;
+* **audits** — zero stale-generation adoptions across the whole run
+  (churned sessions included), exactly one shared rebuilder behind
+  every session handle, QoS percentiles exactly equal to the NumPy
+  oracle, and bounded-queue shedding is counted (on a dedicated
+  tiny-queue gateway so the main run never sheds).
+
+Usage:
+  PYTHONPATH=src python benchmarks/gateway_load.py              # 10k sessions
+  PYTHONPATH=src python benchmarks/gateway_load.py --smoke      # CI (~500)
+  ... [--sessions N] [--json BENCH_gateway.json]
+
+The JSON artifact (``BENCH_gateway.json``) is the machine-readable perf
+record CI gates with ``tools/check_bench.py --gateway``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.core.profiles import PROTOCOLS, paper_cost_model
+from repro.runtime.gateway import FleetGateway
+from repro.runtime.stats import percentile
+
+NBYTES = 5488
+GRID = {"pt_scale": (1.0, 4.0, 16.0), "loss_p": (0.0, 0.1)}
+FULL_SESSIONS = 10_000
+SMOKE_SESSIONS = 500
+STORM_FACTOR = 100.0  # one EWMA step lands at 20.8x nominal: off-surface
+STORM_FRACTION = 0.10
+CHURN_FRACTION = 0.10
+STEADY_WAVES = 3
+TOKEN_SESSIONS = 2_000
+TOKENS_PER_SESSION = 2
+ADOPTION_TIMEOUT_S = 120.0
+
+
+def _gateway(n_sessions: int, fleet_sizes: tuple[int, ...]) -> FleetGateway:
+    return FleetGateway(
+        paper_cost_model("mobilenet_v2", "esp_now"), dict(PROTOCOLS),
+        fleet_sizes, surface_grid=GRID,
+        max_pending=max(20_000, 2 * n_sessions))
+
+
+def _nominal(gw: FleetGateway, sid: str) -> float:
+    return gw.sessions[sid].meter.link.transmission_latency_s(NBYTES)
+
+
+def _registration_phase(gw: FleetGateway, n: int,
+                        fleet_sizes: tuple[int, ...]) -> dict:
+    samples = []
+    t0 = time.perf_counter()
+    for i in range(n):
+        t1 = time.perf_counter()
+        gw.register(f"s{i}", fleet_sizes[i % len(fleet_sizes)],
+                    bytes_per_token=NBYTES)
+        samples.append(time.perf_counter() - t1)
+    wall = time.perf_counter() - t0
+    return {
+        "sessions": n,
+        "wall_s": round(wall, 4),
+        "per_session_us": round(wall * 1e6 / n, 2),
+        "us_p50": round(percentile(samples, 50.0) * 1e6, 2),
+        "us_p99": round(percentile(samples, 99.0) * 1e6, 2),
+        "sessions_per_sec": round(n / wall, 1),
+    }
+
+
+def _steady_phase(gw: FleetGateway, sids: list[str]) -> dict:
+    t0 = time.perf_counter()
+    submitted = 0
+    for _ in range(STEADY_WAVES):
+        for sid in sids:
+            submitted += gw.submit_observe(sid, NBYTES, _nominal(gw, sid))
+        gw.pump()
+    wall = time.perf_counter() - t0
+    p50, p99 = gw.qos.fleet_percentiles()
+    return {
+        "events": submitted,
+        "waves": STEADY_WAVES,
+        "wall_s": round(wall, 4),
+        "events_per_sec": round(submitted / wall, 1),
+        "observe_us_p50": round(p50 * 1e6, 2),
+        "observe_us_p99": round(p99 * 1e6, 2),
+    }
+
+
+def _token_phase(gw: FleetGateway, sids: list[str]) -> dict:
+    subset = sids[:TOKEN_SESSIONS]
+    t0 = time.perf_counter()
+    for _ in range(TOKENS_PER_SESSION):
+        for sid in subset:
+            gw.submit_token(sid)
+        gw.pump()
+    wall = time.perf_counter() - t0
+    p50, p99 = (gw.token_window.percentiles((50.0, 99.0))
+                if len(gw.token_window) else (float("nan"),) * 2)
+    return {
+        "sessions": len(subset),
+        "tokens": len(subset) * TOKENS_PER_SESSION,
+        "wall_s": round(wall, 4),
+        "token_us_p50": round(p50 * 1e6, 2),
+        "token_us_p99": round(p99 * 1e6, 2),
+    }
+
+
+def _churn_phase(gw: FleetGateway, sids: list[str],
+                 fleet_sizes: tuple[int, ...]) -> tuple[dict, int]:
+    cycled = sids[:max(1, int(len(sids) * CHURN_FRACTION))]
+    violations = 0
+    t0 = time.perf_counter()
+    for i, sid in enumerate(cycled):
+        violations += gw.sessions[sid].adoption_violations()
+        gw.drop(sid)
+        gw.register(sid, fleet_sizes[i % len(fleet_sizes)],
+                    bytes_per_token=NBYTES)
+    wall = time.perf_counter() - t0
+    return {
+        "cycled": len(cycled),
+        "wall_s": round(wall, 4),
+        "per_cycle_us": round(wall * 1e6 / len(cycled), 2),
+    }, violations
+
+
+def _storm_phase(gw: FleetGateway, sids: list[str]) -> dict:
+    """Drift a slice of the fleet hard off-surface on the REAL executor
+    and drive rounds until every drifted session has adopted a rebuilt
+    surface (swap-on-ready); sessions stop storming once swapped, so the
+    round count reflects rebuild latency, not EWMA settling.
+
+    Note "sessions stop storming once swapped": each drifted session
+    keeps reporting STORM_FACTOR x nominal only until its first
+    adoption, so late rounds drive only the stragglers."""
+    drifted = sids[-max(50, int(len(sids) * STORM_FRACTION)):]
+    req0 = gw.rebuilder.requests
+    started0 = gw.rebuilder.builds_started
+    swaps0 = sum(gw.sessions[s].manager.surface_swaps for s in drifted)
+    t0 = time.perf_counter()
+    rounds = 0
+    remaining = list(drifted)
+    while remaining and time.perf_counter() - t0 < ADOPTION_TIMEOUT_S:
+        rounds += 1
+        for sid in remaining:
+            gw.submit_observe(sid, NBYTES, _nominal(gw, sid) * STORM_FACTOR)
+        gw.pump()
+        remaining = [s for s in remaining
+                     if gw.sessions[s].manager.surface_swaps == 0]
+        if remaining:
+            time.sleep(0.005)  # background build in flight
+    wall = time.perf_counter() - t0
+    requests = gw.rebuilder.requests - req0
+    started = gw.rebuilder.builds_started - started0
+    return {
+        "drifted_sessions": len(drifted),
+        "adopted_sessions": len(drifted) - len(remaining),
+        "rounds": rounds,
+        "adoption_wait_s": round(wall, 4),
+        "rebuild_requests": requests,
+        "builds_started": started,
+        "builds_completed": gw.rebuilder.builds_completed,
+        "coalesce_x": round(requests / max(1, started), 1),
+        # size-normalized coalescing (requests per started build per
+        # drifted session): comparable between smoke and full fleets; a
+        # collapse toward 1/drifted means per-session solves are back
+        "coalesce_per_drifted": round(
+            requests / max(1, started) / max(1, len(drifted)), 3),
+        "surface_swaps": sum(gw.sessions[s].manager.surface_swaps
+                             for s in drifted) - swaps0,
+    }
+
+
+def _shed_audit() -> dict:
+    """Bounded-queue backpressure on a dedicated tiny-queue gateway:
+    past ``max_pending`` submissions are refused AND counted."""
+    gw = FleetGateway(
+        paper_cost_model("mobilenet_v2", "esp_now"), dict(PROTOCOLS),
+        (2,), surface_grid=GRID, max_pending=8)
+    try:
+        gw.register("a", 2)
+        accepted = sum(gw.submit_observe("a", NBYTES, 1e-3)
+                       for _ in range(20))
+        processed = gw.pump()
+        shed = gw.qos.counters["events_shed"]
+        return {
+            "submitted": 20,
+            "accepted": accepted,
+            "processed": processed,
+            "shed_counted": shed,
+            "ok": accepted == 8 and processed == 8 and shed == 12,
+        }
+    finally:
+        gw.close()
+
+
+def run(smoke: bool = True, n_sessions: int | None = None) -> dict:
+    n = n_sessions or (SMOKE_SESSIONS if smoke else FULL_SESSIONS)
+    fleet_sizes = (2, 3) if smoke else (2, 3, 4)
+    gw = _gateway(n, fleet_sizes)
+    try:
+        report: dict = {
+            "benchmark": "gateway_load",
+            "mode": "smoke" if smoke else "full",
+            "n_sessions": n,
+            "fleet_sizes": list(fleet_sizes),
+        }
+        report["registration"] = _registration_phase(gw, n, fleet_sizes)
+        sids = list(gw.sessions)
+        report["steady"] = _steady_phase(gw, sids)
+        report["tokens"] = _token_phase(gw, sids)
+        report["churn"], churn_violations = _churn_phase(
+            gw, sids, fleet_sizes)
+        report["storm"] = _storm_phase(gw, sids)
+
+        snap = gw.snapshot()
+        oracle = np.asarray(gw.qos.global_window.values())
+        parity_ok = (
+            snap.p50_s == float(np.percentile(oracle, 50.0))
+            and snap.p99_s == float(np.percentile(oracle, 99.0)))
+        rebuilders = {id(s.handle._fanout.rebuilder)
+                      for s in gw.sessions.values()}
+        stale_violations = (snap.counters["stale_adoption_violations"]
+                           + churn_violations)
+        report["audit"] = {
+            "zero_stale_adoptions": stale_violations == 0,
+            "stale_adoption_violations": stale_violations,
+            "single_shared_rebuilder":
+                rebuilders == {id(gw.rebuilder)},
+            "percentile_parity_ok": parity_ok,
+            "shed": _shed_audit(),
+            "all_drifted_adopted":
+                report["storm"]["adopted_sessions"]
+                == report["storm"]["drifted_sessions"],
+        }
+        report["fleet"] = {
+            "n_sessions": snap.n_sessions,
+            "observes": snap.observes,
+            "events_processed": snap.counters.get("events_processed", 0),
+            "events_shed": snap.counters.get("events_shed", 0),
+            "surface_hits": snap.counters.get("surface_hits", 0),
+            "exact_fallbacks": snap.counters.get("exact_fallbacks", 0),
+            "stale_serves": snap.counters.get("stale_serves", 0),
+            "rebuild_errors": gw.rebuild_errors,
+        }
+        return report
+    finally:
+        gw.close()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help=f"CI-sized fleet ({SMOKE_SESSIONS} sessions)")
+    ap.add_argument("--sessions", type=int, default=None,
+                    help="override the session count")
+    ap.add_argument("--json", default="BENCH_gateway.json",
+                    help="path for the machine-readable result (empty to skip)")
+    args = ap.parse_args()
+
+    print("\n=== gateway_load: fleet serving gateway under churn + drift ===")
+    report = run(smoke=args.smoke, n_sessions=args.sessions)
+    reg, st, tok = (report["registration"], report["steady"],
+                    report["tokens"])
+    storm, audit = report["storm"], report["audit"]
+    print(f"registration: {reg['sessions']} sessions in {reg['wall_s']}s "
+          f"({reg['per_session_us']} us/session, p99 {reg['us_p99']} us)")
+    print(f"steady: {st['events']} observes at {st['events_per_sec']}/s; "
+          f"handling p50 {st['observe_us_p50']} us / "
+          f"p99 {st['observe_us_p99']} us")
+    print(f"tokens: {tok['tokens']} ticks, loop p50 {tok['token_us_p50']} us"
+          f" / p99 {tok['token_us_p99']} us")
+    print(f"churn: {report['churn']['cycled']} sessions cycled at "
+          f"{report['churn']['per_cycle_us']} us each")
+    print(f"storm: {storm['drifted_sessions']} sessions drifted -> "
+          f"{storm['rebuild_requests']} rebuild requests -> "
+          f"{storm['builds_started']} batched builds "
+          f"({storm['coalesce_x']}x coalescing), "
+          f"{storm['surface_swaps']} swaps in {storm['adoption_wait_s']}s")
+    print(f"audit: zero stale adoptions {audit['zero_stale_adoptions']}, "
+          f"single shared rebuilder {audit['single_shared_rebuilder']}, "
+          f"percentile parity {audit['percentile_parity_ok']}, "
+          f"shed counted {audit['shed']['ok']}")
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(report, f, indent=2)
+            f.write("\n")
+        print(f"wrote {args.json}")
+
+    assert audit["zero_stale_adoptions"], "stale generation adopted"
+    assert audit["single_shared_rebuilder"], "rebuilder not shared"
+    assert audit["percentile_parity_ok"], "QoS percentiles != NumPy oracle"
+    assert audit["shed"]["ok"], "backpressure shedding not counted"
+    assert audit["all_drifted_adopted"], "drift storm adoption incomplete"
+
+
+if __name__ == "__main__":
+    main()

@@ -34,6 +34,7 @@ BENCHMARKS = (
     "planner_tpu",
     "sweep_grid",
     "surface_replan",
+    "gateway",
     "roofline",
 )
 
@@ -119,6 +120,28 @@ def main(argv: list[str] | None = None) -> None:
               f"parity={surf_report['parity_ok']}; async in-flight "
               f"{a['inflight_over_steady_x']}x steady-state, "
               f"async parity={a['parity_ok']} ===")
+    if "gateway" in selected:
+        # fleet gateway: one summary row (observe handling p99 + storm
+        # coalescing + the zero-stale-adoption / shared-rebuilder audits)
+        from benchmarks import gateway_load
+
+        gw_report = gateway_load.run(smoke=True)
+        st, storm, audit = (gw_report["steady"], gw_report["storm"],
+                            gw_report["audit"])
+        gw_ok = (audit["zero_stale_adoptions"]
+                 and audit["single_shared_rebuilder"]
+                 and audit["percentile_parity_ok"])
+        csv_lines.append(
+            f"gateway[0],{st['observe_us_p50']},"
+            f"p99us={st['observe_us_p99']}"
+            f"_coalesce={storm['coalesce_x']}x"
+            f"_swaps={storm['surface_swaps']}"
+            f"_audit={gw_ok}")
+        print(f"\n=== gateway (smoke): {gw_report['n_sessions']} sessions, "
+              f"observe p99 {st['observe_us_p99']} us, storm "
+              f"{storm['rebuild_requests']} requests -> "
+              f"{storm['builds_started']} builds "
+              f"({storm['coalesce_x']}x), audits={gw_ok} ===")
     if "roofline" in selected:
         try:
             timed("roofline",

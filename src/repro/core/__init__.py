@@ -113,6 +113,8 @@ from repro.core.solvers import (  # noqa: F401
 # which imports it).
 from repro.core.async_replan import (  # noqa: F401
     ManualExecutor,
+    RebuildFanout,
+    RebuildHandle,
     RebuildRequest,
     SurfaceRebuilder,
     recentered_axes,

@@ -172,14 +172,32 @@ class AdaptiveSplitManager:
     # docs/architecture.md)
     surface_grid: dict | None = None
     # async out-of-envelope handling: False/None (sync re-solve), True
-    # (background thread), an executor with submit(), or a shared
-    # SurfaceRebuilder — see the class docstring
+    # (background thread), an executor with submit(), a shared
+    # SurfaceRebuilder, or any rebuilder-like object with
+    # request()/poll() (e.g. a RebuildHandle view of a shared fanout) —
+    # see the class docstring
     async_rebuild: object | bool | None = None
     # staleness window for the in-flight fallback: the exact re-solve
     # repeats only when the estimate moved more than this since the
     # last one (relative on packet time, absolute on loss)
     stale_rtol: float = 0.10
     stale_loss_tol: float = 0.02
+    # how the FIRST decision is made: "resolve" (exact batched solve —
+    # the certified default) or "surface" (O(1) lookup on the prebuilt
+    # surface at the base estimator state; falls back to the exact
+    # solve when no surface hit exists). "surface" is what lets a
+    # gateway register thousands of sessions without one full solve
+    # per registration.
+    initial: str = "resolve"
+    # out-of-envelope policy when a rebuilder is attached: "exact"
+    # (bounded inline re-solves, the PR 5 behavior) or "stale" (NEVER
+    # re-solve inline once a decision exists — request a rebuild and
+    # keep serving the stale decision until the swap; the only inline
+    # solve left is the bootstrap when no decision exists yet)
+    offsurface_fallback: str = "exact"
+    # injected link-independent device-local cost tensor (shared across
+    # a fleet of same-size managers); None = build lazily per manager
+    local_tensor: object | None = None
     history: list[PlanDecision] = field(default_factory=list)
 
     def __post_init__(self):
@@ -205,10 +223,16 @@ class AdaptiveSplitManager:
                 # batched twin to precompute with: keep the legacy
                 # re-solve-per-observe path instead of refusing to start
                 self.surface = None
+        if self.initial not in ("resolve", "surface"):
+            raise ValueError(f"initial must be 'resolve' or 'surface', "
+                             f"got {self.initial!r}")
+        if self.offsurface_fallback not in ("exact", "stale"):
+            raise ValueError(f"offsurface_fallback must be 'exact' or "
+                             f"'stale', got {self.offsurface_fallback!r}")
         self.rebuild_requests = 0
         self.surface_swaps = 0
         self.stale_serves = 0
-        self._rebuilder: SurfaceRebuilder | None = None
+        self._rebuilder = None
         self._fallback_state: dict[str, tuple[float, float]] | None = None
         if self.async_rebuild:
             if self.surface is None:
@@ -216,7 +240,7 @@ class AdaptiveSplitManager:
                     f"async_rebuild needs a degradation surface to "
                     f"revalidate; solver {self.solver!r} has no batched "
                     f"twin (or surface=None was forced)")
-            if isinstance(self.async_rebuild, SurfaceRebuilder):
+            if self._is_rebuilder_like(self.async_rebuild):
                 self._rebuilder = self.async_rebuild
             else:
                 self._rebuilder = SurfaceRebuilder(
@@ -227,7 +251,27 @@ class AdaptiveSplitManager:
                     **(self.surface_grid or {}),
                 )
         self.current: PlanDecision | None = None
-        self._replan("initial")
+        if self.initial == "surface" \
+                and isinstance(self.surface, DegradationSurface):
+            states = {name: (est.packet_time_estimate, est.loss_estimate)
+                      for name, est in self.estimators.items()}
+            hit = self.surface.best_lookup(states)
+            if hit is not None:
+                self.surface_hits += 1
+                self._adopt(hit.protocol, hit.splits, hit.chunk_bytes,
+                            hit.latency_s, "initial [surface]")
+        if self.current is None:
+            self._replan("initial")
+
+    @staticmethod
+    def _is_rebuilder_like(obj: object) -> bool:
+        """Anything speaking the rebuilder protocol — ``request(n,
+        states)`` + ``poll(n)`` — is wired directly (a shared
+        :class:`SurfaceRebuilder`, or a
+        :class:`~repro.core.async_replan.RebuildHandle` view of a shared
+        fanout). Executors only have ``submit``."""
+        return callable(getattr(obj, "request", None)) \
+            and callable(getattr(obj, "poll", None))
 
     # -- runtime feedback ------------------------------------------------------
     def observe(self, protocol: str, nbytes: int, latency_s: float,
@@ -291,9 +335,20 @@ class AdaptiveSplitManager:
             if moved:
                 self.rebuild_requests += 1
                 self._rebuilder.request(self.n_devices, states)
-            elif self.current is not None:
-                self.stale_serves += 1
-                return
+            if self.offsurface_fallback == "stale":
+                # never re-solve inline once a decision exists: the
+                # drift was requested above (debounced by the staleness
+                # window) and the stale decision keeps serving until
+                # the rebuilt surface swaps in
+                if moved:
+                    self._fallback_state = dict(states)
+                if self.current is not None:
+                    self.stale_serves += 1
+                    return
+            elif not moved:
+                if self.current is not None:
+                    self.stale_serves += 1
+                    return
         self.exact_fallbacks += 1
         self._observe_resolve(reason_suffix=" [envelope re-solve]")
         self._fallback_state = dict(states)
@@ -330,20 +385,35 @@ class AdaptiveSplitManager:
             self._fallback_state = None
 
     @property
-    def rebuilder(self) -> SurfaceRebuilder | None:
+    def rebuilder(self):
         """The async rebuilder in use (None in synchronous mode). For a
-        fleet this is the SHARED rebuilder — shut it down once via
-        ``managers[n].rebuilder.shutdown()`` when the fleet retires."""
+        fleet this is the SHARED rebuilder (or a per-session
+        :class:`~repro.core.async_replan.RebuildHandle` view of it) —
+        shut the shared one down once when the fleet retires."""
         return self._rebuilder
+
+    def counters(self) -> dict[str, int]:
+        """Snapshot of the adaptive-path counters (plain ints — safe to
+        aggregate across a fleet)."""
+        return {
+            "surface_hits": self.surface_hits,
+            "exact_fallbacks": self.exact_fallbacks,
+            "rebuild_requests": self.rebuild_requests,
+            "surface_swaps": self.surface_swaps,
+            "stale_serves": self.stale_serves,
+            "replans": len(self.history),
+        }
 
     def close(self):
         """Release the background rebuild executor this manager created
         (``async_rebuild=True`` or an injected executor). A SHARED
-        rebuilder (passed in as a ``SurfaceRebuilder``) is left running
-        — its owner closes it. Safe to call repeatedly; the manager
-        keeps serving from its current surface afterwards."""
+        rebuilder-like object (a ``SurfaceRebuilder`` or a
+        ``RebuildHandle``) is left running — its owner closes it
+        (``RebuildHandle.shutdown`` is a no-op anyway). Safe to call
+        repeatedly; the manager keeps serving from its current surface
+        afterwards."""
         if self._rebuilder is not None \
-                and not isinstance(self.async_rebuild, SurfaceRebuilder):
+                and not self._is_rebuilder_like(self.async_rebuild):
             self._rebuilder.shutdown()
 
     def _observe_resolve(self, reason_suffix: str = ""):
@@ -369,7 +439,11 @@ class AdaptiveSplitManager:
 
     def _ensure_local_tensor(self) -> np.ndarray:
         if self._local_tensor is None:
-            self._local_tensor = self.cost_model.local_cost_tensor(self.n_devices)
+            if self.local_tensor is not None:  # fleet-shared injection
+                self._local_tensor = self.local_tensor
+            else:
+                self._local_tensor = \
+                    self.cost_model.local_cost_tensor(self.n_devices)
         return self._local_tensor
 
     def _batched_plans(self, links, solver: str) -> list[SplitPlan]:

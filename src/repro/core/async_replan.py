@@ -65,6 +65,8 @@ from repro.core.surface import (
 
 __all__ = [
     "ManualExecutor",
+    "RebuildFanout",
+    "RebuildHandle",
     "RebuildRequest",
     "SurfaceRebuilder",
     "recentered_axes",
@@ -240,6 +242,7 @@ class SurfaceRebuilder:
         pt_pad: Sequence[float] = (0.25, 0.5, 1.0, 2.0, 4.0),
         loss_pad: float = 2.0,
         executor=None,
+        max_queued_states: int = 8,
     ):
         self.cost_model = cost_model
         self.protocols = dict(protocols)
@@ -255,7 +258,15 @@ class SurfaceRebuilder:
         self._own_executor = False
         self._closed = False
         self._lock = threading.Lock()
-        self._queued: dict[int, dict[str, tuple[float, float]]] = {}
+        self.max_queued_states = max_queued_states
+        # per fleet size: a bounded LIST of drifted state maps (one per
+        # distinct requester this cycle) — a single merged dict lost all
+        # but the last requester's target, so a fleet of sessions drifting
+        # to different points rebuilt a surface centered on only one of
+        # them. Overflow past max_queued_states merges into the last
+        # entry by per-protocol max (the envelope-dominant direction),
+        # bounding the rebuilt grid size.
+        self._queued: dict[int, list[dict[str, tuple[float, float]]]] = {}
         self._inflight: RebuildRequest | None = None
         self._results: dict[int, tuple[int, DegradationSurface]] = {}
         self._adopted_gen: dict[int, int] = {}
@@ -287,10 +298,16 @@ class SurfaceRebuilder:
                 return "inflight"
             pending = self._queued.get(n_devices)
             if pending is not None:
-                pending.update(states)
+                if len(pending) < self.max_queued_states:
+                    pending.append(dict(states))
+                else:  # bounded: fold into the last entry, per-protocol max
+                    last = pending[-1]
+                    for name, (pt, lp) in states.items():
+                        pt0, lp0 = last.get(name, (pt, lp))
+                        last[name] = (max(pt0, pt), max(lp0, lp))
                 self.requests_coalesced += 1
                 return "coalesced"
-            self._queued[n_devices] = dict(states)
+            self._queued[n_devices] = [dict(states)]
             self._maybe_actionable = True
             return "queued"
 
@@ -299,6 +316,16 @@ class SurfaceRebuilder:
         completed surface for ``n_devices`` exactly once. The common
         no-op path is a single attribute read — safe on every
         ``observe()``."""
+        got = self.poll_versioned(n_devices)
+        return None if got is None else got[1]
+
+    def poll_versioned(
+        self, n_devices: int,
+    ) -> tuple[int, DegradationSurface] | None:
+        """:meth:`poll`, but the handover is ``(generation, surface)`` so
+        a redistributing consumer (:class:`RebuildFanout`) can order
+        adoptions downstream. Same exactly-once / newest-only
+        semantics."""
         if not self._maybe_actionable:
             return None
         with self._lock:
@@ -321,7 +348,7 @@ class SurfaceRebuilder:
                 del self._results[n_devices]
                 if gen > self._adopted_gen.get(n_devices, -1):
                     self._adopted_gen[n_devices] = gen
-                    out = surf
+                    out = (gen, surf)
             self._refresh_actionable_locked()
             return out
 
@@ -374,7 +401,8 @@ class SurfaceRebuilder:
             return
         sizes = tuple(sorted(self._queued))
         pts, losses = recentered_axes(
-            self.protocols, tuple(self._queued.values()),
+            self.protocols,
+            tuple(st for lst in self._queued.values() for st in lst),
             pt_scale=self.pt_scale, loss_p=self.loss_p,
             pt_pad=self.pt_pad, loss_pad=self.loss_pad)
         self._queued.clear()
@@ -415,3 +443,106 @@ class SurfaceRebuilder:
             or (not self._closed and self._inflight is None
                 and bool(self._queued))
         )
+
+
+class RebuildFanout:
+    """Multiplexes ONE :class:`SurfaceRebuilder` across MANY consumers.
+
+    ``SurfaceRebuilder.poll`` hands each completed surface out exactly
+    once per fleet size — correct for one manager per size, but a
+    serving gateway runs THOUSANDS of sessions sharing one rebuilder,
+    and every session must see every adopted surface. The fanout is the
+    rebuilder's sole consumer (via :meth:`SurfaceRebuilder.poll_versioned`)
+    and redistributes: completed builds land in a shared
+    ``{n_devices: (generation, surface)}`` map, and each
+    :meth:`view` hands out a :class:`RebuildHandle` that adopts from
+    that map independently — newest-generation-only per consumer, so a
+    stale build can never replace a newer one for ANY session (the PR 5
+    generation/swap semantics, per handle).
+
+    ``seq`` bumps whenever the shared map changes; handles use it for a
+    lock-free "anything new since I looked?" precheck, keeping the
+    per-session steady-state poll at two attribute reads."""
+
+    def __init__(self, rebuilder: SurfaceRebuilder):
+        self.rebuilder = rebuilder
+        self._lock = threading.Lock()
+        self._latest: dict[int, tuple[int, DegradationSurface]] = {}
+        self.seq = 0
+
+    def refresh(self, n_devices: int) -> bool:
+        """Drain the rebuilder's exactly-once handover for ``n_devices``
+        into the shared map (launching any queued build, per the
+        ``poll`` contract). True if the map changed."""
+        got = self.rebuilder.poll_versioned(n_devices)
+        if got is None:
+            return False
+        gen, surf = got
+        with self._lock:
+            cur = self._latest.get(n_devices)
+            if cur is not None and cur[0] >= gen:
+                return False
+            self._latest[n_devices] = (gen, surf)
+            self.seq += 1
+        return True
+
+    def latest(self, n_devices: int) -> tuple[int, DegradationSurface] | None:
+        """Newest completed (generation, surface) for ``n_devices``."""
+        return self._latest.get(n_devices)
+
+    def view(self) -> "RebuildHandle":
+        """A new per-consumer adoption view (one per session)."""
+        return RebuildHandle(self)
+
+    def shutdown(self) -> None:
+        """Shut the underlying rebuilder down (terminal)."""
+        self.rebuilder.shutdown()
+
+
+class RebuildHandle:
+    """One consumer's view of a shared :class:`RebuildFanout`.
+
+    Implements the same duck-typed contract
+    :class:`~repro.core.adaptive.AdaptiveSplitManager` drives its
+    rebuilder with — ``request(n, states)`` / ``poll(n)`` /
+    ``shutdown()`` — so a session manager wires to a handle exactly as
+    it would to a private :class:`SurfaceRebuilder`:
+
+    * ``request`` forwards to the shared rebuilder (where the whole
+      fleet's drift coalesces into one multi-size build per cycle);
+    * ``poll`` adopts from the fanout's shared map at most once per
+      generation per fleet size (``adoptions`` records every
+      ``(n_devices, generation)`` handover, strictly increasing in
+      generation per size — the zero-stale-adoption audit trail);
+    * ``shutdown`` is a no-op: the fanout's owner closes the shared
+      rebuilder once, not once per session."""
+
+    def __init__(self, fanout: RebuildFanout):
+        self._fanout = fanout
+        self._seen_seq = -1
+        self._adopted_gen: dict[int, int] = {}
+        self.adoptions: list[tuple[int, int]] = []
+
+    def request(self, n_devices: int, states: _StateMap) -> str:
+        return self._fanout.rebuilder.request(n_devices, states)
+
+    def poll(self, n_devices: int) -> DegradationSurface | None:
+        fo = self._fanout
+        # lock-free steady state: nothing actionable on the rebuilder
+        # AND nothing new in the shared map since this handle looked
+        if not fo.rebuilder._maybe_actionable and fo.seq == self._seen_seq:
+            return None
+        fo.refresh(n_devices)
+        self._seen_seq = fo.seq
+        got = fo.latest(n_devices)
+        if got is None:
+            return None
+        gen, surf = got
+        if gen <= self._adopted_gen.get(n_devices, -1):
+            return None
+        self._adopted_gen[n_devices] = gen
+        self.adoptions.append((n_devices, gen))
+        return surf
+
+    def shutdown(self) -> None:
+        """No-op — see the class docstring."""

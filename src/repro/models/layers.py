@@ -301,6 +301,34 @@ def init_attention(rng, cfg: ModelConfig) -> Params:
     }
 
 
+def _cache_writer(pos_ids: jax.Array, S: int, s_max: int):
+    """KV-cache update function for a step writing ``S`` new positions.
+
+    Decode steps (``S == 1``) write PER ROW: batch row ``b`` lands at
+    ``pos_ids[b, 0]`` via a one-hot masked select, so slots in a batched
+    server can sit at different sequence positions — and a negative
+    position (idle / non-admitted slot) matches no cache row at all, i.e.
+    writes nothing. The previous uniform ``dynamic_update_slice`` at
+    ``pos_ids[0, 0]`` stamped every row at slot 0's position, which is
+    how a mid-decode admission clobbered other slots' caches.
+
+    Multi-token steps (prefill, ``S > 1``) keep the uniform-offset slice
+    write: all rows advance together from ``pos_ids[0, 0]``."""
+    if S == 1:
+        hit = jnp.arange(s_max, dtype=jnp.int32)[None, :] == pos_ids[:, :1]
+
+        def upd(c, u):
+            mask = hit.reshape(hit.shape + (1,) * (u.ndim - 2))
+            return jnp.where(mask, u.astype(c.dtype), c)
+    else:
+        offset = pos_ids[0, 0]
+
+        def upd(c, u):
+            return jax.lax.dynamic_update_slice_in_dim(
+                c, u.astype(c.dtype), offset, axis=1)
+    return upd
+
+
 def apply_attention(cfg: ModelConfig, p: Params, x: jax.Array,
                     positions: jax.Array, cache: Params | None = None
                     ) -> tuple[jax.Array, Params | None]:
@@ -325,8 +353,7 @@ def apply_attention(cfg: ModelConfig, p: Params, x: jax.Array,
     pos_ids = positions[0] if positions.ndim == 3 else positions
 
     if cache is not None:
-        # insert new k/v at the (uniform) write offset = pos_ids[:, 0]
-        offset = pos_ids[0, 0]
+        upd = _cache_writer(pos_ids, S, cache["k"].shape[1])
         if "k_scale" in cache:
             # quantized KV cache: symmetric int8 per (token, head)
             def q8(t):
@@ -338,8 +365,6 @@ def apply_attention(cfg: ModelConfig, p: Params, x: jax.Array,
 
             kq, ks = q8(k)
             vq, vs = q8(v)
-            upd = lambda c, u: jax.lax.dynamic_update_slice_in_dim(  # noqa: E731
-                c, u.astype(c.dtype), offset, axis=1)
             new_cache = {"k": upd(cache["k"], kq), "v": upd(cache["v"], vq),
                          "k_scale": upd(cache["k_scale"], ks),
                          "v_scale": upd(cache["v_scale"], vs)}
@@ -348,10 +373,8 @@ def apply_attention(cfg: ModelConfig, p: Params, x: jax.Array,
             cv = (new_cache["v"].astype(x.dtype)
                   * new_cache["v_scale"][..., None].astype(x.dtype))
         else:
-            ck = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k.astype(cache["k"].dtype), offset, axis=1)
-            cv = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v.astype(cache["v"].dtype), offset, axis=1)
+            ck = upd(cache["k"], k)
+            cv = upd(cache["v"], v)
             new_cache = {"k": ck, "v": cv}
         kv_positions = jnp.arange(ck.shape[1], dtype=jnp.int32)
         out = attention_core(cfg, q, ck, cv, pos_ids, kv_positions)
@@ -412,11 +435,9 @@ def apply_mla(cfg: ModelConfig, p: Params, x: jax.Array, positions: jax.Array,
     k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
 
     if cache is not None:
-        offset = pos_ids[0, 0]
-        c_kv = jax.lax.dynamic_update_slice_in_dim(
-            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), offset, axis=1)
-        k_rope = jax.lax.dynamic_update_slice_in_dim(
-            cache["k_rope"], k_rope.astype(cache["k_rope"].dtype), offset, axis=1)
+        upd = _cache_writer(pos_ids, S, cache["c_kv"].shape[1])
+        c_kv = upd(cache["c_kv"], c_kv)
+        k_rope = upd(cache["k_rope"], k_rope)
         new_cache = {"c_kv": c_kv, "k_rope": k_rope}
     else:
         new_cache = None

@@ -96,32 +96,49 @@ class SplitLatencyMeter:
     protocol: str | None = None
     replans: int = 0
 
+    def observe_hop(self, nbytes: int, latency_s: float,
+                    retries: int = 0) -> bool:
+        """Feed one externally measured hop (a device-reported transfer)
+        to the manager through the same adoption-following logic the
+        token loop uses: if the observation triggers a replan the meter
+        swaps in the re-materialized plan, and on a cross-protocol
+        adoption follows the new protocol's pricing link. Returns True
+        when a replan was adopted. No-op without a manager/protocol."""
+        if self.manager is None or self.protocol is None:
+            return False
+        decisions = len(self.manager.history)
+        self.manager.observe(self.protocol, nbytes, latency_s, retries)
+        if len(self.manager.history) == decisions:
+            return False
+        self.plan = self.manager.current_plan()
+        adopted = self.manager.current
+        if adopted is not None and adopted.protocol != self.protocol:
+            # cross-protocol replan: hops now ride the NEW protocol's
+            # link (at the adopted chunk size) — pricing them on the
+            # abandoned link kept feeding the old protocol's estimator
+            # forever
+            self.protocol = adopted.protocol
+            base = self.manager.protocols[adopted.protocol]
+            self.link = replace(base, mtu_bytes=adopted.chunk_bytes)
+        self.replans += 1
+        return True
+
     def on_token(self):
         if self.plan is None or self.link is None:
             return
-        for _seg in self.plan.segments[:-1]:
-            nbytes = self.bytes_per_token or _seg.tx_bytes
+        # while-loop (not for) so a mid-token replan adoption reprices the
+        # REMAINING hops on the newly adopted plan/link instead of
+        # dropping them: the old `break` undercounted hop_seconds/hops on
+        # every multi-segment replan step
+        hop = 0
+        while self.plan is not None and hop < len(self.plan.segments) - 1:
+            seg = self.plan.segments[hop]
+            hop += 1
+            nbytes = self.bytes_per_token or seg.tx_bytes
             hop_s = self.link.transmission_latency_s(nbytes)
             self.hop_seconds += hop_s
             self.hops += 1
-            if self.manager is not None and self.protocol is not None:
-                decisions = len(self.manager.history)
-                self.manager.observe(self.protocol, nbytes, hop_s)
-                if len(self.manager.history) != decisions:
-                    self.plan = self.manager.current_plan()
-                    adopted = self.manager.current
-                    if adopted is not None \
-                            and adopted.protocol != self.protocol:
-                        # cross-protocol replan: hops now ride the NEW
-                        # protocol's link (at the adopted chunk size) —
-                        # pricing them on the abandoned link kept feeding
-                        # the old protocol's estimator forever
-                        self.protocol = adopted.protocol
-                        base = self.manager.protocols[adopted.protocol]
-                        self.link = replace(
-                            base, mtu_bytes=adopted.chunk_bytes)
-                    self.replans += 1
-                    break  # the remaining hops belonged to the old plan
+            self.observe_hop(nbytes, hop_s)
 
 
 class Server:
@@ -153,16 +170,30 @@ class Server:
 
     def _prefill(self, slot: int, req: Request):
         """Feed the prompt token-by-token through the decode path (keeps a
-        single compiled step; a production server would batch-prefill)."""
+        single compiled step; a production server would batch-prefill).
+
+        Only the admitted slot's rows are written: every other slot rides
+        at position -1, which the per-row cache writer treats as
+        "write nothing". The old path broadcast each prompt token to ALL
+        slots at positions 0..P-1, corrupting in-flight generations on
+        every mid-decode admission."""
+        tokens = np.zeros(self.slots, dtype=np.int32)
+        positions = np.full(self.slots, -1, dtype=np.int32)
         for t, tok in enumerate(req.prompt):
-            inp = self._token_inputs(np.full((self.slots,), tok, np.int32), t)
+            tokens[slot] = tok
+            positions[slot] = t
+            inp = self._token_inputs(tokens, positions)
             logits, self.cache = self._decode(self.params, inp, self.cache)
         self.lengths[slot] = len(req.prompt)
         self.active[slot] = req
 
-    def _token_inputs(self, tokens_per_slot: np.ndarray, index: int) -> dict:
+    def _token_inputs(self, tokens_per_slot: np.ndarray,
+                      positions_per_slot: np.ndarray) -> dict:
         toks = jnp.asarray(tokens_per_slot, dtype=jnp.int32)[:, None]
-        return {"tokens": toks, "cur_index": jnp.int32(index)}
+        pos = jnp.asarray(positions_per_slot, dtype=jnp.int32)[:, None]
+        if self.cfg.mrope_sections is not None:
+            pos = jnp.broadcast_to(pos[None], (3, *pos.shape))
+        return {"tokens": toks, "positions": pos}
 
     def step(self) -> list[tuple[int, int]]:
         """One server tick: admit, decode one token for all active slots,
@@ -171,16 +202,20 @@ class Server:
             self._prefill(slot, self.queue.pop(0))
         if not self.active:
             return []
-        # batched decode at the max current index (slots are per-request
-        # positions; padded slots decode garbage that is ignored)
+        # batched decode at PER-SLOT positions: slot s reads/writes its
+        # cache at its own lengths[s]; idle slots ride at -1 (no cache
+        # write, fully masked attention). The old single global
+        # cur = max(lengths) wrote shorter slots' KV at the wrong rows
+        # after staggered admissions.
         emitted = []
-        cur = int(max(self.lengths[s] for s in self.active))
         tokens = np.zeros(self.slots, dtype=np.int32)
+        positions = np.full(self.slots, -1, dtype=np.int32)
         for s, req in self.active.items():
             last = req.generated[-1] if req.generated else int(req.prompt[-1])
             tokens[s] = last
+            positions[s] = self.lengths[s]
         logits, self.cache = self._decode(
-            self.params, self._token_inputs(tokens, cur), self.cache)
+            self.params, self._token_inputs(tokens, positions), self.cache)
         nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
         if nxt.ndim > 1:  # multi-codebook heads: take stream 0
             nxt = nxt[..., 0]

@@ -475,3 +475,133 @@ class TestObserveStateSingleSourcing:
         # the state the lookup used IS the state the re-solve prices
         assert est.current_profile().loss_p == pytest.approx(
             est.loss_estimate)
+
+
+class TestPollVersioned:
+    def _rebuilt(self, ex):
+        """A rebuilder with one completed build for size 2."""
+        rb = SurfaceRebuilder(paper_cost_model("mobilenet_v2", "esp_now"),
+                              dict(PROTOCOLS), executor=ex, **GRID)
+        drift = {"esp_now": (20 * ESP_NOW.packet_time_s(), 0.0)}
+        rb.request(2, drift)
+        assert rb.poll_versioned(2) is None  # launches
+        ex.run_all()
+        return rb
+
+    def test_handover_carries_generation_exactly_once(self):
+        ex = ManualExecutor()
+        rb = self._rebuilt(ex)
+        got = rb.poll_versioned(2)
+        assert got is not None
+        gen, surf = got
+        assert gen == 1
+        assert isinstance(surf, DegradationSurface)
+        assert rb.poll_versioned(2) is None  # exactly once
+        assert rb.poll(2) is None
+
+    def test_legacy_poll_unwraps_the_same_handover(self):
+        ex = ManualExecutor()
+        rb = self._rebuilt(ex)
+        surf = rb.poll(2)
+        assert isinstance(surf, DegradationSurface)
+        assert rb.poll_versioned(2) is None
+
+
+class TestRebuildFanout:
+    def _fanout_with_build(self):
+        from repro.core.async_replan import RebuildFanout
+
+        ex = ManualExecutor()
+        rb = SurfaceRebuilder(paper_cost_model("mobilenet_v2", "esp_now"),
+                              dict(PROTOCOLS), executor=ex, **GRID)
+        fo = RebuildFanout(rb)
+        drift = {"esp_now": (20 * ESP_NOW.packet_time_s(), 0.0)}
+        rb.request(2, drift)
+        assert fo.refresh(2) is False  # launches; nothing completed yet
+        ex.run_all()
+        return fo, ex, drift
+
+    def test_one_build_redistributes_to_every_handle(self):
+        fo, ex, _ = self._fanout_with_build()
+        handles = [fo.view() for _ in range(5)]
+        surfs = [h.poll(2) for h in handles]
+        assert all(s is not None for s in surfs)
+        assert len({id(s) for s in surfs}) == 1  # the SAME surface object
+        assert [h.adoptions for h in handles] == [[(2, 1)]] * 5
+        # steady state after adoption: every handle answers None
+        assert all(h.poll(2) is None for h in handles)
+
+    def test_refresh_publishes_then_is_idempotent(self):
+        fo, ex, _ = self._fanout_with_build()
+        assert fo.refresh(2) is True
+        assert fo.latest(2)[0] == 1
+        assert fo.refresh(2) is False  # drained: exactly-once upstream
+        assert fo.seq == 1
+
+    def test_refresh_rejects_older_generation(self):
+        fo, ex, drift = self._fanout_with_build()
+        assert fo.refresh(2) is True
+        newer = fo.latest(2)
+        # force an out-of-order completion into the upstream handover
+        fo.rebuilder._results[2] = (0, newer[1])
+        fo.rebuilder._maybe_actionable = True
+        assert fo.refresh(2) is False  # gen 0 <= adopted gen 1 upstream
+        assert fo.latest(2) == newer
+
+    def test_handle_never_readopts_older_generation(self):
+        fo, ex, _ = self._fanout_with_build()
+        h = fo.view()
+        assert h.poll(2) is not None  # adopted gen 1
+        stale = fo.latest(2)[1]
+        fo._latest[2] = (0, stale)  # regress the shared map by force
+        fo.seq += 1
+        assert h.poll(2) is None  # refused: gen 0 <= adopted gen 1
+        assert h.adoptions == [(2, 1)]
+        # a FRESH handle does adopt from the (regressed) map — per-handle
+        # monotonicity, not global erasure
+        assert fo.view().poll(2) is stale
+
+    def test_handle_request_reaches_shared_rebuilder(self):
+        fo, ex, drift = self._fanout_with_build()
+        h = fo.view()
+        assert h.request(3, drift) == "queued"
+        assert h.poll(3) is None  # launches the size-3 build
+        assert fo.rebuilder.builds_started == 2
+        ex.run_all()
+        assert h.poll(3) is not None
+        assert h.shutdown() is None  # no-op: shared rebuilder stays up
+        assert fo.rebuilder._closed is False
+
+
+class TestBoundedQueuedStates:
+    def test_overflow_folds_into_last_entry_by_max(self):
+        rb = SurfaceRebuilder(paper_cost_model("mobilenet_v2", "esp_now"),
+                              dict(PROTOCOLS), executor=ManualExecutor(),
+                              max_queued_states=2, **GRID)
+        pt = ESP_NOW.packet_time_s()
+        rb.request(2, {"esp_now": (10 * pt, 0.01)})
+        rb.request(2, {"esp_now": (20 * pt, 0.02)})
+        # past the cap: folded into the LAST entry, per-protocol max
+        assert rb.request(2, {"esp_now": (15 * pt, 0.05)}) == "coalesced"
+        assert rb.request(2, {"esp_now": (40 * pt, 0.03)}) == "coalesced"
+        assert len(rb._queued[2]) == 2
+        assert rb._queued[2][0] == {"esp_now": (10 * pt, 0.01)}
+        folded = rb._queued[2][1]["esp_now"]
+        assert folded == (40 * pt, 0.05)  # max over the folded requests
+
+    def test_distinct_requesters_all_recenter_the_build(self):
+        """Regression: a single merged dict kept only the LAST
+        requester's target — sessions drifting to different points got a
+        surface centered on one of them. Every under-cap requester's
+        state must reach recentered_axes."""
+        ex = ManualExecutor()
+        rb = SurfaceRebuilder(paper_cost_model("mobilenet_v2", "esp_now"),
+                              dict(PROTOCOLS), executor=ex, **GRID)
+        pt = ESP_NOW.packet_time_s()
+        rb.request(2, {"esp_now": (10 * pt, 0.0)})
+        rb.request(2, {"esp_now": (30 * pt, 0.0)})
+        rb.poll(2)  # launch
+        req = rb.last_request
+        # both requesters' ratios survive (x the 1.0 pad factor)
+        assert any(abs(s - 10.0) < 1e-9 for s in req.pt_scale)
+        assert any(abs(s - 30.0) < 1e-9 for s in req.pt_scale)

@@ -62,6 +62,19 @@ def good_surface():
     return r
 
 
+def good_gateway():
+    r = {}
+    for key in CB.GATEWAY_KEYS:
+        _set(r, key, 1.0)
+    for key in CB.GATEWAY_FLAGS:
+        _set(r, key, True)
+    _set(r, "benchmark", "gateway_load")
+    _set(r, "mode", "smoke")
+    _set(r, "n_sessions", 500)
+    _set(r, "storm.coalesce_per_drifted", 4.0)
+    return r
+
+
 class TestCheckSweep:
     def test_good_report_is_green(self):
         assert CB.check_sweep(good_sweep(), good_sweep(), 3.0) == []
@@ -133,6 +146,34 @@ class TestCheckSurface:
         assert CB.check_surface(r, good_surface(), 3.0) != []
 
 
+class TestCheckGateway:
+    def test_good_report_is_green(self):
+        assert CB.check_gateway(good_gateway(), good_gateway(), 3.0) == []
+
+    def test_tripped_audit_flag_fails(self):
+        for flag in CB.GATEWAY_FLAGS:
+            r = good_gateway()
+            _set(r, flag, False)
+            fails = CB.check_gateway(r, good_gateway(), 3.0)
+            assert any(flag in f for f in fails), flag
+
+    def test_missing_storm_section_fails(self):
+        r = good_gateway()
+        del r["storm"]
+        fails = CB.check_gateway(r, good_gateway(), 3.0)
+        assert any("storm.coalesce_x" in f for f in fails)
+
+    def test_coalescing_collapse_fails_but_noise_passes(self):
+        base = good_gateway()
+        r = good_gateway()
+        _set(r, "storm.coalesce_per_drifted", 4.0 / 2)  # noise
+        assert CB.check_gateway(r, base, 3.0) == []
+        _set(r, "storm.coalesce_per_drifted", 4.0 / 5)  # collapse
+        fails = CB.check_gateway(r, base, 3.0)
+        assert any("coalesce_per_drifted" in f and "collapsed" in f
+                   for f in fails)
+
+
 class TestCommittedBaselines:
     """The committed full-run reports must pass as their own candidates
     — the exact invocation the CI bench-smoke job makes, so a schema
@@ -147,6 +188,11 @@ class TestCommittedBaselines:
         with open(ROOT / "BENCH_surface.json") as f:
             rep = json.load(f)
         assert CB.check_surface(rep, copy.deepcopy(rep), 3.0) == []
+
+    def test_bench_gateway_json_green(self):
+        with open(ROOT / "BENCH_gateway.json") as f:
+            rep = json.load(f)
+        assert CB.check_gateway(rep, copy.deepcopy(rep), 3.0) == []
 
 
 class TestCli:

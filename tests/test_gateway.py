@@ -1,0 +1,334 @@
+"""Fleet gateway + QoS telemetry tests.
+
+Deterministic throughout: rebuilds run on a
+:class:`~repro.core.async_replan.ManualExecutor`, so "a rebuild is in
+flight" is an exact program state, and drift is injected by feeding
+sessions observed latencies at a chosen multiple of their own modeled
+nominal hop time.
+"""
+
+import asyncio
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.async_replan import ManualExecutor
+from repro.core.profiles import PROTOCOLS, paper_cost_model
+from repro.runtime.gateway import FleetGateway
+from repro.runtime.stats import QosMonitor, RollingWindow, percentile
+
+GRID = {"pt_scale": (1.0, 4.0, 16.0), "loss_p": (0.0, 0.1)}
+NBYTES = 5488
+# one EWMA step at this multiple jumps the packet-time estimate past the
+# 16x envelope edge: 0.8*1 + 0.2*100 = 20.8x nominal
+STORM = 100.0
+
+
+@pytest.fixture(scope="module")
+def cost_model():
+    return paper_cost_model("mobilenet_v2", "esp_now")
+
+
+@pytest.fixture()
+def gw(cost_model):
+    ex = ManualExecutor()
+    g = FleetGateway(cost_model, dict(PROTOCOLS), fleet_sizes=(2, 3),
+                     executor=ex, surface_grid=GRID)
+    yield g, ex
+    g.close()
+
+
+def _nominal(gw, sid):
+    """The session's own modeled per-hop latency (an in-envelope
+    observation)."""
+    return gw.sessions[sid].meter.link.transmission_latency_s(NBYTES)
+
+
+def _observe_round(gw, sids, factor=1.0):
+    for sid in sids:
+        gw.submit_observe(sid, NBYTES, _nominal(gw, sid) * factor)
+    gw.pump()
+
+
+class TestSessionLifecycle:
+    def test_register_is_surface_lookup_not_solve(self, gw):
+        g, _ = gw
+        s = g.register("a", 2, bytes_per_token=NBYTES)
+        assert s.manager.current is not None
+        assert s.manager.exact_fallbacks == 0  # no per-registration solve
+        assert s.manager.history[0].reason == "initial [surface]"
+        assert s.meter.protocol == s.manager.current.protocol
+        assert s.meter.link.mtu_bytes == s.manager.current.chunk_bytes
+
+    def test_register_rejects_duplicates_and_unknown_sizes(self, gw):
+        g, _ = gw
+        g.register("a", 2)
+        with pytest.raises(ValueError):
+            g.register("a", 2)
+        with pytest.raises(KeyError):
+            g.register("b", 7)  # not in the prebuilt family
+
+    def test_drop_releases_session_and_window(self, gw):
+        g, _ = gw
+        g.register("a", 2)
+        _observe_round(g, ["a"])
+        assert g.qos.window("a") is not None
+        assert g.drop("a")
+        assert not g.drop("a")  # idempotent-ish: unknown now
+        assert "a" not in g.sessions
+        assert g.qos.window("a") is None
+
+    def test_orphaned_events_are_counted_not_crashed(self, gw):
+        g, _ = gw
+        g.register("a", 2)
+        g.submit_observe("a", NBYTES, 1e-3)
+        g.drop("a")
+        assert g.pump() == 1
+        assert g.qos.counters["events_orphaned"] == 1
+
+
+class TestSharedRebuilderCoalescing:
+    def test_n_drifting_sessions_one_build(self, gw):
+        """The tentpole contract: N sessions drifting in the same cycle
+        coalesce into ONE batched build_surfaces call on the single
+        shared rebuilder, and every session adopts from that one
+        build."""
+        g, ex = gw
+        n = 20
+        sids = [f"s{i}" for i in range(n)]
+        for sid in sids:
+            g.register(sid, 2)
+        _observe_round(g, sids, factor=STORM)
+        assert g.rebuilder.requests >= n  # every session's drift arrived
+        assert g.rebuilder.builds_started == 1  # ...as ONE launched build
+        assert ex.submitted == 1
+        ex.run_all()
+        _observe_round(g, sids, factor=STORM)  # adoption round
+        swaps = sum(g.sessions[sid].manager.surface_swaps for sid in sids)
+        assert swaps == n
+        adopted = {id(g.sessions[sid].manager.surface) for sid in sids}
+        assert len(adopted) == 1  # the SAME surface object, one build
+        assert g.rebuilder.builds_completed <= 2
+
+    def test_mixed_sizes_batch_into_one_multisize_build(self, gw):
+        g, ex = gw
+        for i in range(6):
+            g.register(f"s{i}", 2 + (i % 2))
+        sids = [f"s{i}" for i in range(6)]
+        _observe_round(g, sids, factor=STORM)
+        assert g.rebuilder.builds_started == 1
+        req = g.rebuilder.last_request
+        assert req is not None and set(req.sizes) == {2, 3}
+
+    def test_stale_policy_never_resolves_inline(self, gw):
+        """Gateway sessions run offsurface_fallback='stale': once a
+        decision exists, off-envelope drift requests a rebuild and
+        serves stale — the event path never blocks on an inline exact
+        re-solve."""
+        g, ex = gw
+        g.register("a", 2)
+        for _ in range(5):
+            _observe_round(g, ["a"], factor=STORM)
+        m = g.sessions["a"].manager
+        assert m.exact_fallbacks == 0
+        assert m.stale_serves >= 1
+        assert m.rebuild_requests >= 1
+
+
+class TestChurnDuringRebuild:
+    def test_drop_midflight_then_snapshot_publishes_result(self, gw):
+        """Churn during an in-flight rebuild: the requesting session
+        drops before the build lands. snapshot() sweeps the fanout so
+        the completed surface is still published, and a session
+        registered AFTER completion adopts it (newest generation) on
+        its first observe."""
+        g, ex = gw
+        g.register("a", 2)
+        # a lone session's poll precedes its own request, so round 1
+        # queues and round 2's poll launches
+        _observe_round(g, ["a"], factor=STORM)
+        _observe_round(g, ["a"], factor=STORM)
+        assert ex.pending() == 1  # build in flight
+        g.drop("a")
+        ex.run_all()
+        snap = g.snapshot()  # sweeps fanout across sizes
+        assert g.fanout.latest(2) is not None
+        assert snap.counters["builds_completed"] == 1
+
+        g.register("b", 2)
+        _observe_round(g, ["b"])  # in-envelope observe still polls
+        mb = g.sessions["b"].manager
+        assert mb.surface_swaps == 1  # adopted the newer fleet surface
+        assert g.sessions["b"].adoption_violations() == 0
+
+    def test_stale_generation_never_readopted(self, gw):
+        """Generation semantics per session: after adopting generation
+        G, neither the fanout map nor a handle will hand back anything
+        <= G — even if an older result is forced into the shared
+        state."""
+        g, ex = gw
+        g.register("a", 2)
+        _observe_round(g, ["a"], factor=STORM)  # queues
+        _observe_round(g, ["a"], factor=STORM)  # poll launches
+        ex.run_all()
+        _observe_round(g, ["a"], factor=STORM)  # poll adopts
+        sess = g.sessions["a"]
+        assert sess.manager.surface_swaps == 1
+        stale = g.surfaces[2]  # the original gen-0 family surface
+        # try to regress the shared map with an older generation
+        assert g.fanout.refresh(2) is False
+        g.fanout._latest[2] = (0, stale)
+        g.fanout.seq += 1
+        assert sess.handle.poll(2) is None  # gen 0 <= adopted gen: refused
+        assert sess.adoption_violations() == 0
+
+    def test_churned_sessions_keep_generations_monotonic(self, gw):
+        g, ex = gw
+        sids = [f"s{i}" for i in range(8)]
+        for sid in sids:
+            g.register(sid, 2)
+        for round_ in range(3):
+            _observe_round(g, sids, factor=STORM * (round_ + 1))
+            # churn half the fleet every round, mid-whatever-is-inflight
+            for i in range(0, 8, 2):
+                g.drop(f"s{i}")
+                g.register(f"s{i}", 2)
+            ex.run_all()
+        _observe_round(g, sids)
+        snap = g.snapshot()
+        assert snap.counters["stale_adoption_violations"] == 0
+
+
+class TestBackpressure:
+    def test_shedding_is_counted(self, cost_model):
+        ex = ManualExecutor()
+        g = FleetGateway(cost_model, dict(PROTOCOLS), fleet_sizes=(2,),
+                         executor=ex, surface_grid=GRID, max_pending=8)
+        try:
+            g.register("a", 2)
+            accepted = sum(g.submit_observe("a", NBYTES, 1e-3)
+                           for _ in range(20))
+            assert accepted == 8
+            assert g.qos.counters["events_shed"] == 12
+            assert g.pending == 8
+            assert g.pump() == 8
+            assert g.qos.counters["events_processed"] == 8
+            # the queue drained: admission opens again
+            assert g.submit_observe("a", NBYTES, 1e-3)
+        finally:
+            g.close()
+
+    def test_snapshot_reports_queue_depth(self, gw):
+        g, _ = gw
+        g.register("a", 2)
+        g.submit_observe("a", NBYTES, 1e-3)
+        snap = g.snapshot()
+        assert snap.counters["queue_depth"] == 1
+
+
+class TestQosStats:
+    def test_percentile_matches_numpy_oracle(self):
+        rng = np.random.default_rng(0)
+        for n in (1, 2, 3, 7, 100, 257):
+            vals = rng.exponential(1.0, size=n).tolist()
+            for q in (0.0, 25.0, 50.0, 90.0, 99.0, 100.0):
+                assert percentile(vals, q) == pytest.approx(
+                    float(np.percentile(vals, q)), rel=1e-12, abs=0.0)
+
+    def test_percentile_rejects_bad_inputs(self):
+        with pytest.raises(ValueError):
+            percentile([], 50.0)
+        with pytest.raises(ValueError):
+            percentile([1.0], 101.0)
+
+    def test_rolling_window_retains_last_maxlen(self):
+        w = RollingWindow(maxlen=4)
+        for i in range(10):
+            w.add(float(i))
+        assert w.count == 10
+        assert sorted(w.values()) == [6.0, 7.0, 8.0, 9.0]
+        assert w.percentile(50.0) == 7.5
+        assert w.percentiles((50.0, 100.0)) == (7.5, 9.0)
+
+    def test_qos_monitor_keys_and_fleet(self):
+        q = QosMonitor(key_window=4, global_window=16)
+        for i in range(8):
+            q.record("a", float(i))
+        p50, p99 = q.key_percentiles("a")
+        assert p50 == 5.5  # last 4 samples: 4..7
+        assert q.fleet_percentiles((50.0,))[0] == 3.5  # all 8 retained
+        assert math.isnan(q.key_percentiles("missing")[0])
+        q.drop("a")
+        assert q.window("a") is None
+
+    def test_gateway_percentiles_against_numpy(self, cost_model):
+        """End-to-end: observe timings recorded by a real pump match
+        np.percentile over the same retained window."""
+        ex = ManualExecutor()
+        ticks = iter(range(10_000))
+        g = FleetGateway(cost_model, dict(PROTOCOLS), fleet_sizes=(2,),
+                         executor=ex, surface_grid=GRID,
+                         clock=lambda: float(next(ticks)))
+        try:
+            g.register("a", 2)
+            for _ in range(50):
+                g.submit_observe("a", NBYTES, _nominal(g, "a"))
+            g.pump()
+            snap = g.snapshot()
+            window = np.asarray(g.qos.global_window.values())
+            assert snap.p50_s == float(np.percentile(window, 50.0))
+            assert snap.p99_s == float(np.percentile(window, 99.0))
+            assert snap.observes == 50
+        finally:
+            g.close()
+
+
+class TestSnapshot:
+    def test_counters_aggregate_across_sessions(self, gw):
+        g, ex = gw
+        sids = ["a", "b", "c"]
+        for sid in sids:
+            g.register(sid, 2)
+        _observe_round(g, sids)
+        snap = g.snapshot(include_sessions=True)
+        assert snap.n_sessions == 3
+        assert snap.counters["surface_hits"] == sum(
+            g.sessions[s].manager.surface_hits for s in sids)
+        assert snap.counters["registrations"] == 3
+        assert len(snap.sessions) == 3
+        by_id = {s.session_id: s for s in snap.sessions}
+        assert by_id["a"].observes == 1
+        assert not math.isnan(by_id["a"].p50_s)
+
+    def test_snapshot_seq_increments(self, gw):
+        g, _ = gw
+        assert g.snapshot().seq == 1
+        assert g.snapshot().seq == 2
+
+
+class TestAsyncioServe:
+    def test_serve_pumps_until_stopped(self, cost_model):
+        ex = ManualExecutor()
+        g = FleetGateway(cost_model, dict(PROTOCOLS), fleet_sizes=(2,),
+                         executor=ex, surface_grid=GRID)
+
+        async def scenario():
+            task = asyncio.create_task(g.serve(batch=8, idle_sleep_s=0.0))
+            g.register("a", 2, bytes_per_token=NBYTES)
+            for _ in range(20):
+                g.submit_observe("a", NBYTES, _nominal(g, "a"))
+                g.submit_token("a")
+            while g.pending:
+                await asyncio.sleep(0)
+            g.stop()
+            await task
+
+        try:
+            asyncio.run(scenario())
+            assert g.qos.counters["events_processed"] == 40
+            assert g.qos.counters["tokens_processed"] == 20
+            assert g.sessions["a"].tokens == 20
+            assert len(g.token_window) == 20
+        finally:
+            g.close()

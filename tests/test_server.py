@@ -167,6 +167,134 @@ class TestServer:
         server.run_until_drained()
         assert mgr.surface_swaps >= 1  # swap-on-ready during serving
 
+    def test_staggered_admission_preserves_active_generations(self, params):
+        """Regression (prefill slot isolation + per-slot decode
+        positions): admitting a request mid-decode used to (a) broadcast
+        the new prompt into EVERY slot's KV cache at positions 0..P-1
+        and (b) decode all slots at the single global max(lengths)
+        index — both corrupt staggered generations. Every request's
+        tokens must match serving it alone."""
+        p0 = np.array([3, 9, 4], np.int32)
+        p1 = np.array([11, 5, 7, 2], np.int32)
+        max_new = 10
+
+        solo = {}
+        for rid, prompt in ((0, p0), (1, p1)):
+            s = Server(CFG, params, slots=2, max_seq=64)
+            s.submit(Request(rid, prompt, max_new_tokens=max_new))
+            solo[rid] = s.run_until_drained()[rid]
+
+        srv = Server(CFG, params, slots=2, max_seq=64)
+        emitted = {0: [], 1: []}
+        srv.submit(Request(0, p0, max_new_tokens=max_new))
+        for _ in range(4):  # request 0 is mid-decode...
+            for rid, tok in srv.step():
+                emitted[rid].append(tok)
+        srv.submit(Request(1, p1, max_new_tokens=max_new))  # ...admit here
+        while srv.queue or srv.active:
+            for rid, tok in srv.step():
+                emitted[rid].append(tok)
+        assert emitted[0] == solo[0]  # admission did not corrupt slot 0
+        assert emitted[1] == solo[1]  # and slot 1 decoded at its own positions
+
+    def test_staggered_admissions_three_slots(self, params):
+        """Same contract under repeated staggered admissions at
+        different offsets across three slots."""
+        prompts = {0: np.array([1, 2], np.int32),
+                   1: np.array([13, 7, 5], np.int32),
+                   2: np.array([21, 9], np.int32)}
+        max_new = 8
+        solo = {}
+        for rid, prompt in prompts.items():
+            s = Server(CFG, params, slots=3, max_seq=64)
+            s.submit(Request(rid, prompt, max_new_tokens=max_new))
+            solo[rid] = s.run_until_drained()[rid]
+
+        srv = Server(CFG, params, slots=3, max_seq=64)
+        emitted = {rid: [] for rid in prompts}
+        srv.submit(Request(0, prompts[0], max_new_tokens=max_new))
+        for _ in range(2):
+            for rid, tok in srv.step():
+                emitted[rid].append(tok)
+        srv.submit(Request(1, prompts[1], max_new_tokens=max_new))
+        for _ in range(3):
+            for rid, tok in srv.step():
+                emitted[rid].append(tok)
+        srv.submit(Request(2, prompts[2], max_new_tokens=max_new))
+        while srv.queue or srv.active:
+            for rid, tok in srv.step():
+                emitted[rid].append(tok)
+        assert emitted == solo
+
+    def test_meter_prices_remaining_hops_across_replan(self):
+        """Regression: a replan adoption mid-token used to `break` out
+        of the hop loop, silently dropping the pricing of that token's
+        remaining hops. With a 3-segment plan (2 hops/token) and an
+        adoption firing on the FIRST hop of a token, every token must
+        still price exactly 2 hops — on the newly adopted plan."""
+        from types import SimpleNamespace
+
+        plan3 = SimpleNamespace(
+            segments=[SimpleNamespace(tx_bytes=512)] * 3, splits=(1, 2))
+
+        class AdoptOnNthObserve:
+            """Minimal manager stub: records a new decision on the Nth
+            observe (same protocol, so no link swap)."""
+
+            def __init__(self, adopt_on):
+                self.history = []
+                self.adopt_on = adopt_on
+                self.n = 0
+                self.current = None
+
+            def observe(self, protocol, nbytes, latency_s, retries=0):
+                self.n += 1
+                if self.n == self.adopt_on:
+                    self.history.append("adopted")
+
+            def current_plan(self):
+                return plan3
+
+        # adopt on observe #3 = the FIRST hop of the second token
+        mgr = AdoptOnNthObserve(adopt_on=3)
+        meter = SplitLatencyMeter(plan=plan3, link=ESP_NOW,
+                                  bytes_per_token=5488,
+                                  manager=mgr, protocol="esp_now")
+        n_tokens = 5
+        for _ in range(n_tokens):
+            meter.on_token()
+        assert meter.replans == 1
+        # hop-count conservation: 2 hops per token, replan or not
+        assert meter.hops == 2 * n_tokens
+        per_hop = ESP_NOW.transmission_latency_s(5488)
+        assert meter.hop_seconds == pytest.approx(per_hop * 2 * n_tokens)
+
+    def test_meter_hop_conservation_with_real_manager(self):
+        """Integration flavor of the same invariant: a real adaptive
+        manager replanning under a collapsed link never changes the
+        2-hops-per-token count of a 3-device plan."""
+        from dataclasses import replace
+
+        from repro.core.adaptive import AdaptiveSplitManager
+        from repro.core.profiles import PROTOCOLS, paper_cost_model
+
+        mgr = AdaptiveSplitManager(
+            cost_model=paper_cost_model("mobilenet_v2", "esp_now"),
+            protocols=dict(PROTOCOLS), n_devices=3,
+            surface_grid={"pt_scale": (1.0, 16.0, 256.0),
+                          "loss_p": (0.0, 0.1)})
+        assert len(mgr.current_plan().segments) == 3
+        dead = replace(ESP_NOW,
+                       rate_bytes_per_s=ESP_NOW.rate_bytes_per_s / 400)
+        meter = SplitLatencyMeter(plan=mgr.current_plan(), link=dead,
+                                  bytes_per_token=5488,
+                                  manager=mgr, protocol="esp_now")
+        n_tokens = 200
+        for _ in range(n_tokens):
+            meter.on_token()
+        assert meter.replans >= 1  # the collapse really triggered replans
+        assert meter.hops == 2 * n_tokens
+
     def test_run_until_drained_reports_drained(self, params):
         server = Server(CFG, params, slots=2, max_seq=64)
         server.submit(Request(0, np.array([1], np.int32), max_new_tokens=4))

@@ -2,7 +2,8 @@
 
 Compares a freshly produced benchmark JSON (a ``--smoke`` run in CI)
 against the committed baseline (``BENCH_sweep.json`` /
-``BENCH_surface.json``) and fails on regression, so the benchmarks gate
+``BENCH_surface.json`` / ``BENCH_gateway.json``) and fails on
+regression, so the benchmarks gate
 merges instead of only uploading artifacts nobody reads. Three checks
 per report:
 
@@ -24,7 +25,9 @@ Usage:
   python tools/check_bench.py --sweep BENCH_sweep_ci.json \
       [--sweep-baseline BENCH_sweep.json] \
       --surface BENCH_surface_ci.json \
-      [--surface-baseline BENCH_surface.json] [--max-ratio 3.0]
+      [--surface-baseline BENCH_surface.json] \
+      --gateway BENCH_gateway_ci.json \
+      [--gateway-baseline BENCH_gateway.json] [--max-ratio 3.0]
 
 Exit 0 = no regression. Unit-tested in ``tests/test_check_bench.py``
 with synthetic regressed reports.
@@ -73,6 +76,33 @@ SURFACE_RATIOS = (
     ("speedup_x", "higher"),
     ("async.inflight_over_steady_x", "lower"),
 )
+
+GATEWAY_KEYS = (
+    "benchmark", "mode", "n_sessions",
+    "registration.sessions", "registration.per_session_us",
+    "steady.events", "steady.observe_us_p50", "steady.observe_us_p99",
+    "tokens.token_us_p50", "tokens.token_us_p99",
+    "churn.cycled",
+    "storm.drifted_sessions", "storm.rebuild_requests",
+    "storm.builds_started", "storm.coalesce_x",
+    "storm.coalesce_per_drifted", "storm.surface_swaps",
+    "audit.zero_stale_adoptions", "audit.single_shared_rebuilder",
+    "audit.percentile_parity_ok", "audit.all_drifted_adopted",
+    "audit.shed.ok",
+    "fleet.events_shed", "fleet.rebuild_errors",
+)
+GATEWAY_FLAGS = (
+    "audit.zero_stale_adoptions",
+    "audit.single_shared_rebuilder",
+    "audit.percentile_parity_ok",
+    "audit.all_drifted_adopted",
+    "audit.shed.ok",
+)
+# coalescing is the gateway's raison d'être. The raw coalesce_x scales
+# with fleet size (smoke and full runs differ 20x), so the gate uses
+# the size-normalized requests-per-build-per-drifted-session metric: a
+# collapse toward 1/drifted means per-session solves are back.
+GATEWAY_RATIOS = (("storm.coalesce_per_drifted", "higher"),)
 
 
 def _get(report: dict, dotted: str):
@@ -148,6 +178,12 @@ def check_surface(candidate: dict, baseline: dict | None,
                         SURFACE_RATIOS, max_ratio, "surface")
 
 
+def check_gateway(candidate: dict, baseline: dict | None,
+                  max_ratio: float) -> list[str]:
+    return check_report(candidate, baseline, GATEWAY_KEYS, GATEWAY_FLAGS,
+                        GATEWAY_RATIOS, max_ratio, "gateway")
+
+
 def _load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
@@ -163,11 +199,16 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--surface-baseline",
                     default=str(ROOT / "BENCH_surface.json"),
                     help="committed surface baseline")
+    ap.add_argument("--gateway", help="candidate gateway report")
+    ap.add_argument("--gateway-baseline",
+                    default=str(ROOT / "BENCH_gateway.json"),
+                    help="committed gateway baseline")
     ap.add_argument("--max-ratio", type=float, default=3.0,
                     help="tolerated ratio-metric drift vs baseline")
     args = ap.parse_args(argv)
-    if not args.sweep and not args.surface:
-        ap.error("nothing to check: pass --sweep and/or --surface")
+    if not args.sweep and not args.surface and not args.gateway:
+        ap.error("nothing to check: pass --sweep, --surface and/or "
+                 "--gateway")
     if args.max_ratio < 1.0:
         ap.error(f"--max-ratio must be >= 1.0, got {args.max_ratio}")
 
@@ -182,6 +223,11 @@ def main(argv: list[str] | None = None) -> int:
                                   _load(args.surface_baseline),
                                   args.max_ratio)
         checked.append(f"surface ({args.surface} vs {args.surface_baseline})")
+    if args.gateway:
+        failures += check_gateway(_load(args.gateway),
+                                  _load(args.gateway_baseline),
+                                  args.max_ratio)
+        checked.append(f"gateway ({args.gateway} vs {args.gateway_baseline})")
 
     if failures:
         print("bench regression detected:", file=sys.stderr)
