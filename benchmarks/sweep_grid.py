@@ -10,6 +10,7 @@ Usage:
   PYTHONPATH=src python benchmarks/sweep_grid.py            # full grid (512 scenarios)
   PYTHONPATH=src python benchmarks/sweep_grid.py --smoke    # CI smoke (256 scenarios)
   ... [--backend jax|sharded] [--json BENCH_sweep.json] [--csv sweep.csv]
+  ... [--sections sharded,pallas,multichannel]  # limit the extra sections
 
 The report always carries a ``sharded`` section — the same grid solved
 with the scenario axis partitioned over every local JAX device
@@ -44,12 +45,32 @@ import json
 import math
 import time
 
-from repro.core.profiles import ESP32, PROTOCOLS, mobilenet_cost_profile, resnet50_cost_profile
-from repro.core.sweep import ScenarioGrid, parity_report, sweep, sweep_scalar
+from dataclasses import replace
+
+import numpy as np
+
+from repro.core.latency import COST_CHANNELS
+from repro.core.profiles import ESP32, PROTOCOLS, mobilenet_cost_profile, paper_cost_model, resnet50_cost_profile
+from repro.core.sweep import (
+    ScenarioGrid,
+    parity_report,
+    solve_batched,
+    solve_multi_channel,
+    stack_cost_tensors,
+    sweep,
+    sweep_scalar,
+)
 
 LOSS_P = (None, 0.01, 0.05, 0.10)
 RATE_SCALE = (1.0, 0.5, 0.25, 0.125)
 DEVICES = (2, 3, 4, 5)
+ALL_SECTIONS = ("sharded", "pallas", "multichannel")
+
+# energy pricing for the multichannel section (defaults are 0.0 —
+# energy is opt-in): ESP32-class active power, WiFi-class radio power
+ACTIVE_POWER_W = 0.5
+TX_POWER_W = 0.24
+RX_POWER_W = 0.12
 
 
 def build_grid(smoke: bool) -> ScenarioGrid:
@@ -165,7 +186,97 @@ def run_pallas(grid, known=None) -> dict:
     }
 
 
-def run(smoke: bool = True, backend: str = "numpy") -> dict:
+def build_multichannel_grid(smoke: bool) -> ScenarioGrid:
+    """Contention × energy-budget grid for the multichannel section:
+    powered links/devices, shared-channel groups, and Joule caps chosen
+    from the energy tensor's own percentiles so the budget axis spans
+    binding and slack regimes."""
+    dev = replace(ESP32, active_power_w=ACTIVE_POWER_W)
+    links = {name: replace(lk, tx_power_w=TX_POWER_W, rx_power_w=RX_POWER_W)
+             for name, lk in PROTOCOLS.items()}
+    ref = replace(paper_cost_model("mobilenet_v2", "esp_now"),
+                  link=links["esp_now"], devices=(dev,))
+    E = ref.energy_cost_tensor(max(DEVICES))
+    fin = E[np.isfinite(E)]
+    tight = float(np.percentile(fin, 55.0))
+    loose = float(np.percentile(fin, 95.0))
+    return ScenarioGrid(
+        models={"mobilenet_v2": mobilenet_cost_profile()},
+        links=links,
+        n_devices=(2, 3) if smoke else DEVICES,
+        loss_p=(None, 0.05) if smoke else LOSS_P,
+        devices=(dev,),
+        contention_groups=(1, 2, 4),
+        energy_budgets=(None, loose, tight),
+        mac_efficiency=0.9,
+    )
+
+
+def run_multichannel(smoke: bool = True) -> dict:
+    """The ``multichannel`` section: the contention × budget grid swept
+    batched vs the scalar budget-filtered ``optimal_dp`` loop, verified
+    bit-identical; plus the degenerate single-channel bit-exactness and
+    per-segment budget-respect audits the property suite pins."""
+    grid = build_multichannel_grid(smoke)
+
+    t0 = time.perf_counter()
+    batched = sweep(grid, solver="batched_dp")
+    batched_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    scalar = sweep_scalar(grid, solver="optimal_dp")
+    scalar_wall = time.perf_counter() - t0
+
+    mismatches = parity_report(batched, scalar)
+
+    # degenerate single-channel path: bit-exact vs the plain solve
+    ref = replace(paper_cost_model("mobilenet_v2", "esp_now"),
+                  link=replace(PROTOCOLS["esp_now"], tx_power_w=TX_POWER_W,
+                               rx_power_w=RX_POWER_W),
+                  devices=(replace(ESP32, active_power_w=ACTIVE_POWER_W),))
+    C = stack_cost_tensors([ref], 3, channels=COST_CHANNELS)
+    deg = solve_multi_channel(C[:1], channels=("latency",))
+    plain = solve_batched(C[0])
+    degenerate_ok = (np.array_equal(deg.splits, plain.splits)
+                     and np.array_equal(deg.cost_s, plain.cost_s))
+
+    # every budgeted feasible plan keeps every segment within budget
+    # (scalar energy oracle re-pricing — not the tensor that masked it)
+    budget_ok = True
+    n_budgeted = 0
+    for row in batched.rows:
+        sc = row.scenario
+        if sc.energy_budget is None:
+            continue
+        n_budgeted += 1
+        if not row.feasible:
+            continue
+        m = grid.cost_model(sc)
+        efn = m.energy_segment_fn()
+        L = m.profile.num_layers
+        bounds = (0,) + tuple(row.splits) + (L,)
+        for k in range(sc.n_devices):
+            if efn(bounds[k] + 1, bounds[k + 1], k + 1) > sc.energy_budget:
+                budget_ok = False
+
+    return {
+        "n_scenarios": grid.size,
+        "n_feasible": sum(r.feasible for r in batched.rows),
+        "n_budgeted": n_budgeted,
+        "contention_groups": list(grid.contention_groups),
+        "batched_wall_s": round(batched_wall, 4),
+        "scalar_wall_s": round(scalar_wall, 4),
+        "speedup_x": round(scalar_wall / batched_wall, 1),
+        "scenarios_per_sec": round(grid.size / batched_wall, 1),
+        "parity_ok": not mismatches,
+        "parity_mismatches": mismatches[:10],
+        "degenerate_bit_exact": degenerate_ok,
+        "budget_respected": budget_ok,
+    }
+
+
+def run(smoke: bool = True, backend: str = "numpy",
+        sections: tuple = ALL_SECTIONS) -> dict:
     grid = build_grid(smoke)
 
     known: dict = {}
@@ -203,8 +314,12 @@ def run(smoke: bool = True, backend: str = "numpy") -> dict:
         "scenarios_per_sec_scalar": round(grid.size / scalar_wall, 1),
         "parity_ok": not mismatches,
         "parity_mismatches": mismatches[:10],
-        "sharded": run_sharded(grid, known),
-        "pallas": run_pallas(grid, known),
+        **({"sharded": run_sharded(grid, known)}
+           if "sharded" in sections else {}),
+        **({"pallas": run_pallas(grid, known)}
+           if "pallas" in sections else {}),
+        **({"multichannel": run_multichannel(smoke)}
+           if "multichannel" in sections else {}),
         "best": {
             name: {
                 "scenario": row.scenario.describe(),
@@ -236,10 +351,23 @@ def main() -> None:
                     help="path for the machine-readable result (empty to skip)")
     ap.add_argument("--csv", default="",
                     help="optionally dump the full per-scenario sweep table")
+    ap.add_argument("--sections", default=",".join(ALL_SECTIONS),
+                    help="comma-separated extra sections to run "
+                         f"(default: all of {','.join(ALL_SECTIONS)}); "
+                         "e.g. --sections multichannel for the "
+                         "contention+energy smoke only. NOTE: a "
+                         "section-limited JSON is NOT a valid "
+                         "check_bench --sweep candidate (required "
+                         "sections are missing by construction).")
     args = ap.parse_args()
+    sections = tuple(s for s in args.sections.split(",") if s)
+    unknown = set(sections) - set(ALL_SECTIONS)
+    if unknown:
+        ap.error(f"unknown sections {sorted(unknown)}; "
+                 f"options: {','.join(ALL_SECTIONS)}")
 
     print("\n=== sweep_grid: batched fleet sweep vs scalar per-scenario loop ===")
-    report = run(smoke=args.smoke, backend=args.backend)
+    report = run(smoke=args.smoke, backend=args.backend, sections=sections)
     print(f"scenarios: {report['n_scenarios']} "
           f"({report['n_feasible']} feasible; mode={report['mode']}, "
           f"backend={report['backend']})")
@@ -250,17 +378,28 @@ def main() -> None:
           f"-> {report['scenarios_per_sec_scalar']} scenarios/s")
     print(f"speedup: {report['speedup_x']}x  "
           f"parity (bit-identical splits): {report['parity_ok']}")
-    sh = report["sharded"]
-    print(f"sharded: {sh['n_shards']} shard(s), {sh['wall_s']}s "
-          f"({sh['scenarios_per_sec']} scenarios/s; 1-device jax "
-          f"{sh['jax_single_device_wall_s']}s) "
-          f"node-identical to jax: {sh['node_identical_to_jax']}")
-    pa = report["pallas"]
-    print(f"pallas: {pa['wall_s']}s ({pa['scenarios_per_sec']} scenarios/s"
-          f"{'; interpret mode' if pa['interpret'] else ''}) "
-          f"node-identical to jax: {pa['node_identical_to_jax']} "
-          f"({pa['n_tie_divergences']} exact-cost tie divergence(s), "
-          f"all verified zero-regret: {pa['divergences_are_exact_ties']})")
+    if "sharded" in report:
+        sh = report["sharded"]
+        print(f"sharded: {sh['n_shards']} shard(s), {sh['wall_s']}s "
+              f"({sh['scenarios_per_sec']} scenarios/s; 1-device jax "
+              f"{sh['jax_single_device_wall_s']}s) "
+              f"node-identical to jax: {sh['node_identical_to_jax']}")
+    if "pallas" in report:
+        pa = report["pallas"]
+        print(f"pallas: {pa['wall_s']}s ({pa['scenarios_per_sec']} scenarios/s"
+              f"{'; interpret mode' if pa['interpret'] else ''}) "
+              f"node-identical to jax: {pa['node_identical_to_jax']} "
+              f"({pa['n_tie_divergences']} exact-cost tie divergence(s), "
+              f"all verified zero-regret: {pa['divergences_are_exact_ties']})")
+    if "multichannel" in report:
+        mc = report["multichannel"]
+        print(f"multichannel: {mc['n_scenarios']} scenarios "
+              f"({mc['n_budgeted']} budgeted, contention groups "
+              f"{mc['contention_groups']}), batched {mc['batched_wall_s']}s "
+              f"vs scalar {mc['scalar_wall_s']}s -> {mc['speedup_x']}x; "
+              f"parity: {mc['parity_ok']}, degenerate bit-exact: "
+              f"{mc['degenerate_bit_exact']}, budget respected: "
+              f"{mc['budget_respected']}")
     for name, best in report["best"].items():
         print(f"best[{name}]: {best['scenario']} splits={best['splits']} "
               f"latency {best['total_latency_s']}s")
@@ -287,14 +426,24 @@ def main() -> None:
         print(f"note: backend={args.backend} differs from the scalar oracle on "
               f"{len(report['parity_mismatches'])}+ scenarios (expected: float32 "
               f"tie-breaking; use --backend numpy for bit-exact parity)")
-    assert report["sharded"]["node_identical_to_jax"], \
-        "sharded sweep diverged from the single-device JAX path"
+    if "sharded" in report:
+        assert report["sharded"]["node_identical_to_jax"], \
+            "sharded sweep diverged from the single-device JAX path"
     # pallas node-identity contract: every node matches jax exactly, or
     # is a verified exact-cost tie (both plans optimal, zero f64 regret)
-    assert report["pallas"]["divergences_are_exact_ties"], \
-        "pallas sweep diverged from the JAX path beyond exact-cost ties"
-    assert report["pallas"]["costs_allclose_to_jax"], \
-        "pallas sweep costs drifted from the JAX path"
+    if "pallas" in report:
+        assert report["pallas"]["divergences_are_exact_ties"], \
+            "pallas sweep diverged from the JAX path beyond exact-cost ties"
+        assert report["pallas"]["costs_allclose_to_jax"], \
+            "pallas sweep costs drifted from the JAX path"
+    if "multichannel" in report:
+        mc = report["multichannel"]
+        assert mc["parity_ok"], \
+            "multichannel batched sweep diverged from the scalar budget oracle"
+        assert mc["degenerate_bit_exact"], \
+            "single-channel solve_multi_channel diverged from solve_batched"
+        assert mc["budget_respected"], \
+            "a budgeted plan holds an over-budget segment"
     if not math.isfinite(report["speedup_x"]) or report["speedup_x"] < 10:
         print(f"WARNING: speedup {report['speedup_x']}x below the 10x target")
 

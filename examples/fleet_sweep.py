@@ -13,7 +13,10 @@ few milliseconds and prints:
      surface the AdaptiveSplitManager walks at runtime),
   3. how heterogeneous device mixes (a fast gateway tail, degraded
      nodes) move the optimal split — priced in the SAME batched pass,
-  4. engine throughput vs the scalar per-scenario loop.
+  4. engine throughput vs the scalar per-scenario loop,
+  5. shared-channel contention + per-device energy budgets: a second
+     grid with `contention_groups=` / `energy_budgets=` axes shows how
+     concurrent transmitters and Joule caps move the optimal plan.
 
 Run: PYTHONPATH=src python examples/fleet_sweep.py
 """
@@ -117,6 +120,62 @@ def main():
         best = min(rows, key=lambda r: r.total_latency_s)
         print(f"  {mx or 'homogeneous':13s} {best.scenario.protocol:8s} "
               f"splits={best.splits} latency {best.total_latency_s:.3f}s")
+
+    contention_and_budget()
+
+
+def contention_and_budget():
+    """Multi-channel what-ifs: shared-channel contention scales the
+    effective link rate, per-device Joule budgets mask over-budget
+    segments before the solve — both just extra grid axes priced in
+    the same batched pass."""
+    import numpy as np
+
+    # energy is opt-in: give the radio and the MCU non-zero powers
+    dev = replace(ESP32, active_power_w=0.5)
+    links = {name: replace(lk, tx_power_w=0.24, rx_power_w=0.12)
+             for name, lk in PROTOCOLS.items()}
+    # pick a Joule cap that actually binds: the 60th percentile of the
+    # per-segment energy tensor under the nominal protocol
+    probe = ScenarioGrid(models={"mobilenet_v2": mobilenet_cost_profile()},
+                         links={"esp_now": links["esp_now"]},
+                         n_devices=(3,), devices=(dev,))
+    E = probe.cost_model(next(iter(probe.scenarios()))).energy_cost_tensor(3)
+    cap = float(np.percentile(E[np.isfinite(E)], 60.0))
+
+    grid = ScenarioGrid(
+        models={"mobilenet_v2": mobilenet_cost_profile()},
+        links=links,
+        n_devices=(3,),
+        devices=(dev,),
+        contention_groups=(1, 2, 4),   # concurrent transmitters sharing
+        mac_efficiency=0.9,            # ...the channel at 90% MAC efficiency
+        energy_budgets=(None, cap),    # uncapped vs binding Joule budget
+    )
+    result = sweep(grid, solver="batched_dp")
+
+    print(f"\n-- contention × energy budget (N=3, {grid.size} scenarios, "
+          f"cap {cap:.2f} J/device) --")
+    print(f"  {'tx':>3s} {'budget':>7s}  protocol  splits -> latency"
+          f"   (energy/device)")
+    for cg in grid.contention_groups:
+        for eb in grid.energy_budgets:
+            rows = [r for r in result.rows
+                    if r.feasible and r.scenario.contention == cg
+                    and r.scenario.energy_budget == eb]
+            if not rows:
+                print(f"  {cg:>3d} {'cap' if eb else 'none':>7s}  infeasible")
+                continue
+            best = min(rows, key=lambda r: r.total_latency_s)
+            m = grid.cost_model(best.scenario)
+            efn = m.energy_segment_fn()
+            L = m.profile.num_layers
+            bounds = (0,) + tuple(best.splits) + (L,)
+            e_max = max(efn(bounds[k] + 1, bounds[k + 1], k + 1)
+                        for k in range(3))
+            print(f"  {cg:>3d} {'cap' if eb else 'none':>7s}  "
+                  f"{best.scenario.protocol:8s} {str(best.splits):10s} "
+                  f"-> {best.total_latency_s:.3f}s   (max {e_max:.2f} J)")
 
 
 if __name__ == "__main__":

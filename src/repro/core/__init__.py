@@ -31,6 +31,8 @@ Public API (documented in ``docs/api.md``; layer map in
 """
 
 from repro.core.latency import (  # noqa: F401
+    COST_CHANNELS,
+    ContentionModel,
     DeviceProfile,
     LayerCost,
     LinkProfile,
@@ -77,6 +79,9 @@ from repro.core.sweep import (  # noqa: F401
     batched_greedy_search_all_k,
     batched_optimal_dp,
     batched_total_cost,
+    apply_energy_budget,
+    combine_channels,
+    solve_multi_channel,
     stack_cost_tensors,
     sweep_scalar,
 )
@@ -102,11 +107,13 @@ from repro.core.solvers import (  # noqa: F401
     SolverResult,
     beam_search,
     brute_force,
+    budget_masked,
     first_fit_search,
     greedy_search,
     optimal_dp,
     random_fit,
     total_cost,
+    total_energy,
 )
 # NOTE: `repro.core.async_replan` likewise stays a submodule attribute;
 # it imports surface, so it must come after it (and before adaptive,

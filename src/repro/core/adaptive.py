@@ -198,6 +198,10 @@ class AdaptiveSplitManager:
     # injected link-independent device-local cost tensor (shared across
     # a fleet of same-size managers); None = build lazily per manager
     local_tensor: object | None = None
+    # optional per-device Joule cap: every re-plan (batched or scalar)
+    # masks over-budget segments to +inf, so decisions minimize latency
+    # subject to the budget (see repro.core.sweep.apply_energy_budget)
+    energy_budget: float | None = None
     history: list[PlanDecision] = field(default_factory=list)
 
     def __post_init__(self):
@@ -214,9 +218,11 @@ class AdaptiveSplitManager:
         if self.surface == "auto":
             batched = self._batched_solver_name()
             if batched in SW.BATCHED_SOLVERS:
+                grid_kwargs = dict(self.surface_grid or {})
+                grid_kwargs.setdefault("energy_budget", self.energy_budget)
                 self.surface = build_surface(
                     self.cost_model, self.protocols, self.n_devices,
-                    solver=batched, **(self.surface_grid or {}),
+                    solver=batched, **grid_kwargs,
                 )
             else:
                 # scalar-only solvers (first_fit, random_fit, ...) have no
@@ -243,12 +249,14 @@ class AdaptiveSplitManager:
             if self._is_rebuilder_like(self.async_rebuild):
                 self._rebuilder = self.async_rebuild
             else:
+                rebuild_kwargs = dict(self.surface_grid or {})
+                rebuild_kwargs.setdefault("energy_budget", self.energy_budget)
                 self._rebuilder = SurfaceRebuilder(
                     self.cost_model, self.protocols,
                     solver=self._batched_solver_name(),
                     executor=(None if self.async_rebuild is True
                               else self.async_rebuild),
-                    **(self.surface_grid or {}),
+                    **rebuild_kwargs,
                 )
         self.current: PlanDecision | None = None
         if self.initial == "surface" \
@@ -454,6 +462,10 @@ class AdaptiveSplitManager:
         models = [self._model_for(lk) for lk in links]
         TX = np.stack([m.transmission_cost_vector() for m in models])
         C = local[None, :, :, :] + TX[:, None, None, :]
+        if self.energy_budget is not None:
+            E = np.stack([m.energy_cost_tensor(self.n_devices)
+                          for m in models])
+            C = SW.apply_energy_budget(C, E, self.energy_budget)
         combine = "max" if self.cost_model.objective == "bottleneck" else "sum"
         res = SW.solve_batched(C, solver=solver, combine=combine)
         return plans_from_batched(models, res, self.n_devices)
@@ -471,7 +483,9 @@ class AdaptiveSplitManager:
             plans = self._batched_plans(links, solver)
         else:  # fall back to the scalar oracle path
             plans = [plan_split(self._model_for(lk), self.n_devices,
-                                solver=self.solver) for lk in links]
+                                solver=self.solver,
+                                energy_budget=self.energy_budget)
+                     for lk in links]
         for name, link, plan in zip(names, links, plans):
             if not plan.splits and self.n_devices > 1:
                 continue

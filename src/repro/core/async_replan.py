@@ -243,6 +243,7 @@ class SurfaceRebuilder:
         loss_pad: float = 2.0,
         executor=None,
         max_queued_states: int = 8,
+        energy_budget: float | None = None,
     ):
         self.cost_model = cost_model
         self.protocols = dict(protocols)
@@ -250,6 +251,7 @@ class SurfaceRebuilder:
         self.backend = backend
         self.beam_width = beam_width
         self.chunk_candidates = chunk_candidates
+        self.energy_budget = energy_budget
         self.pt_scale = tuple(pt_scale)
         self.loss_p = None if loss_p is None else tuple(loss_p)
         self.pt_pad = tuple(pt_pad)
@@ -381,6 +383,7 @@ class SurfaceRebuilder:
             solver=self.solver, backend=self.backend,
             beam_width=self.beam_width,
             chunk_candidates=self.chunk_candidates,
+            energy_budget=self.energy_budget,
         )
 
     def _resolved_envelopes(

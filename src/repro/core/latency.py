@@ -29,6 +29,11 @@ import numpy as np
 
 INF = float("inf")
 
+#: Recognized cost channels for the stacked multi-channel tensor export
+#: (``segment_cost_tensor(n, channels=...)`` and
+#: ``sweep.stack_cost_tensors(..., channels=...)``), in canonical order.
+COST_CHANNELS = ("latency", "energy")
+
 
 # ---------------------------------------------------------------------------
 # Profiles
@@ -43,7 +48,12 @@ class LinkProfile:
     packet-loss probability ``p``; ``t_prop_s``/``t_ack_s`` per-packet
     propagation and acknowledgment overheads. ``t_setup_s`` is the one-time
     protocol/session setup and ``t_feedback_s`` the prediction-return delay
-    (both enter the RTT, Table IV, not the per-hop Eq. 7)."""
+    (both enter the RTT, Table IV, not the per-hop Eq. 7).
+
+    ``tx_power_w``/``rx_power_w`` are the radio draw while transmitting /
+    receiving; they feed the **energy** cost channel
+    (:meth:`SplitCostModel.segment_energy_j`) and default to 0 so
+    latency-only profiles are unchanged."""
 
     name: str
     mtu_bytes: int
@@ -54,6 +64,8 @@ class LinkProfile:
     t_setup_s: float = 0.0
     t_feedback_s: float = 0.0
     max_devices: int | None = None
+    tx_power_w: float = 0.0
+    rx_power_w: float = 0.0
 
     def packets(self, nbytes: int) -> int:
         """K = ceil(L / MTU) — number of MTU-limited packets (Eq. 7)."""
@@ -89,7 +101,11 @@ class DeviceProfile:
 
     ``mem_limit_bytes``: hard feasibility budget (SRAM+PSRAM on ESP32-S3,
     HBM per chip-group on TPU). Segments exceeding it cost +inf — this is
-    what produces the ResNet50 infeasibility fluctuations in Fig. 3."""
+    what produces the ResNet50 infeasibility fluctuations in Fig. 3.
+
+    ``active_power_w``: compute draw while the device works on its local
+    segment; feeds the energy channel (E_local = P_active * T_local) and
+    defaults to 0 so latency-only profiles are unchanged."""
 
     name: str
     compute_scale: float = 1.0
@@ -101,6 +117,7 @@ class DeviceProfile:
     t_buffer_s: float = 0.0
     buffer_s_per_byte: float = 0.0
     mem_limit_bytes: float | None = None
+    active_power_w: float = 0.0
 
     def local_latency_s(
         self,
@@ -120,6 +137,42 @@ class DeviceProfile:
         if is_first:
             t += self.t_input_load_s
         return t
+
+
+@dataclass(frozen=True)
+class ContentionModel:
+    """Shared-channel contention: ``transmitters`` devices time-share one
+    physical channel, so each sees ``mac_efficiency / transmitters`` of the
+    nominal serialization rate (SplitMAC-style TDMA schedule;
+    ``mac_efficiency`` < 1 models MAC/backoff overhead of sharing).
+
+    ``transmitters <= 1`` is the uncontended fast path: :meth:`apply`
+    returns the link object **unchanged** (the same object, not a copy), so
+    a contention group of size 1 is bit-identical to no contention model at
+    all — the property suite pins this."""
+
+    transmitters: int = 1
+    mac_efficiency: float = 1.0
+
+    def __post_init__(self):
+        if self.transmitters < 1:
+            raise ValueError(f"transmitters must be >= 1, got {self.transmitters}")
+        if not (0.0 < self.mac_efficiency <= 1.0):
+            raise ValueError(
+                f"mac_efficiency must be in (0, 1], got {self.mac_efficiency}")
+
+    def rate_scale(self) -> float:
+        """Fraction of the nominal rate each transmitter sees (1.0 alone)."""
+        if self.transmitters <= 1:
+            return 1.0
+        return self.mac_efficiency / self.transmitters
+
+    def apply(self, link: LinkProfile) -> LinkProfile:
+        """Effective link under this schedule; the *same* object at scale 1."""
+        scale = self.rate_scale()
+        if scale == 1.0:
+            return link
+        return replace(link, rate_bytes_per_s=link.rate_bytes_per_s * scale)
 
 
 @dataclass(frozen=True)
@@ -249,6 +302,12 @@ class SplitCostModel:
       * ``"bottleneck"`` — steady-state pipeline throughput: the slowest
                            stage (compute+transmit) bounds the system; used
                            by the TPU pipeline planner.
+
+    ``contention``: optional shared-channel schedule; when set, every
+    transmission price (latency *and* energy) uses
+    :attr:`effective_link` — the nominal link with its rate scaled by
+    :meth:`ContentionModel.rate_scale`. ``None`` (and a group of size 1)
+    is bit-identical to the historical uncontended path.
     """
 
     profile: ModelCostProfile
@@ -256,10 +315,21 @@ class SplitCostModel:
     link: LinkProfile
     objective: str = "sum"
     include_setup: bool = False  # add per-hop link setup into segment costs
+    contention: ContentionModel | None = None
 
     def __post_init__(self):
         if self.objective not in ("sum", "bottleneck"):
             raise ValueError(f"unknown objective {self.objective!r}")
+
+    @property
+    def effective_link(self) -> LinkProfile:
+        """The link every transmission price sees (contention applied).
+
+        With ``contention=None`` (or a size-1 group) this is ``self.link``
+        itself — the identical object — so the default path is bit-exact."""
+        if self.contention is None:
+            return self.link
+        return self.contention.apply(self.link)
 
     def device(self, k: int) -> DeviceProfile:
         """Device executing segment k (1-indexed). A single profile may be
@@ -292,10 +362,52 @@ class SplitCostModel:
             return INF
         tx = 0.0
         if b < L:
-            tx = self.link.transmission_latency_s(prof.boundary_act_bytes(b))
+            link = self.effective_link
+            tx = link.transmission_latency_s(prof.boundary_act_bytes(b))
             if self.include_setup:
-                tx += self.link.t_setup_s
+                tx += link.t_setup_s
         return local + tx
+
+    # -- energy channel: Joules for CostSegment(a, b, k) --------------------
+    def segment_energy_j(self, a: int, b: int, k: int, *, n_devices: int | None = None) -> float:
+        """Energy (Joules) of assigning layers [a, b] to device k:
+
+          E = P_active * T_local + P_tx * T_tx(out) + P_rx * T_rx(in)
+
+        where T_tx prices the activation leaving layer ``b`` (0 at b = L)
+        and T_rx the activation *entering* at the cut after layer ``a - 1``
+        (0 for the head device, which loads the input locally). Airtime
+        uses the contention-scaled :attr:`effective_link`; per-hop setup is
+        never charged (it is a latency, not a radio-on interval). +inf
+        mirrors :meth:`segment_cost_s` infeasibility exactly."""
+        prof = self.profile
+        L = prof.num_layers
+        if not (1 <= a <= b <= L):
+            return INF
+        dev = self.device(k)
+        local = dev.local_latency_s(
+            infer_s=prof.segment_infer_s(a, b),
+            param_bytes=prof.segment_param_bytes(a, b),
+            act_bytes=prof.boundary_act_bytes(b),
+            work_bytes=prof.segment_work_bytes(a, b),
+            is_first=(k == 1),
+        )
+        if local == INF:
+            return INF
+        link = self.effective_link
+        e = dev.active_power_w * local
+        e = e + link.tx_power_w * (
+            link.transmission_latency_s(prof.boundary_act_bytes(b)) if b < L else 0.0
+        )
+        e = e + link.rx_power_w * (
+            link.transmission_latency_s(prof.boundary_act_bytes(a - 1)) if a > 1 else 0.0
+        )
+        return e
+
+    def energy_segment_fn(self) -> Callable[[int, int, int], float]:
+        """The per-segment energy callable consumed by the scalar solvers
+        (``energy_fn=`` in :mod:`repro.core.solvers`)."""
+        return self.segment_energy_j
 
     # -- Eq. 8 over a full configuration ------------------------------------
     def end_to_end_s(self, splits: Sequence[int], *, with_overheads: bool = True) -> float:
@@ -320,7 +432,8 @@ class SplitCostModel:
         else:
             total = sum(seg_costs)
         if with_overheads:
-            total += self.link.t_setup_s + self.link.t_feedback_s
+            link = self.effective_link
+            total += link.t_setup_s + link.t_feedback_s
         return total
 
     def cost_segment_fn(self) -> Callable[[int, int, int], float]:
@@ -347,18 +460,28 @@ class SplitCostModel:
             invalid |= (seg.param_bytes + seg.work_bytes) > dev.mem_limit_bytes
         return np.where(invalid, INF, t)
 
+    def _tx_time_vector(self) -> np.ndarray:
+        """(L,) float64 raw expected airtime: ``[b-1]`` = time on the
+        (contention-scaled) link for the activation leaving layer ``b``
+        (0 at b = L). No setup — this is the radio-on interval shared by
+        the latency and energy channels."""
+        seg = self.profile.segment_arrays
+        link = self.effective_link
+        act = seg.boundary_act_bytes[1:].astype(np.float64)
+        packets = np.where(act > 0, np.ceil(act / link.mtu_bytes), 0.0)
+        tx = packets * link.packet_time_s()
+        tx[-1] = 0.0  # no transmission after the final layer
+        return tx
+
     def transmission_cost_vector(self) -> np.ndarray:
         """(L,) float64; ``[b-1]`` = link cost charged when cutting after
         layer ``b`` (0 at b = L). Identical arithmetic to
         :meth:`LinkProfile.transmission_latency_s` (+ setup when
         ``include_setup``)."""
-        seg = self.profile.segment_arrays
-        act = seg.boundary_act_bytes[1:].astype(np.float64)
-        packets = np.where(act > 0, np.ceil(act / self.link.mtu_bytes), 0.0)
-        tx = packets * self.link.packet_time_s()
+        tx = self._tx_time_vector()
         if self.include_setup:
-            tx = tx + self.link.t_setup_s  # charged on every cut (b < L)
-        tx[-1] = 0.0  # no transmission after the final layer
+            tx = tx + self.effective_link.t_setup_s  # charged on every cut (b < L)
+            tx[-1] = 0.0
         return tx
 
     def local_cost_tensor(self, n_devices: int) -> np.ndarray:
@@ -377,16 +500,59 @@ class SplitCostModel:
                 out[k - 1] = self._local_cost_matrix(self.device(k), is_first=False)
         return out
 
-    def segment_cost_tensor(self, n_devices: int) -> np.ndarray:
+    def segment_cost_tensor(
+        self, n_devices: int, channels: Sequence[str] | None = None
+    ) -> np.ndarray:
         """Dense ``C[k-1, a-1, b-1] == segment_cost_s(a, b, k)`` tensor of
         shape (N, L, L), float64, +inf at invalid/infeasible segments.
 
         Entries are bit-identical to the scalar per-call path — the
         batched solvers in :mod:`repro.core.sweep` consume these tensors
-        and certify their results against the scalar oracle."""
+        and certify their results against the scalar oracle.
+
+        ``channels``: optional sequence drawn from :data:`COST_CHANNELS`
+        (``"latency"``, ``"energy"``). When given, returns a stacked
+        ``C[ch, k-1, a-1, b-1]`` tensor of shape (len(channels), N, L, L);
+        each channel slice is bit-identical to the corresponding
+        single-channel export (``segment_cost_tensor(n)`` /
+        :meth:`energy_cost_tensor`)."""
+        if channels is not None:
+            return np.stack(
+                [self._channel_tensor(ch, n_devices) for ch in channels]
+            )
         local = self.local_cost_tensor(n_devices)
         tx = self.transmission_cost_vector()
         return local + tx[None, None, :]
+
+    def energy_cost_tensor(self, n_devices: int) -> np.ndarray:
+        """Dense ``E[k-1, a-1, b-1] == segment_energy_j(a, b, k)`` tensor
+        of shape (N, L, L) Joules, +inf exactly where the latency tensor is
+        +inf. Mirrors :meth:`segment_energy_j` operation by operation
+        (power * airtime, tx then rx) so entries are bit-identical to the
+        scalar path."""
+        L = self.profile.num_layers
+        local = self.local_cost_tensor(n_devices)
+        power = np.array(
+            [self.device(k).active_power_w for k in range(1, n_devices + 1)],
+            dtype=np.float64,
+        )
+        with np.errstate(invalid="ignore"):
+            e = np.where(np.isfinite(local), power[:, None, None] * local, INF)
+        link = self.effective_link
+        tx_t = self._tx_time_vector()  # [b-1] = airtime of the cut after b
+        rx_t = np.zeros(L, dtype=np.float64)
+        rx_t[1:] = tx_t[: L - 1]  # [a-1] = airtime of the cut entering at a
+        e = e + (link.tx_power_w * tx_t)[None, None, :]
+        e = e + (link.rx_power_w * rx_t)[None, :, None]
+        return e
+
+    def _channel_tensor(self, channel: str, n_devices: int) -> np.ndarray:
+        if channel == "latency":
+            return self.segment_cost_tensor(n_devices)
+        if channel == "energy":
+            return self.energy_cost_tensor(n_devices)
+        raise ValueError(
+            f"unknown cost channel {channel!r}; expected one of {COST_CHANNELS}")
 
 
 # ---------------------------------------------------------------------------
@@ -410,6 +576,7 @@ def rtt_breakdown(model: SplitCostModel, splits: Sequence[int]) -> RTTBreakdown:
     """Full RTT decomposition for a split configuration (Tables III-IV)."""
     prof = model.profile
     L = prof.num_layers
+    link = model.effective_link
     bounds = [0, *splits, L]
     n = len(bounds) - 1
     dev_times, tx_times = [], []
@@ -426,12 +593,12 @@ def rtt_breakdown(model: SplitCostModel, splits: Sequence[int]) -> RTTBreakdown:
             )
         )
         if b < L:
-            tx_times.append(model.link.transmission_latency_s(prof.boundary_act_bytes(b)))
+            tx_times.append(link.transmission_latency_s(prof.boundary_act_bytes(b)))
     return RTTBreakdown(
-        setup_s=model.link.t_setup_s,
+        setup_s=link.t_setup_s,
         device_s=tuple(dev_times),
         transmission_s=tuple(tx_times),
-        feedback_s=model.link.t_feedback_s,
+        feedback_s=link.t_feedback_s,
     )
 
 

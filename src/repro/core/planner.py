@@ -102,6 +102,7 @@ def plan_split(
     cost_model: SplitCostModel,
     n_devices: int,
     solver: str = "beam",
+    energy_budget: float | None = None,
     **solver_kwargs,
 ) -> SplitPlan:
     """Solve Eq. 9 for the given cost model and device count.
@@ -112,14 +113,26 @@ def plan_split(
     run on the dense cost tensor in one array pass instead of a Python
     segment loop. ``batched_dp``/``batched_greedy`` are bit-identical
     to their scalar oracles; ``batched_beam`` is bit-identical except
-    on exact floating-point cost ties (see its docstring)."""
+    on exact floating-point cost ties (see its docstring).
+
+    ``energy_budget`` caps every device's segment energy in Joules:
+    scalar solvers see over-budget segments as +inf via
+    :func:`repro.core.solvers.budget_masked` (the model's own
+    :meth:`SplitCostModel.segment_energy_j` prices them); batched
+    solvers mask the stacked tensor the same way
+    (:func:`repro.core.sweep.apply_energy_budget`)."""
     L = cost_model.profile.num_layers
     if not 1 <= n_devices <= L:
         raise ValueError(f"n_devices={n_devices} out of range for L={L}")
     if solver in SW.BATCHED_SOLVERS:
         return plan_split_batch([cost_model], n_devices, solver=solver,
+                                energy_budget=energy_budget,
                                 **solver_kwargs)[0]
     fn = S.SOLVERS[solver]
+    if energy_budget is not None:
+        solver_kwargs = dict(solver_kwargs,
+                             energy_fn=cost_model.energy_segment_fn(),
+                             energy_budget=energy_budget)
     result = fn(
         cost_model.cost_segment_fn(),
         L,
@@ -135,6 +148,7 @@ def plan_split_batch(
     n_devices: int | Sequence[int],
     solver: str = "batched_dp",
     backend: str = "numpy",
+    energy_budget: float | Sequence[float] | None = None,
     **solver_kwargs,
 ) -> list[SplitPlan]:
     """Plan many scenarios in one batched pass over stacked cost tensors.
@@ -155,7 +169,14 @@ def plan_split_batch(
     (scenario axis over the local JAX device mesh —
     :mod:`repro.core.shard`), or ``"pallas"`` (scenario-tiled Pallas
     kernel — :mod:`repro.core.pallas_dp`), for ``solver="batched_dp"``
-    only."""
+    only.
+
+    ``energy_budget``: optional per-device Joule cap — a scalar for all
+    scenarios or one per cost model. Segments whose energy (each
+    model's own :meth:`SplitCostModel.energy_cost_tensor`) exceeds the
+    budget are masked to +inf before the solve
+    (:func:`repro.core.sweep.apply_energy_budget`), so plans minimize
+    latency subject to the budget on every backend."""
     if not cost_models:
         return []
     L = cost_models[0].profile.num_layers
@@ -179,6 +200,11 @@ def plan_split_batch(
     # the solvers never read)
     C = SW.stack_cost_tensors(
         cost_models, n_devices if isinstance(n_devices, int) else n_list)
+    if energy_budget is not None:
+        E = SW.stack_cost_tensors(
+            cost_models, n_devices if isinstance(n_devices, int) else n_list,
+            channels=("energy",))[0]
+        C = SW.apply_energy_budget(C, E, energy_budget)
     ns = None if isinstance(n_devices, int) else np.asarray(n_list, np.int64)
     res = SW.solve_batched(C, solver=solver, combine=combine, backend=backend,
                            n_devices=ns, **solver_kwargs)

@@ -13,6 +13,16 @@ Solvers take an opaque ``cost_fn(a, b, k) -> seconds`` so they are testable
 against synthetic cost structures; segment costs are memoized since brute
 force revisits each O(L^2) segment many times.
 
+Every solver additionally accepts an optional **energy budget**
+(``energy_fn(a, b, k) -> Joules`` + scalar ``energy_budget``): segments
+whose energy exceeds the per-device budget are masked to +inf *before*
+memoization, so search, pruning and feasibility lookahead all operate on
+the constrained instance (see :func:`budget_masked`). Because every
+device executes exactly one segment, the per-device constraint is exactly
+this per-segment mask — ``brute_force`` on the masked instance is the
+"enumerate, filter by budget, take min latency" oracle the batched
+multi-channel solvers are property-tested against.
+
 Implementation notes vs. the paper's pseudocode:
   * Alg. 1 line 5 iterates ``next in [pos+1, L-(N-k)]`` for every k≤N. At
     the final iteration (k = N) the segment must end exactly at L
@@ -69,6 +79,42 @@ class _Memo:
     @property
     def evals(self) -> int:
         return len(self._cache)
+
+
+def budget_masked(
+    cost_fn: CostFn,
+    energy_fn: CostFn | None,
+    energy_budget: float | None,
+) -> CostFn:
+    """``cost_fn`` with +inf wherever the segment's energy exceeds the
+    per-device ``energy_budget``. With no energy model or no (finite)
+    budget the original callable is returned unchanged, so the
+    unconstrained path is bit-identical to the historical one."""
+    if energy_fn is None or energy_budget is None or energy_budget == INF:
+        return cost_fn
+
+    def fn(a: int, b: int, k: int) -> float:
+        if energy_fn(a, b, k) > energy_budget:
+            return INF
+        return cost_fn(a, b, k)
+
+    return fn
+
+
+def total_energy(energy_fn: CostFn, splits: Sequence[int], L: int) -> float:
+    """Total Joules of a full configuration (energy is additive across
+    segments; the *constraint* is per-segment — see :func:`budget_masked`)."""
+    bounds = [0, *splits, L]
+    acc = 0.0
+    for i in range(len(bounds) - 1):
+        a, b = bounds[i] + 1, bounds[i + 1]
+        if a > b:
+            return INF
+        e = energy_fn(a, b, i + 1)
+        if e == INF:
+            return INF
+        acc += e
+    return acc
 
 
 def _combine_fn(combine: str) -> Callable[[float, float], float]:
@@ -141,6 +187,9 @@ def beam_search(
     combine: str = "sum",
     feasibility_lookahead: bool = True,
     dominance: bool = True,
+    *,
+    energy_fn: CostFn | None = None,
+    energy_budget: float | None = None,
 ) -> SolverResult:
     """Beam Search for split-point optimization (Algorithm 1).
 
@@ -167,7 +216,7 @@ def beam_search(
     systematically favor short prefixes (low running max) and miss
     balanced optima."""
     t0 = time.perf_counter()
-    memo = _Memo(cost_fn)
+    memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     comb = _combine_fn(combine)
     need = _min_devices_suffix(memo, L) if feasibility_lookahead else None
 
@@ -232,11 +281,14 @@ def greedy_search(
     N: int,
     combine: str = "sum",
     feasibility_lookahead: bool = True,
+    *,
+    energy_fn: CostFn | None = None,
+    energy_budget: float | None = None,
 ) -> SolverResult:
     """Greedy Search (Algorithm 2): at step k pick the split minimizing the
     immediate segment cost (Eq. 11)."""
     t0 = time.perf_counter()
-    memo = _Memo(cost_fn)
+    memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     need = _min_devices_suffix(memo, L) if feasibility_lookahead else None
     pos = 0
     splits: list[int] = []
@@ -268,6 +320,9 @@ def first_fit_search(
     thresholds: Sequence[float] | float | None = None,
     combine: str = "sum",
     feasibility_lookahead: bool = True,
+    *,
+    energy_fn: CostFn | None = None,
+    energy_budget: float | None = None,
 ) -> SolverResult:
     """First-Fit Search (Algorithm 3): scan left-to-right and accept the
     first split whose segment cost is within the device-k threshold tau_k;
@@ -278,7 +333,7 @@ def first_fit_search(
     model does not fit one device (cost INF), the budget falls back to the
     per-device sum of longest-feasible-segment costs."""
     t0 = time.perf_counter()
-    memo = _Memo(cost_fn)
+    memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     need = _min_devices_suffix(memo, L) if feasibility_lookahead else None
     if thresholds is None:
         whole = memo(1, L, 1)
@@ -328,11 +383,14 @@ def random_fit(
     trials: int = 1,
     seed: int = 0,
     combine: str = "sum",
+    *,
+    energy_fn: CostFn | None = None,
+    energy_budget: float | None = None,
 ) -> SolverResult:
     """Random-Fit: draw ``trials`` uniformly random valid configurations and
     keep the best (the paper's Random-Fit baseline corresponds to trials=1)."""
     t0 = time.perf_counter()
-    memo = _Memo(cost_fn)
+    memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     rng = random.Random(seed)
     best: tuple[float, tuple[int, ...]] = (INF, ())
     for _ in range(max(1, trials)):
@@ -349,14 +407,21 @@ def brute_force(
     N: int,
     combine: str = "sum",
     max_candidates: int | None = None,
+    *,
+    energy_fn: CostFn | None = None,
+    energy_budget: float | None = None,
 ) -> SolverResult:
     """Brute-Force: enumerate all C(L-1, N-1) configurations (Fig. 4).
 
     ``max_candidates`` optionally caps the enumeration (the paper reports
     ~7857 s for 6 devices; the cap keeps CI runs bounded while preserving
-    exactness whenever the space is smaller than the cap)."""
+    exactness whenever the space is smaller than the cap).
+
+    With ``energy_fn``/``energy_budget`` this is the budget-filtered
+    enumeration oracle: every configuration containing an over-budget
+    segment totals +inf and can never win."""
     t0 = time.perf_counter()
-    memo = _Memo(cost_fn)
+    memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     best: tuple[float, tuple[int, ...]] = (INF, ())
     n_seen = 0
     for combo in itertools.combinations(range(1, L), N - 1):
@@ -379,6 +444,9 @@ def optimal_dp(
     L: int,
     N: int,
     combine: str = "sum",
+    *,
+    energy_fn: CostFn | None = None,
+    energy_budget: float | None = None,
 ) -> SolverResult:
     """Exact optimum via dynamic programming (beyond-paper reference).
 
@@ -389,7 +457,7 @@ def optimal_dp(
     interactive speeds (the full Brute-Force table of Fig. 4 is
     exponential; DP is quadratic)."""
     t0 = time.perf_counter()
-    memo = _Memo(cost_fn)
+    memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     comb = _combine_fn(combine)
 
     # dp[b] after k devices; parent pointers for reconstruction

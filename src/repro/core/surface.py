@@ -455,6 +455,7 @@ def build_surface(
     backend: str = "numpy",
     beam_width: int = 8,
     chunk_candidates: Sequence[int] | None = None,
+    energy_budget: float | None = None,
 ) -> DegradationSurface:
     """Precompute a :class:`DegradationSurface` with the sweep engine.
 
@@ -495,6 +496,14 @@ def build_surface(
       beam_width: Algorithm-1 width when ``solver="batched_beam"``.
       chunk_candidates: explicit activation-chunk candidates for
         :func:`optimize_chunk_size` (None → per-protocol defaults).
+      energy_budget: optional per-device Joule cap. Segments whose
+        energy (:meth:`SplitCostModel.energy_cost_tensor
+        <repro.core.latency.SplitCostModel.energy_cost_tensor>` at each
+        node's link) exceeds the budget are masked to +inf before the
+        batched solve, so every surface node minimizes latency subject
+        to the budget (:func:`repro.core.sweep.apply_energy_budget`).
+        The pallas backend falls back to its dense mode when a budget
+        is set (the fused kernel prices raw local + TX only).
 
     Returns the surface for ``n_devices`` (node decisions bit-identical
     to the legacy re-solve at every grid node on the default NumPy
@@ -503,6 +512,7 @@ def build_surface(
         cost_model, protocols, (n_devices,), pt_scale=pt_scale,
         loss_p=loss_p, solver=solver, backend=backend,
         beam_width=beam_width, chunk_candidates=chunk_candidates,
+        energy_budget=energy_budget,
     )[n_devices]
 
 
@@ -544,6 +554,7 @@ def build_surfaces(
     backend: str = "numpy",
     beam_width: int = 8,
     chunk_candidates: Sequence[int] | None = None,
+    energy_budget: float | None = None,
 ) -> dict[int, DegradationSurface]:
     """Precompute surfaces for SEVERAL fleet sizes in one batched solve.
 
@@ -602,6 +613,15 @@ def build_surfaces(
         for lk in links
     ])  # (S, L)
     C = local[None, :, :, :] + TX[:, None, None, :]
+    if energy_budget is not None:
+        # per-node energy tensors (each node's own re-fitted link) mask
+        # over-budget segments to +inf; the DP then minimizes latency
+        # subject to the budget on every backend
+        E = np.stack([
+            replace(cost_model, link=lk).energy_cost_tensor(n_max)
+            for lk in links
+        ])
+        C = SW.apply_energy_budget(C, E, energy_budget)
     kwargs = {"beam_width": beam_width} if solver == "batched_beam" else {}
 
     # ONE batched pass answers every requested fleet size
@@ -610,10 +630,12 @@ def build_surfaces(
         # all-k trick: the DP table at device k IS the k-device answer
         # (on every backend — the jax/sharded/pallas kernels return the
         # whole per-device table stack)
-        if backend == "pallas":
+        if backend == "pallas" and energy_budget is None:
             # fused kernel: the solve consumes (local, TX) directly and
             # never ships C to the device (the host-side C above only
-            # prices assembled nodes / chunk tuning)
+            # prices assembled nodes / chunk tuning). Budgeted runs
+            # take the dense branch below — the fused kernel prices
+            # raw local + TX and cannot see the energy mask.
             from repro.core import pallas_dp as _pallas
 
             all_k = _pallas.pallas_fused_optimal_dp(

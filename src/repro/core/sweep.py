@@ -71,6 +71,8 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 from repro.core.latency import (
+    COST_CHANNELS,
+    ContentionModel,
     DeviceProfile,
     LinkProfile,
     ModelCostProfile,
@@ -87,12 +89,15 @@ __all__ = [
     "ScenarioGrid",
     "SweepResult",
     "SweepRow",
+    "apply_energy_budget",
     "batched_beam_search",
     "batched_beam_search_all_k",
     "batched_greedy_search",
     "batched_greedy_search_all_k",
     "batched_optimal_dp",
     "batched_total_cost",
+    "combine_channels",
+    "solve_multi_channel",
     "stack_cost_tensors",
     "sweep",
     "sweep_scalar",
@@ -107,6 +112,7 @@ __all__ = [
 def stack_cost_tensors(
     models: Sequence[SplitCostModel],
     n_devices: int | Sequence[int],
+    channels: Sequence[str] | None = None,
 ) -> np.ndarray:
     """Stack per-scenario cost tensors into ``(S, N, L, L)``.
 
@@ -116,7 +122,14 @@ def stack_cost_tensors(
     per model: each tensor is then exported at its OWN size (so a
     model's device tuple only has to cover its own fleet) and padded
     with +inf device slices up to the largest — slices the solvers
-    never read under a matching per-scenario ``n_devices`` vector."""
+    never read under a matching per-scenario ``n_devices`` vector.
+
+    ``channels``: optional sequence drawn from
+    :data:`repro.core.latency.COST_CHANNELS`. When given, the result is
+    the stacked multi-channel tensor ``C[ch, s, k-1, a-1, b-1]`` of
+    shape (len(channels), S, N, L, L); each channel slice is
+    bit-identical to the single-channel stack of that channel (the
+    degenerate one-channel case therefore IS the historical tensor)."""
     if isinstance(n_devices, (int, np.integer)):
         n_list = [int(n_devices)] * len(models)
     else:
@@ -129,15 +142,18 @@ def stack_cost_tensors(
     n_max = max(n_list)
     tensors = []
     for m, n in zip(models, n_list):
-        t = m.segment_cost_tensor(n)
+        t = m.segment_cost_tensor(n, channels=channels)
         if n < n_max:
-            t = np.concatenate(
-                [t, np.full((n_max - n,) + t.shape[1:], INF)], axis=0)
+            pad_axis = 0 if channels is None else 1
+            pad_shape = list(t.shape)
+            pad_shape[pad_axis] = n_max - n
+            t = np.concatenate([t, np.full(tuple(pad_shape), INF)],
+                               axis=pad_axis)
         tensors.append(t)
     Ls = {t.shape[-1] for t in tensors}
     if len(Ls) != 1:
         raise ValueError(f"scenario tensors disagree on L: {sorted(Ls)}")
-    return np.stack(tensors, axis=0)
+    return np.stack(tensors, axis=0 if channels is None else 1)
 
 
 def _combine_ufunc(combine: str):
@@ -278,6 +294,11 @@ class BatchedSolverResult:
     feasible: np.ndarray  # (S,) bool
     wall_time_s: float  # one batched pass for ALL scenarios (see above)
     n_devices_s: np.ndarray | None = None  # (S,) per-scenario fleet sizes
+    # multi-channel solves (solve_multi_channel) additionally report the
+    # chosen plan's per-channel totals: channel_cost_s[ch, s] combined
+    # over channel ch's own combine mode. None on single-channel solves.
+    channels: tuple[str, ...] | None = None
+    channel_cost_s: np.ndarray | None = None  # (n_channels, S) float64
 
     @property
     def n_scenarios(self) -> int:
@@ -1084,6 +1105,147 @@ SCALAR_ORACLES: dict[str, str] = {
 
 
 # ---------------------------------------------------------------------------
+# Multi-channel solves (latency + energy; budgets and weighted combines)
+# ---------------------------------------------------------------------------
+
+
+def apply_energy_budget(
+    C: np.ndarray,
+    E: np.ndarray,
+    energy_budget: float | np.ndarray | Sequence[float] | None,
+) -> np.ndarray:
+    """Mask the latency tensor ``C`` to +inf wherever the matching energy
+    tensor ``E`` exceeds the per-device ``energy_budget``.
+
+    Because every device executes exactly one segment, a per-device
+    Joule budget is exactly a per-segment constraint — the masked tensor
+    is an ordinary ``(S, N, L, L)`` cost tensor every existing backend
+    (numpy / jax / sharded / pallas dense) solves unchanged, and the
+    frozen-row ``n_devices`` machinery applies as-is.
+
+    ``energy_budget``: ``None`` or +inf means unconstrained (``C`` is
+    returned untouched — the identical object, keeping the degenerate
+    path bit-exact); a scalar applies to every scenario; an ``(S,)``
+    vector gives each scenario its own budget. The comparison is the
+    same strict ``E > budget`` the scalar
+    :func:`repro.core.solvers.budget_masked` wrapper uses."""
+    if energy_budget is None:
+        return C
+    b = np.asarray(energy_budget, dtype=np.float64)
+    if b.ndim == 0:
+        if float(b) == INF:
+            return C
+        b = np.full(C.shape[0], float(b))
+    if b.shape != (C.shape[0],):
+        raise ValueError(
+            f"energy_budget must be None, a scalar, or shape "
+            f"({C.shape[0]},); got {b.shape}")
+    if E.shape != C.shape:
+        raise ValueError(f"energy tensor shape {E.shape} != cost tensor "
+                         f"shape {C.shape}")
+    return np.where(E > b[:, None, None, None], INF, C)
+
+
+def combine_channels(
+    C: np.ndarray, weights: Sequence[float]
+) -> np.ndarray:
+    """Scalarize a stacked multi-channel tensor ``C[ch, ...]`` into one
+    cost tensor ``sum_ch weights[ch] * C[ch]`` (weighted latency×energy
+    combine). Entries where ANY channel is non-finite scalarize to +inf
+    (a zero weight must not resurrect an infeasible segment via
+    ``0 * inf``)."""
+    w = np.asarray(weights, dtype=np.float64)
+    if w.ndim != 1 or w.shape[0] != C.shape[0]:
+        raise ValueError(f"weights must have one entry per channel "
+                         f"({C.shape[0]}), got shape {w.shape}")
+    finite = np.isfinite(C).all(axis=0)
+    with np.errstate(invalid="ignore"):
+        eff = np.tensordot(w, np.where(np.isfinite(C), C, 0.0), axes=1)
+    return np.where(finite, eff, INF)
+
+
+def solve_multi_channel(
+    C: np.ndarray,
+    channels: Sequence[str] = COST_CHANNELS,
+    solver: str = "batched_dp",
+    combine: str = "sum",
+    backend: str = "numpy",
+    n_devices: np.ndarray | Sequence[int] | int | None = None,
+    energy_budget: float | np.ndarray | Sequence[float] | None = None,
+    channel_weights: Sequence[float] | None = None,
+    channel_combines: Sequence[str] | None = None,
+    **solver_kwargs,
+) -> BatchedSolverResult:
+    """Multi-objective batched solve over a stacked channel tensor
+    ``C[ch, s, k-1, a-1, b-1]`` (see :func:`stack_cost_tensors` with
+    ``channels=``).
+
+    Modes (composable):
+      * **degenerate** — one channel, no budget, no weights: dispatches
+        to :func:`solve_batched` on ``C[0]`` untouched, so the result is
+        bit-exact (``==`` splits and costs) vs the single-channel path
+        on every backend; the property suite pins this.
+      * **budget** — ``energy_budget`` masks the latency channel to +inf
+        wherever the ``"energy"`` channel exceeds the per-device budget
+        (:func:`apply_energy_budget`), then minimizes latency: the
+        paper-adjacent "minimize latency s.t. per-device energy" mode,
+        zero-regret vs the budget-filtered scalar enumeration oracle.
+      * **weighted** — ``channel_weights`` scalarizes the channels
+        (:func:`combine_channels`) before the solve; may be combined
+        with ``energy_budget`` (mask applies after scalarization).
+
+    ``channel_combines`` gives each channel its own combine mode for the
+    reported per-channel totals (default: the solve's ``combine`` for
+    the latency channel, ``"sum"`` for energy — Joules add across
+    devices even under a bottleneck latency objective). The result's
+    ``channel_cost_s[ch, s]`` reports channel ``ch``'s total for the
+    CHOSEN plan (not a per-channel optimum)."""
+    C = np.asarray(C, dtype=np.float64)
+    if C.ndim != 5:
+        raise ValueError(f"C must be (n_channels, S, N, L, L), got {C.shape}")
+    channels = tuple(channels)
+    if C.shape[0] != len(channels):
+        raise ValueError(f"C has {C.shape[0]} channel slices for "
+                         f"{len(channels)} channel names {channels!r}")
+    if solver_kwargs.get("return_all_k"):
+        raise ValueError("solve_multi_channel does not support return_all_k")
+    if len(channels) == 1 and energy_budget is None and channel_weights is None:
+        return solve_batched(C[0], solver=solver, combine=combine,
+                             backend=backend, n_devices=n_devices,
+                             **solver_kwargs)
+    try:
+        lat = channels.index("latency")
+    except ValueError:
+        raise ValueError(f"channels {channels!r} lack a 'latency' entry") \
+            from None
+    if channel_weights is not None:
+        C_eff = combine_channels(C, channel_weights)
+    else:
+        C_eff = C[lat]
+    if energy_budget is not None:
+        try:
+            en = channels.index("energy")
+        except ValueError:
+            raise ValueError(f"energy_budget given but channels {channels!r} "
+                             f"lack an 'energy' entry") from None
+        C_eff = apply_energy_budget(C_eff, C[en], energy_budget)
+    res = solve_batched(C_eff, solver=solver, combine=combine,
+                        backend=backend, n_devices=n_devices, **solver_kwargs)
+    if channel_combines is None:
+        channel_combines = tuple(
+            combine if ch == "latency" else "sum" for ch in channels)
+    safe_splits = np.maximum(res.splits, 1)
+    per_ch = np.stack([
+        np.where(res.feasible,
+                 _per_scenario_total_cost(C[i], safe_splits, cmb,
+                                          res.n_devices_s),
+                 INF)
+        for i, cmb in enumerate(channel_combines)
+    ])
+    return replace(res, channels=channels, channel_cost_s=per_ch)
+
+
+# ---------------------------------------------------------------------------
 # ScenarioGrid — the fleet-sweep API
 # ---------------------------------------------------------------------------
 
@@ -1094,7 +1256,12 @@ class Scenario:
 
     ``mix`` names the device mix this scenario's fleet draws from
     (``None`` = the grid's shared ``devices`` tuple, the paper's
-    homogeneous ESP32 fleet)."""
+    homogeneous ESP32 fleet).
+
+    ``contention`` is the number of devices time-sharing the scenario's
+    physical channel (1 = uncontended, the historical bit-exact path);
+    ``energy_budget`` the per-device Joule cap (``None`` =
+    unconstrained)."""
 
     model: str
     protocol: str
@@ -1102,12 +1269,16 @@ class Scenario:
     loss_p: float | None  # None -> protocol default
     rate_scale: float  # multiplier on the link serialization rate
     mix: str | None = None  # device-mix name (None -> grid.devices)
+    contention: int = 1  # concurrent transmitters sharing the channel
+    energy_budget: float | None = None  # per-device Joule cap
 
     def describe(self) -> str:
         loss = "base" if self.loss_p is None else f"p={self.loss_p:g}"
         mix = "" if self.mix is None else f" mix={self.mix}"
+        con = "" if self.contention <= 1 else f" tx={self.contention}"
+        eb = "" if self.energy_budget is None else f" E<={self.energy_budget:g}J"
         return (f"{self.model}/{self.protocol} N={self.n_devices} "
-                f"{loss} rate×{self.rate_scale:g}{mix}")
+                f"{loss} rate×{self.rate_scale:g}{mix}{con}{eb}")
 
 
 @dataclass(frozen=True)
@@ -1129,7 +1300,16 @@ class ScenarioGrid:
     — scenarios then always carry a mix. Mixed fleets batch in the same
     tensor pass as homogeneous ones: :func:`sweep` gathers each
     scenario's per-device cost matrices from a per-profile bank instead
-    of rebuilding them per scenario."""
+    of rebuilding them per scenario.
+
+    ``contention_groups`` adds a shared-channel axis: each entry is a
+    number of devices time-sharing one physical channel (every
+    transmitter then sees ``mac_efficiency / group`` of the nominal rate
+    — see :class:`repro.core.latency.ContentionModel`; group 1 is the
+    uncontended bit-exact default). ``energy_budgets`` adds a per-device
+    Joule-cap axis (``None`` = unconstrained): budgeted scenarios
+    minimize latency over the splits whose every segment fits the
+    budget."""
 
     models: Mapping[str, ModelCostProfile]
     links: Mapping[str, LinkProfile]
@@ -1139,12 +1319,19 @@ class ScenarioGrid:
     devices: tuple[DeviceProfile, ...] = ()
     objective: str = "sum"
     device_mixes: Mapping[str, tuple[DeviceProfile, ...]] | None = None
+    contention_groups: tuple[int, ...] = (1,)
+    energy_budgets: tuple[float | None, ...] = (None,)
+    mac_efficiency: float = 1.0  # shared-channel MAC efficiency (see above)
 
     def __post_init__(self):
         if not self.devices and not self.device_mixes:
             raise ValueError("ScenarioGrid requires devices or device_mixes")
-        for field_name in ("n_devices", "loss_p", "rate_scale"):
+        for field_name in ("n_devices", "loss_p", "rate_scale",
+                           "contention_groups", "energy_budgets"):
             object.__setattr__(self, field_name, tuple(getattr(self, field_name)))
+        for g in self.contention_groups:
+            if g < 1:
+                raise ValueError(f"contention group must be >= 1, got {g}")
         object.__setattr__(self, "models", dict(self.models))
         object.__setattr__(self, "links", dict(self.links))
         if self.device_mixes is not None:
@@ -1177,20 +1364,23 @@ class ScenarioGrid:
     def size(self) -> int:
         return (len(self.models) * len(self.links) * len(self.n_devices)
                 * len(self.loss_p) * len(self.rate_scale)
-                * len(self.mix_names))
+                * len(self.mix_names) * len(self.contention_groups)
+                * len(self.energy_budgets))
 
     def scenarios(self) -> list[Scenario]:
         """Deterministic enumeration order: model-major, then device mix,
-        then fleet size, then protocol × loss × rate (the link axes
-        batch densely)."""
+        then fleet size, then protocol × loss × rate × contention ×
+        energy budget (the link axes batch densely)."""
         return [
-            Scenario(m, p, n, lp, rs, mix=mx)
+            Scenario(m, p, n, lp, rs, mix=mx, contention=cg, energy_budget=eb)
             for m in self.models
             for mx in self.mix_names
             for n in self.n_devices
             for p in self.links
             for lp in self.loss_p
             for rs in self.rate_scale
+            for cg in self.contention_groups
+            for eb in self.energy_budgets
         ]
 
     def link_variant(self, sc: Scenario) -> LinkProfile:
@@ -1205,6 +1395,21 @@ class ScenarioGrid:
             changes["rate_bytes_per_s"] = link.rate_bytes_per_s * sc.rate_scale
         return replace(link, **changes) if changes else link
 
+    def contention_model(self, sc: Scenario) -> ContentionModel | None:
+        """The scenario's shared-channel schedule (``None`` for the
+        uncontended group of 1 — the bit-exact historical path)."""
+        if sc.contention <= 1:
+            return None
+        return ContentionModel(transmitters=sc.contention,
+                               mac_efficiency=self.mac_efficiency)
+
+    def effective_link(self, sc: Scenario) -> LinkProfile:
+        """:meth:`link_variant` with the scenario's contention applied —
+        the link every transmission price (batched and scalar) sees."""
+        link = self.link_variant(sc)
+        con = self.contention_model(sc)
+        return link if con is None else con.apply(link)
+
     def devices_for(self, sc: Scenario) -> tuple[DeviceProfile, ...]:
         """The device-profile tuple scenario ``sc``'s fleet runs on
         (its named mix, or the grid's shared ``devices``)."""
@@ -1217,6 +1422,7 @@ class ScenarioGrid:
         return SplitCostModel(
             profile=self.models[sc.model], devices=self.devices_for(sc),
             link=self.link_variant(sc), objective=self.objective,
+            contention=self.contention_model(sc),
         )
 
     def degradation_surface(self, model: str | None = None,
@@ -1324,9 +1530,9 @@ class SweepResult:
 
     def to_csv(self) -> str:
         cols = ["model", "protocol", "n_devices", "loss_p", "rate_scale",
-                "mix", "feasible", "splits", "objective_cost_s",
-                "total_latency_s", "device_s", "transmission_s",
-                "solver_wall_s"]
+                "mix", "contention", "energy_budget", "feasible", "splits",
+                "objective_cost_s", "total_latency_s", "device_s",
+                "transmission_s", "solver_wall_s"]
         lines = [",".join(cols)]
         for d in self.to_dicts():
             d["splits"] = "|".join(str(x) for x in d["splits"])
@@ -1338,13 +1544,15 @@ def _group_tx_vectors(
     grid: ScenarioGrid, profile: ModelCostProfile, group: list[Scenario]
 ) -> np.ndarray:
     """(S_g, L) transmission-cost vectors, amortizing packet counts per
-    protocol (K depends only on MTU) against per-scenario packet times."""
+    protocol (K depends only on MTU) against per-scenario packet times.
+    Airtime is priced on each scenario's contention-scaled effective
+    link, matching the scalar oracle's :attr:`SplitCostModel.effective_link`."""
     L = profile.num_layers
     act = profile.segment_arrays.boundary_act_bytes[1:].astype(np.float64)
     packets_by_mtu: dict[int, np.ndarray] = {}
     out = np.empty((len(group), L))
     for i, sc in enumerate(group):
-        link = grid.link_variant(sc)
+        link = grid.effective_link(sc)
         K = packets_by_mtu.get(link.mtu_bytes)
         if K is None:
             K = np.where(act > 0, np.ceil(act / link.mtu_bytes), 0.0)
@@ -1353,6 +1561,38 @@ def _group_tx_vectors(
         tx[-1] = 0.0
         out[i] = tx
     return out
+
+
+def _group_energy_tensor(
+    grid: ScenarioGrid,
+    group: list[Scenario],
+    bank: np.ndarray,
+    bank_rows: Mapping[tuple[DeviceProfile, bool], int],
+    bank_idx: np.ndarray,
+    TX: np.ndarray,
+) -> np.ndarray:
+    """(S_g, N_max, L, L) energy tensor for one sweep group, assembled
+    from the SAME profile bank and transmission vectors as the latency
+    tensor — entry ``[gi, k-1, a-1, b-1]`` is bit-identical to the
+    scenario's own :meth:`SplitCostModel.energy_cost_tensor` (same
+    power × airtime products in the same order) for every live device
+    slot ``k <= n_s``; filler slots beyond a scenario's fleet size carry
+    bank-row-0 garbage the solvers never read, like the latency tensor."""
+    L = TX.shape[1]
+    row_power = np.zeros(len(bank), dtype=np.float64)
+    for (dev, _is_first), row in bank_rows.items():
+        row_power[row] = dev.active_power_w
+    with np.errstate(invalid="ignore"):
+        e_bank = np.where(np.isfinite(bank),
+                          row_power[:, None, None] * bank, INF)
+    E = e_bank[bank_idx]  # (S_g, N_max, L, L)
+    rx_t = np.zeros_like(TX)
+    rx_t[:, 1:] = TX[:, : L - 1]  # [a-1] = airtime of the cut entering at a
+    tx_p = np.array([grid.effective_link(sc).tx_power_w for sc in group])
+    rx_p = np.array([grid.effective_link(sc).rx_power_w for sc in group])
+    E = E + (tx_p[:, None] * TX)[:, None, None, :]
+    E = E + (rx_p[:, None] * rx_t)[:, None, :, None]
+    return E
 
 
 def sweep(
@@ -1456,7 +1696,11 @@ def sweep(
             # n_devices vector masks every k > n_s)
         TX = _group_tx_vectors(grid, profile, group)  # (S_g, L)
         bank = np.stack(bank_mats)
-        if backend == "pallas":
+        budgets = np.array(
+            [INF if sc.energy_budget is None else float(sc.energy_budget)
+             for sc in group])
+        budgeted = bool(np.isfinite(budgets).any())
+        if backend == "pallas" and not budgeted:
             # fused path: the kernel builds C[s,k] = bank[idx] + TX[s]
             # inside each reduction step — the (S_g, N, L, L) tensor is
             # never materialized, on host or device
@@ -1474,6 +1718,13 @@ def sweep(
             else:
                 C = bank[bank_idx]  # (S_g, N_max, L, L) gather
                 C += TX[:, None, None, :]
+            if budgeted:
+                # energy budgets mask the latency tensor before dispatch,
+                # so every backend — pallas included, in dense mode on
+                # the materialized masked tensor — solves unchanged
+                E = _group_energy_tensor(grid, group, bank, bank_rows,
+                                         bank_idx, TX)
+                C = apply_energy_budget(C, E, budgets)
             build_time += time.perf_counter() - t0
 
             kwargs = {"beam_width": beam_width} if solver == "batched_beam" else {}
@@ -1487,7 +1738,7 @@ def sweep(
             n = sc.n_devices
             splits_t = res.splits_tuple(gi)
             feasible = bool(res.feasible[gi])
-            link = grid.link_variant(sc)
+            link = grid.effective_link(sc)
             if splits_t or n == 1:
                 bounds = [0, *splits_t, L] if feasible else None
             else:
@@ -1542,11 +1793,18 @@ def sweep_scalar(grid: ScenarioGrid, solver: str = "optimal_dp") -> SweepResult:
         L = m.profile.num_layers
         fn = m.cost_segment_fn()
         build_time += time.perf_counter() - t0
-        res = S.SOLVERS[solver](fn, L, sc.n_devices, combine=combine)
+        kwargs = {}
+        if sc.energy_budget is not None:
+            # the scalar solvers mask cost_fn by the same strict
+            # per-segment comparison the batched path applies to the
+            # stacked tensors, so parity holds under budgets too
+            kwargs = dict(energy_fn=m.energy_segment_fn(),
+                          energy_budget=sc.energy_budget)
+        res = S.SOLVERS[solver](fn, L, sc.n_devices, combine=combine, **kwargs)
         solve_time += res.wall_time_s
         feasible = res.feasible
         if feasible:
-            link = grid.link_variant(sc)
+            link = grid.effective_link(sc)
             bounds = [0, *res.splits, L]
             tx_total = sum(
                 link.transmission_latency_s(m.profile.boundary_act_bytes(b))

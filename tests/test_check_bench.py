@@ -46,6 +46,7 @@ def good_sweep():
     _set(r, "pallas.interpret", True)
     _set(r, "pallas.node_identical_to_jax", False)  # informational
     _set(r, "pallas.n_tie_divergences", 33)
+    _set(r, "multichannel.speedup_x", 90.0)
     return r
 
 
@@ -124,6 +125,55 @@ class TestCheckSweep:
         _set(r, "speedup_x", "fast")
         fails = CB.check_sweep(r, good_sweep(), 3.0)
         assert any("not numeric" in f for f in fails)
+
+
+class TestCheckSweepMultichannel:
+    """Doctored multichannel sections must each fail the gate."""
+
+    def test_missing_multichannel_section_fails(self):
+        r = good_sweep()
+        del r["multichannel"]
+        fails = CB.check_sweep(r, good_sweep(), 3.0)
+        assert any("multichannel.speedup_x" in f for f in fails)
+        assert any("multichannel.parity_ok" in f for f in fails)
+        assert any("multichannel.budget_respected" in f for f in fails)
+
+    def test_regressed_multichannel_ratio_fails(self):
+        base = good_sweep()
+        r = good_sweep()
+        _set(r, "multichannel.speedup_x", 90.0 / 2)  # within 3x: noise
+        assert CB.check_sweep(r, base, 3.0) == []
+        _set(r, "multichannel.speedup_x", 90.0 / 4)  # beyond 3x: collapse
+        fails = CB.check_sweep(r, base, 3.0)
+        assert any("multichannel.speedup_x" in f and "collapsed" in f
+                   for f in fails)
+
+    def test_core_speedup_regression_still_caught_alongside(self):
+        # the new ratio must not mask the original one
+        base = good_sweep()
+        r = good_sweep()
+        _set(r, "speedup_x", 90.0 / 4)
+        fails = CB.check_sweep(r, base, 3.0)
+        assert any(f.startswith("sweep: speedup_x") for f in fails)
+        assert not any("multichannel" in f for f in fails)
+
+    @pytest.mark.parametrize("flag", ["multichannel.parity_ok",
+                                      "multichannel.degenerate_bit_exact",
+                                      "multichannel.budget_respected"])
+    def test_false_multichannel_flag_fails(self, flag):
+        r = good_sweep()
+        _set(r, flag, False)
+        fails = CB.check_sweep(r, good_sweep(), 3.0)
+        assert any(flag in f for f in fails)
+
+    def test_committed_baseline_has_multichannel_section(self):
+        with open(ROOT / "BENCH_sweep.json") as f:
+            rep = json.load(f)
+        mc = rep["multichannel"]
+        assert mc["parity_ok"] is True
+        assert mc["degenerate_bit_exact"] is True
+        assert mc["budget_respected"] is True
+        assert mc["n_budgeted"] > 0
 
 
 class TestCheckSurface:

@@ -1,0 +1,365 @@
+"""Multi-channel cost-contract property suite (contention + energy).
+
+Three families of properties pin the PR-8 contract:
+
+* **Degenerate bit-exactness** — ``solve_multi_channel`` with one
+  channel, no budget, and no weights must return bit-identical (``==``
+  on splits AND costs) results to ``solve_batched`` on the raw latency
+  tensor, for every batched solver, both combine modes, per-scenario
+  fleet-size vectors, and every DP backend (numpy / jax / sharded /
+  pallas).
+* **Budget zero-regret** — the budget-constrained batched solve must
+  match the brute-force scalar oracle (enumerate all splits, drop any
+  with an over-budget segment, take the latency min) on every random
+  draw up to L=8, N=4: same feasibility, same cost, and a chosen plan
+  whose every segment is within budget.
+* **Metamorphic invariance** — scaling all energy costs and the budget
+  by the same power-of-two factor leaves the chosen plan unchanged
+  (power-of-two so the strict ``E > budget`` comparison is float-exact
+  under scaling).
+
+Plus contention regressions: a 2-transmitter shared channel never
+prices cheaper than the same link uncontended, and a contention group
+of size 1 is bit-identical to the uncontended path (the default-path
+refactor guard).
+
+Strategy arguments are keyword-bound in every ``@given`` (the vendored
+minihypothesis shim binds positional strategies to the RIGHTMOST
+parameters; keyword binding is explicit and reorder-proof).
+"""
+
+import math
+from dataclasses import replace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import solvers as S
+from repro.core import sweep as SW
+from repro.core.latency import COST_CHANNELS, ContentionModel
+from repro.core.profiles import ESP32, PROTOCOLS, paper_cost_model
+
+INF = float("inf")
+
+
+def tensor_cost_fn(T, L):
+    """Scalar cost fn reading dense ``T[k-1, a-1, b-1]`` (the oracle's
+    view of the exact same numbers the batched solver sees)."""
+
+    def fn(a, b, k):
+        if not (1 <= a <= b <= L) or k < 1 or k > T.shape[0]:
+            return INF
+        return float(T[k - 1, a - 1, b - 1])
+
+    return fn
+
+
+def energized_model(tx_power_w=0.24, rx_power_w=0.12, active_power_w=0.5):
+    """The paper model with non-zero powers so the energy channel is
+    live (defaults are 0.0 — energy is opt-in)."""
+    m = paper_cost_model("mobilenet_v2", "esp_now")
+    return replace(
+        m,
+        link=replace(m.link, tx_power_w=tx_power_w, rx_power_w=rx_power_w),
+        devices=tuple(replace(d, active_power_w=active_power_w)
+                      for d in m.devices),
+    )
+
+
+@st.composite
+def channel_tensors(draw, max_L=8, max_N=4, max_scenarios=4):
+    """Random (2, S, N, L, L) latency+energy stacks with sprinkled
+    infeasibility on the latency channel (mirroring mem-limit masking)
+    and strictly positive energies."""
+    L = draw(st.integers(3, max_L))
+    N = draw(st.integers(1, min(max_N, L)))
+    Sn = draw(st.integers(1, max_scenarios))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    lat = rng.uniform(0.01, 100.0, size=(Sn, N, L, L))
+    en = rng.uniform(0.001, 10.0, size=(Sn, N, L, L))
+    lat[:, :, np.tril_indices(L, -1)[0], np.tril_indices(L, -1)[1]] = INF
+    # sprinkle infeasibility on ~10% of the upper triangle
+    mask = rng.rand(Sn, N, L, L) < 0.1
+    lat = np.where(mask, INF, lat)
+    return np.stack([lat, en]), L, N, Sn, seed
+
+
+class TestDegenerateBitExactness:
+    """solve_multi_channel's 1-channel path must be the identity."""
+
+    @given(data=st.data())
+    @settings(max_examples=25)
+    def test_numpy_all_solvers_all_combines(self, data):
+        C, L, N, Sn, seed = data.draw(channel_tensors())
+        rng = np.random.RandomState(seed + 1)
+        ns = rng.randint(1, N + 1, size=Sn).astype(np.int64)
+        solver = data.draw(st.sampled_from(sorted(SW.BATCHED_SOLVERS)))
+        combine = data.draw(st.sampled_from(("sum", "max")))
+        use_ns = data.draw(st.booleans())
+        kw = {"n_devices": ns} if use_ns else {}
+        ref = SW.solve_batched(C[0], solver=solver, combine=combine, **kw)
+        got = SW.solve_multi_channel(
+            C[:1], channels=("latency",), solver=solver, combine=combine,
+            **kw)
+        assert np.array_equal(got.splits, ref.splits)
+        assert np.array_equal(got.cost_s, ref.cost_s)  # bit-exact, == not allclose
+        assert np.array_equal(got.feasible, ref.feasible)
+
+    @pytest.mark.parametrize("backend", ["numpy", "jax", "sharded", "pallas"])
+    @pytest.mark.parametrize("combine", ["sum", "max"])
+    def test_every_backend_both_combines(self, backend, combine):
+        rng = np.random.RandomState(7)
+        Sn, N, L = 5, 3, 9
+        lat = rng.uniform(0.01, 100.0, size=(Sn, N, L, L))
+        lat[:, :, np.tril_indices(L, -1)[0], np.tril_indices(L, -1)[1]] = INF
+        C = np.stack([lat, rng.uniform(0.001, 10.0, size=(Sn, N, L, L))])
+        ns = rng.randint(1, N + 1, size=Sn).astype(np.int64)
+        for kw in ({}, {"n_devices": ns}):
+            ref = SW.solve_batched(C[0], combine=combine, backend=backend,
+                                   **kw)
+            got = SW.solve_multi_channel(C[:1], channels=("latency",),
+                                         combine=combine, backend=backend,
+                                         **kw)
+            assert np.array_equal(got.splits, ref.splits)
+            assert np.array_equal(got.cost_s, ref.cost_s)
+            assert np.array_equal(got.feasible, ref.feasible)
+
+    def test_model_stack_degenerate_matches_plain_path(self):
+        m = energized_model()
+        C = SW.stack_cost_tensors([m], 3, channels=COST_CHANNELS)
+        ref = SW.solve_batched(m.segment_cost_tensor(3)[None])
+        got = SW.solve_multi_channel(C[:1], channels=("latency",))
+        assert np.array_equal(got.splits, ref.splits)
+        assert np.array_equal(got.cost_s, ref.cost_s)
+
+
+class TestEnergyScalarTensorParity:
+    """energy_cost_tensor entries == segment_energy_j, bit-for-bit."""
+
+    @given(data=st.data())
+    @settings(max_examples=10)
+    def test_tensor_matches_scalar_everywhere(self, data):
+        m = energized_model(
+            tx_power_w=data.draw(st.floats(0.0, 2.0, allow_nan=False,
+                                           allow_infinity=False)),
+            rx_power_w=data.draw(st.floats(0.0, 2.0, allow_nan=False,
+                                           allow_infinity=False)),
+            active_power_w=data.draw(st.floats(0.0, 5.0, allow_nan=False,
+                                               allow_infinity=False)),
+        )
+        N = data.draw(st.integers(1, 3))
+        L = m.profile.num_layers
+        E = m.energy_cost_tensor(N)
+        for k in range(1, N + 1):
+            for a in range(1, L + 1):
+                for b in range(a, L + 1):
+                    scalar = m.segment_energy_j(a, b, k)
+                    tensor = E[k - 1, a - 1, b - 1]
+                    assert scalar == tensor or (
+                        math.isinf(scalar) and math.isinf(tensor))
+
+
+class TestBudgetZeroRegret:
+    """Budget-constrained batched solve == brute-force filtered oracle."""
+
+    @given(data=st.data())
+    @settings(max_examples=25)
+    def test_matches_brute_force_oracle(self, data):
+        C, L, N, Sn, seed = data.draw(channel_tensors(max_L=8, max_N=4))
+        # budgets spanning infeasible -> slack regimes
+        q = data.draw(st.sampled_from((5.0, 30.0, 60.0, 90.0, 100.0)))
+        budget = float(np.percentile(C[1], q))
+        res = SW.solve_multi_channel(C, energy_budget=budget)
+        for s in range(Sn):
+            fn = tensor_cost_fn(C[0, s], L)
+            efn = tensor_cost_fn(C[1, s], L)
+            oracle = S.brute_force(fn, L, N, combine="sum",
+                                   energy_fn=efn, energy_budget=budget)
+            feasible = math.isfinite(oracle.cost_s)
+            assert bool(res.feasible[s]) == feasible
+            if not feasible:
+                continue
+            assert res.cost_s[s] == oracle.cost_s  # zero regret, bitwise
+            splits = tuple(int(x) for x in res.splits[s][:N - 1])
+            bounds = (0,) + splits + (L,)
+            for k in range(N):
+                e = efn(bounds[k] + 1, bounds[k + 1], k + 1)
+                assert e <= budget
+            assert res.channel_cost_s is not None
+            total_e = sum(efn(bounds[k] + 1, bounds[k + 1], k + 1)
+                          for k in range(N))
+            assert math.isclose(res.channel_cost_s[1][s], total_e,
+                                rel_tol=1e-12)
+
+    @given(data=st.data())
+    @settings(max_examples=15)
+    def test_scalar_solvers_respect_budget(self, data):
+        C, L, N, Sn, seed = data.draw(channel_tensors(max_L=7, max_N=3,
+                                                      max_scenarios=1))
+        budget = float(np.percentile(C[1], 50.0))
+        fn = tensor_cost_fn(C[0, 0], L)
+        efn = tensor_cost_fn(C[1, 0], L)
+        oracle = S.brute_force(fn, L, N, combine="sum",
+                               energy_fn=efn, energy_budget=budget)
+        dp = S.optimal_dp(fn, L, N, combine="sum",
+                          energy_fn=efn, energy_budget=budget)
+        assert dp.cost_s == oracle.cost_s
+        if math.isfinite(oracle.cost_s):
+            assert S.total_energy(efn, dp.splits, L) <= N * budget
+        for name in ("beam", "greedy", "first_fit"):
+            r = S.SOLVERS[name](fn, L, N, combine="sum",
+                                energy_fn=efn, energy_budget=budget)
+            if math.isfinite(r.cost_s):
+                # heuristics may be suboptimal but never over budget
+                bounds = (0,) + tuple(r.splits) + (L,)
+                for k in range(N):
+                    assert efn(bounds[k] + 1, bounds[k + 1], k + 1) <= budget
+                assert r.cost_s >= oracle.cost_s
+
+
+class TestMetamorphicScaling:
+    """Scaling energies and budget together never changes the plan."""
+
+    @given(data=st.data())
+    @settings(max_examples=25)
+    def test_power_of_two_energy_scaling_is_invariant(self, data):
+        C, L, N, Sn, seed = data.draw(channel_tensors())
+        budget = float(np.percentile(C[1], 60.0))
+        factor = data.draw(st.sampled_from((0.25, 0.5, 2.0, 8.0, 64.0)))
+        res = SW.solve_multi_channel(C, energy_budget=budget)
+        C2 = np.stack([C[0], C[1] * factor])
+        res2 = SW.solve_multi_channel(C2, energy_budget=budget * factor)
+        assert np.array_equal(res.splits, res2.splits)
+        assert np.array_equal(res.cost_s, res2.cost_s)
+        assert np.array_equal(res.feasible, res2.feasible)
+
+    def test_model_level_scaling_is_invariant(self):
+        m = energized_model()
+        E = m.energy_cost_tensor(3)
+        budget = float(np.percentile(E[np.isfinite(E)], 60.0))
+        C = SW.stack_cost_tensors([m], 3, channels=COST_CHANNELS)
+        res = SW.solve_multi_channel(C, energy_budget=budget)
+        s = 8.0  # power of two: float-exact under scaling
+        m2 = replace(
+            m,
+            link=replace(m.link, tx_power_w=m.link.tx_power_w * s,
+                         rx_power_w=m.link.rx_power_w * s),
+            devices=tuple(replace(d, active_power_w=d.active_power_w * s)
+                          for d in m.devices),
+        )
+        C2 = SW.stack_cost_tensors([m2], 3, channels=COST_CHANNELS)
+        res2 = SW.solve_multi_channel(C2, energy_budget=budget * s)
+        assert np.array_equal(res.splits, res2.splits)
+        assert np.array_equal(res.cost_s, res2.cost_s)
+
+
+class TestContentionRegression:
+    """Shared-channel pricing: monotone in transmitters, identity at 1."""
+
+    def test_two_transmitters_never_cheaper(self):
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        shared = replace(m, contention=ContentionModel(transmitters=2))
+        tx0 = m.transmission_cost_vector()
+        tx2 = shared.transmission_cost_vector()
+        assert (tx2 >= tx0).all()
+        for n in (1, 2, 3):
+            r0 = S.optimal_dp(m.cost_segment_fn(), m.profile.num_layers, n)
+            r2 = S.optimal_dp(shared.cost_segment_fn(),
+                              m.profile.num_layers, n)
+            assert r2.cost_s >= r0.cost_s
+
+    def test_more_transmitters_monotone(self):
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        prev = S.optimal_dp(m.cost_segment_fn(), m.profile.num_layers, 3)
+        for tx in (2, 4, 8):
+            cur = S.optimal_dp(
+                replace(m, contention=ContentionModel(transmitters=tx))
+                .cost_segment_fn(),
+                m.profile.num_layers, 3)
+            assert cur.cost_s >= prev.cost_s
+            prev = cur
+
+    def test_group_of_one_is_bit_identical(self):
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        solo = replace(m, contention=ContentionModel(transmitters=1))
+        assert solo.effective_link is m.link  # the SAME object
+        assert np.array_equal(solo.transmission_cost_vector(),
+                              m.transmission_cost_vector())
+        assert np.array_equal(solo.segment_cost_tensor(3),
+                              m.segment_cost_tensor(3))
+        L = m.profile.num_layers
+        for a, b, k in ((1, L, 1), (1, 5, 1), (6, L, 2)):
+            assert solo.segment_cost_s(a, b, k) == m.segment_cost_s(a, b, k)
+            assert solo.segment_energy_j(a, b, k) == m.segment_energy_j(a, b, k)
+
+    def test_mac_efficiency_bounds(self):
+        with pytest.raises(ValueError):
+            ContentionModel(transmitters=0)
+        with pytest.raises(ValueError):
+            ContentionModel(transmitters=2, mac_efficiency=0.0)
+        with pytest.raises(ValueError):
+            ContentionModel(transmitters=2, mac_efficiency=1.5)
+        assert ContentionModel(transmitters=4,
+                               mac_efficiency=0.8).rate_scale() == 0.2
+
+    def test_grid_contention_axis(self):
+        grid = SW.ScenarioGrid(
+            models={"mobilenet_v2":
+                    paper_cost_model("mobilenet_v2", "esp_now").profile},
+            links={"esp_now": PROTOCOLS["esp_now"]},
+            n_devices=(2,),
+            devices=(ESP32,),
+            contention_groups=(1, 2),
+        )
+        assert grid.size == 2
+        res = SW.sweep(grid)
+        by_cg = {r.scenario.contention: r for r in res.rows}
+        assert by_cg[2].objective_cost_s >= by_cg[1].objective_cost_s
+        # cg=1 rows are bit-identical to a grid without the axis
+        base = SW.sweep(SW.ScenarioGrid(
+            models={"mobilenet_v2":
+                    paper_cost_model("mobilenet_v2", "esp_now").profile},
+            links={"esp_now": PROTOCOLS["esp_now"]},
+            n_devices=(2,),
+            devices=(ESP32,),
+        ))
+        assert by_cg[1].splits == base.rows[0].splits
+        assert by_cg[1].objective_cost_s == base.rows[0].objective_cost_s
+
+
+class TestGridEnergyBudgetAxis:
+    """ScenarioGrid energy_budgets axis: batched == scalar oracle."""
+
+    def test_budgeted_sweep_matches_scalar(self):
+        m = energized_model()
+        E = m.energy_cost_tensor(3)
+        tight = float(np.percentile(E[np.isfinite(E)], 60.0))
+        grid = SW.ScenarioGrid(
+            models={"mobilenet_v2": m.profile},
+            links={"esp_now": replace(PROTOCOLS["esp_now"],
+                                      tx_power_w=m.link.tx_power_w,
+                                      rx_power_w=m.link.rx_power_w)},
+            n_devices=(2, 3),
+            devices=m.devices,
+            energy_budgets=(None, tight),
+        )
+        assert grid.size == 4
+        batched = SW.sweep(grid)
+        scalar = SW.sweep_scalar(grid, solver="optimal_dp")
+        for rb, rs in zip(batched.rows, scalar.rows):
+            assert rb.scenario.energy_budget == rs.scenario.energy_budget
+            assert rb.splits == rs.splits
+            assert rb.objective_cost_s == rs.objective_cost_s
+        # the budget must bind for at least one scenario
+        by_budget = {}
+        for r in batched.rows:
+            key = (r.scenario.n_devices, r.scenario.energy_budget is None)
+            by_budget[key] = r
+        assert any(
+            by_budget[(n, False)].objective_cost_s
+            > by_budget[(n, True)].objective_cost_s
+            for n in (2, 3)
+        ) or any(not by_budget[(n, False)].feasible for n in (2, 3))

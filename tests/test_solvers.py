@@ -210,3 +210,70 @@ class TestComplexity:
         r = S.brute_force(fn, L, N)
         assert r.cost_s == pytest.approx(3.0)
         assert math.comb(L - 1, N - 1) == 36  # sanity of the formula itself
+
+
+class TestEnergyBudget:
+    """Scalar budget filtering: budget_masked / total_energy + the
+    energy_fn=/energy_budget= kwargs every solver grew (PR 8)."""
+
+    def test_budget_masked_identity_when_unconstrained(self):
+        fn = table_cost_fn({(1, 3): 5.0})
+        assert S.budget_masked(fn, None, None) is fn
+        assert S.budget_masked(fn, lambda a, b, k: 1.0, None) is fn
+        assert S.budget_masked(fn, None, 2.0) is fn
+        assert S.budget_masked(fn, lambda a, b, k: 1.0, INF) is fn
+
+    def test_budget_masked_strict_comparison(self):
+        fn = table_cost_fn({(1, 2): 5.0, (3, 4): 6.0})
+        efn = table_cost_fn({(1, 2): 1.0, (3, 4): 2.0})
+        masked = S.budget_masked(fn, efn, 1.0)
+        assert masked(1, 2, 1) == 5.0  # e == budget passes (strict >)
+        assert masked(3, 4, 2) == INF  # e > budget masks
+
+    def test_total_energy(self):
+        efn = table_cost_fn({(1, 2): 1.0, (3, 4): 2.0, (5, 6): 4.0})
+        assert S.total_energy(efn, (2, 4), 6) == 7.0
+        assert S.total_energy(efn, (3,), 6) == INF  # unpriced segment
+
+    def test_brute_force_filters_by_budget(self):
+        # layers 1..4, 2 devices: (1,1)+(2,4) is fastest but device 1's
+        # segment (2,4) blows the budget; the oracle must pick the
+        # within-budget runner-up
+        costs = {(1, 1): 1.0, (2, 4): 1.0, (1, 2): 2.0, (3, 4): 2.0,
+                 (1, 3): 9.0, (4, 4): 9.0}
+        energy = {(1, 1): 0.1, (2, 4): 9.0, (1, 2): 0.1, (3, 4): 0.1,
+                  (1, 3): 0.1, (4, 4): 0.1}
+        fn, efn = table_cost_fn(costs), table_cost_fn(energy)
+        free = S.brute_force(fn, 4, 2)
+        assert free.splits == (1,) and free.cost_s == 2.0
+        capped = S.brute_force(fn, 4, 2, energy_fn=efn, energy_budget=1.0)
+        assert capped.splits == (2,) and capped.cost_s == 4.0
+
+    def test_optimal_dp_matches_filtered_brute(self):
+        costs = {(1, 1): 1.0, (2, 4): 1.0, (1, 2): 2.0, (3, 4): 2.0,
+                 (1, 3): 9.0, (4, 4): 9.0}
+        energy = {(1, 1): 0.1, (2, 4): 9.0, (1, 2): 0.1, (3, 4): 0.1,
+                  (1, 3): 0.1, (4, 4): 0.1}
+        fn, efn = table_cost_fn(costs), table_cost_fn(energy)
+        dp = S.optimal_dp(fn, 4, 2, energy_fn=efn, energy_budget=1.0)
+        bf = S.brute_force(fn, 4, 2, energy_fn=efn, energy_budget=1.0)
+        assert dp.splits == bf.splits
+        assert dp.cost_s == bf.cost_s
+
+    def test_infeasible_budget_reports_infeasible(self):
+        fn = table_cost_fn({(1, 2): 1.0, (3, 4): 1.0})
+        efn = table_cost_fn({(1, 2): 5.0, (3, 4): 5.0})
+        for name in ("optimal_dp", "brute_force", "beam", "greedy"):
+            r = S.SOLVERS[name](fn, 4, 2, energy_fn=efn, energy_budget=1.0)
+            assert r.cost_s == INF
+
+    def test_infinite_budget_bit_identical_to_unbudgeted(self):
+        fn = additive_cost_fn(list(range(1, 8)), [0.5] * 6)
+        efn = additive_cost_fn([0.1] * 7, [0.0] * 6)
+        for name in S.SOLVERS:
+            kwargs = {"seed": 3} if name == "random_fit" else {}
+            base = S.SOLVERS[name](fn, 7, 3, **kwargs)
+            capped = S.SOLVERS[name](fn, 7, 3, energy_fn=efn,
+                                     energy_budget=INF, **kwargs)
+            assert base.splits == capped.splits
+            assert base.cost_s == capped.cost_s

@@ -54,13 +54,23 @@ SWEEP_KEYS = (
     "pallas.interpret", "pallas.wall_s", "pallas.node_identical_to_jax",
     "pallas.n_tie_divergences", "pallas.divergences_are_exact_ties",
     "pallas.costs_allclose_to_jax",
+    "multichannel.n_scenarios", "multichannel.n_budgeted",
+    "multichannel.batched_wall_s", "multichannel.scalar_wall_s",
+    "multichannel.speedup_x", "multichannel.parity_ok",
+    "multichannel.degenerate_bit_exact", "multichannel.budget_respected",
 )
 SWEEP_FLAGS = (
     "sharded.node_identical_to_jax",
     "pallas.divergences_are_exact_ties",
     "pallas.costs_allclose_to_jax",
+    "multichannel.parity_ok",
+    "multichannel.degenerate_bit_exact",
+    "multichannel.budget_respected",
 )
-SWEEP_RATIOS = (("speedup_x", "higher"),)
+SWEEP_RATIOS = (
+    ("speedup_x", "higher"),
+    ("multichannel.speedup_x", "higher"),
+)
 
 SURFACE_KEYS = (
     "benchmark", "mode", "n_nodes", "speedup_x", "parity_ok",
