@@ -10,7 +10,7 @@ Usage:
   PYTHONPATH=src python benchmarks/sweep_grid.py            # full grid (512 scenarios)
   PYTHONPATH=src python benchmarks/sweep_grid.py --smoke    # CI smoke (256 scenarios)
   ... [--backend jax|sharded] [--json BENCH_sweep.json] [--csv sweep.csv]
-  ... [--sections sharded,pallas,multichannel]  # limit the extra sections
+  ... [--sections sharded,pallas,multichannel,frontier]  # limit the extra sections
 
 The report always carries a ``sharded`` section — the same grid solved
 with the scenario axis partitioned over every local JAX device
@@ -64,7 +64,8 @@ from repro.core.sweep import (
 LOSS_P = (None, 0.01, 0.05, 0.10)
 RATE_SCALE = (1.0, 0.5, 0.25, 0.125)
 DEVICES = (2, 3, 4, 5)
-ALL_SECTIONS = ("sharded", "pallas", "multichannel")
+COMPRESSION = (1.0, 2.0, 4.0)
+ALL_SECTIONS = ("sharded", "pallas", "multichannel", "frontier")
 
 # energy pricing for the multichannel section (defaults are 0.0 —
 # energy is opt-in): ESP32-class active power, WiFi-class radio power
@@ -275,6 +276,102 @@ def run_multichannel(smoke: bool = True) -> dict:
     }
 
 
+def build_frontier_grid(smoke: bool,
+                        factors: tuple = COMPRESSION) -> ScenarioGrid:
+    """Bottleneck-variant grid for the frontier section: the paper
+    models × every protocol × the compression axis."""
+    models = {"mobilenet_v2": mobilenet_cost_profile()}
+    if not smoke:
+        models["resnet50"] = resnet50_cost_profile()
+    return ScenarioGrid(
+        models=models,
+        links=dict(PROTOCOLS),
+        n_devices=(2, 3) if smoke else DEVICES,
+        loss_p=(None, 0.05) if smoke else LOSS_P,
+        devices=(ESP32,),
+        compression_factors=factors,
+    )
+
+
+def run_frontier(smoke: bool = True) -> dict:
+    """The ``frontier`` section: the compression-axis grid swept with
+    the variant fold (ONE batched pass prices every (scenario, variant)
+    pair) vs a per-variant loop of single-factor sweeps, verified
+    bit-identical row-for-row AND against the scalar per-scenario
+    oracle; plus the latency-vs-accuracy Pareto frontiers with a
+    brute-force non-domination audit."""
+    grid = build_frontier_grid(smoke)
+
+    t0 = time.perf_counter()
+    batched = sweep(grid, solver="batched_dp")
+    batched_wall = time.perf_counter() - t0
+
+    # the loop the fold replaces: one sweep per compression factor
+    t0 = time.perf_counter()
+    per_variant = [sweep(build_frontier_grid(smoke, (cf,)),
+                         solver="batched_dp")
+                   for cf in COMPRESSION]
+    loop_wall = time.perf_counter() - t0
+
+    by_key = {(r.scenario.describe(), r.scenario.compression): r
+              for res in per_variant for r in res.rows}
+    loop_identical = all(
+        (row := by_key.get((r.scenario.describe(),
+                            r.scenario.compression))) is not None
+        and row.splits == r.splits and row.feasible == r.feasible
+        and row.objective_cost_s == r.objective_cost_s
+        for r in batched.rows)
+
+    t0 = time.perf_counter()
+    scalar = sweep_scalar(grid, solver="optimal_dp")
+    scalar_wall = time.perf_counter() - t0
+    mismatches = parity_report(batched, scalar)
+
+    # Pareto frontiers + the O(n^2) non-domination audit
+    fronts = batched.pareto()
+    frontier_ok = True
+    identity_on_every_frontier = True
+    for key, front in fronts.items():
+        rows = list(front.rows)
+        group = [r for r in batched.rows
+                 if (r.scenario.model, r.scenario.protocol,
+                     r.scenario.n_devices) == key]
+        feas = [r for r in group if r.feasible]
+        for r in feas:
+            dominated = any(
+                o.total_latency_s <= r.total_latency_s
+                and o.accuracy_proxy >= r.accuracy_proxy
+                and (o.total_latency_s, o.accuracy_proxy)
+                != (r.total_latency_s, r.accuracy_proxy)
+                for o in feas)
+            if dominated == (r in rows):
+                frontier_ok = False
+        # the best full-accuracy (identity) row is never dominated
+        ident = [r for r in feas if r.scenario.compression == 1.0]
+        if ident and min(ident, key=lambda r: r.total_latency_s) not in rows:
+            identity_on_every_frontier = False
+
+    sizes = sorted(f.n_points for f in fronts.values())
+    return {
+        "n_scenarios": grid.size,
+        "n_feasible": sum(r.feasible for r in batched.rows),
+        "compression_factors": list(COMPRESSION),
+        "batched_wall_s": round(batched_wall, 4),
+        "per_variant_loop_wall_s": round(loop_wall, 4),
+        "scalar_wall_s": round(scalar_wall, 4),
+        "fold_speedup_x": round(loop_wall / batched_wall, 2),
+        "speedup_x": round(scalar_wall / batched_wall, 1),
+        "parity_ok": not mismatches,
+        "parity_mismatches": mismatches[:10],
+        "loop_identical": loop_identical,
+        "n_frontiers": len(fronts),
+        "frontier_sizes": sizes,
+        "max_frontier_points": sizes[-1] if sizes else 0,
+        "frontier_matches_bruteforce": frontier_ok,
+        "identity_on_every_frontier": identity_on_every_frontier,
+    }
+
+
 def run(smoke: bool = True, backend: str = "numpy",
         sections: tuple = ALL_SECTIONS) -> dict:
     grid = build_grid(smoke)
@@ -320,6 +417,8 @@ def run(smoke: bool = True, backend: str = "numpy",
            if "pallas" in sections else {}),
         **({"multichannel": run_multichannel(smoke)}
            if "multichannel" in sections else {}),
+        **({"frontier": run_frontier(smoke)}
+           if "frontier" in sections else {}),
         "best": {
             name: {
                 "scenario": row.scenario.describe(),
@@ -400,6 +499,16 @@ def main() -> None:
               f"parity: {mc['parity_ok']}, degenerate bit-exact: "
               f"{mc['degenerate_bit_exact']}, budget respected: "
               f"{mc['budget_respected']}")
+    if "frontier" in report:
+        fr = report["frontier"]
+        print(f"frontier: {fr['n_scenarios']} scenarios over compression "
+              f"{fr['compression_factors']}, folded {fr['batched_wall_s']}s "
+              f"vs per-variant loop {fr['per_variant_loop_wall_s']}s "
+              f"({fr['fold_speedup_x']}x) vs scalar {fr['scalar_wall_s']}s "
+              f"({fr['speedup_x']}x); parity: {fr['parity_ok']}, "
+              f"loop-identical: {fr['loop_identical']}; "
+              f"{fr['n_frontiers']} frontiers (sizes {fr['frontier_sizes']}), "
+              f"non-domination audit: {fr['frontier_matches_bruteforce']}")
     for name, best in report["best"].items():
         print(f"best[{name}]: {best['scenario']} splits={best['splits']} "
               f"latency {best['total_latency_s']}s")
@@ -444,6 +553,16 @@ def main() -> None:
             "single-channel solve_multi_channel diverged from solve_batched"
         assert mc["budget_respected"], \
             "a budgeted plan holds an over-budget segment"
+    if "frontier" in report:
+        fr = report["frontier"]
+        assert fr["parity_ok"], \
+            "variant-folded sweep diverged from the scalar (split, variant) oracle"
+        assert fr["loop_identical"], \
+            "variant-folded sweep diverged from the per-variant loop"
+        assert fr["frontier_matches_bruteforce"], \
+            "pareto() diverged from the brute-force non-dominated filter"
+        assert fr["identity_on_every_frontier"], \
+            "a frontier dropped the best full-accuracy (identity) row"
     if not math.isfinite(report["speedup_x"]) or report["speedup_x"] < 10:
         print(f"WARNING: speedup {report['speedup_x']}x below the 10x target")
 

@@ -1,0 +1,126 @@
+"""Latency-vs-accuracy Pareto frontiers over the bottleneck-compression
+axis, per protocol, for both paper models.
+
+The paper plans "where to split"; bottleneck compression (a learned
+encoder at the cut — the COMSPLIT axis) adds "how hard to squeeze the
+cut": each compression factor shrinks the radio payload, costs the
+sensor extra encoder compute, and gives up a slice of accuracy. The
+planner's decision variable becomes (split point, variant), and the
+interesting output is no longer one number but a FRONTIER — the
+non-dominated latency/accuracy trade-offs an operator can pick from.
+
+This example sweeps MobileNet-V2 and ResNet50 across every protocol
+with `ScenarioGrid(compression_factors=...)` (the variant axis folds
+into the same batched pass as everything else), emits the per
+model × protocol frontiers with `SweepResult.pareto()`, and prints:
+
+  1. each frontier — latency, accuracy proxy, compression, splits —
+     with the dominated rows it filtered out,
+  2. where compression actually pays: the latency saved at each
+     accuracy step-down vs the full-accuracy identity plan,
+  3. accuracy-constrained planning: the cheapest plan subject to
+     `accuracy_proxy >= floor`, read straight off the frontier,
+  4. the same floor answered by the solver itself
+     (`plan_split(variants=..., accuracy_floor=...)`) — the two agree.
+
+Run: PYTHONPATH=src python examples/pareto_frontier.py
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.planner import plan_split
+from repro.core.profiles import (
+    ESP32,
+    PAPER_COMPRESSION_FACTORS,
+    PROTOCOLS,
+    esp32_flops_per_s,
+    esp32_variant_bank,
+    mobilenet_cost_profile,
+    paper_cost_model,
+    resnet50_cost_profile,
+)
+from repro.core.sweep import ScenarioGrid, sweep
+
+N_DEVICES = 3  # mobilenet fits 3 ESP32s; resnet50 needs the N=5 rows
+ACCURACY_FLOOR = 0.95
+
+
+def main():
+    grid = ScenarioGrid(
+        models={"mobilenet_v2": mobilenet_cost_profile(),
+                "resnet50": resnet50_cost_profile()},
+        links=dict(PROTOCOLS),
+        n_devices=(N_DEVICES, 5),
+        devices=(ESP32,),
+        compression_factors=PAPER_COMPRESSION_FACTORS,
+        # price the encoder like esp32_variant_bank does (16 flops per
+        # raw activation byte at the calibrated ESP32 rate), so the
+        # sweep and the scalar plan_split(variants=...) check below see
+        # the same bank
+        variant_encoder_s_per_byte=16.0 / esp32_flops_per_s(),
+    )
+    t0 = time.perf_counter()
+    result = sweep(grid, solver="batched_dp")
+    fronts = result.pareto()
+    wall = time.perf_counter() - t0
+    print(f"swept {result.n_scenarios} (model, protocol, variant) "
+          f"scenarios and extracted {len(fronts)} frontiers "
+          f"in {wall * 1e3:.1f} ms")
+
+    for (model, proto, n), front in sorted(fronts.items()):
+        group = [r for r in result.rows if r.feasible
+                 and r.scenario.model == model
+                 and r.scenario.protocol == proto
+                 and r.scenario.n_devices == n]
+        if not group:
+            continue  # e.g. resnet50 does not fit N=3 ESP32 memories
+        print(f"\n-- {model} / {proto} (N={n}): "
+              f"{front.n_points} of {len(group)} variants on the frontier --")
+        print(f"   {'cx':>4s} {'accuracy':>8s} {'latency':>9s}  splits")
+        on_front = set(map(id, front.rows))
+        for row in sorted(group, key=lambda r: r.total_latency_s):
+            mark = "*" if id(row) in on_front else " "
+            print(f" {mark} {row.scenario.compression:>4g} "
+                  f"{row.accuracy_proxy:>8.3f} "
+                  f"{row.total_latency_s:>8.3f}s  {row.splits}")
+
+        # what each accuracy step-down buys vs the identity plan
+        ident = next((r for r in front.rows
+                      if r.scenario.compression == 1.0), None)
+        if ident is not None:
+            for row in front.rows:
+                if row is ident:
+                    continue
+                saved = ident.total_latency_s - row.total_latency_s
+                print(f"   cx{row.scenario.compression:g} saves "
+                      f"{saved:.3f}s ({saved / ident.total_latency_s:.0%}) "
+                      f"for {ident.accuracy_proxy - row.accuracy_proxy:.3f} "
+                      f"accuracy")
+
+    # accuracy-constrained planning: frontier read vs solver answer
+    print(f"\n-- cheapest plan s.t. accuracy >= {ACCURACY_FLOOR} "
+          f"(mobilenet_v2, N={N_DEVICES}) --")
+    bank = esp32_variant_bank()
+    for proto in sorted(PROTOCOLS):
+        front = fronts[("mobilenet_v2", proto, N_DEVICES)]
+        ok = [r for r in front.rows if r.accuracy_proxy >= ACCURACY_FLOOR]
+        if not ok:
+            print(f"  {proto:8s} no plan meets the floor")
+            continue
+        pick = min(ok, key=lambda r: r.total_latency_s)
+
+        plan = plan_split(paper_cost_model("mobilenet_v2", proto),
+                          N_DEVICES, solver="optimal_dp",
+                          variants=bank, accuracy_floor=ACCURACY_FLOOR)
+        assert plan.splits == pick.splits, (proto, plan.splits, pick.splits)
+        assert abs(plan.total_latency_s - pick.total_latency_s) < 1e-9
+        print(f"  {proto:8s} cx{pick.scenario.compression:<4g} "
+              f"splits={pick.splits} latency {pick.total_latency_s:.3f}s "
+              f"accuracy {pick.accuracy_proxy:.3f} "
+              f"(solver agrees: variant={plan.variant})")
+
+
+if __name__ == "__main__":
+    main()

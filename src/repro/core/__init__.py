@@ -9,7 +9,8 @@ Public API (documented in ``docs/api.md``; layer map in
                fleet sizes + device mixes)
   sweep      — batched solvers over stacked C[k,a,b] cost tensors +
                ScenarioGrid fleet sweeps (protocol x mix x fleet x loss
-               x rate), all-k beam, per-scenario fleet-size vectors
+               x rate x compression), all-k beam, per-scenario fleet-size
+               vectors, variant-bank solves + Pareto frontier emission
   shard      — scenario-axis sharding over the local JAX device mesh
                (shard_map + pad/unpad; backend="sharded" everywhere the
                batched DP runs)
@@ -32,6 +33,7 @@ Public API (documented in ``docs/api.md``; layer map in
 
 from repro.core.latency import (  # noqa: F401
     COST_CHANNELS,
+    BottleneckVariant,
     ContentionModel,
     DeviceProfile,
     LayerCost,
@@ -39,6 +41,8 @@ from repro.core.latency import (  # noqa: F401
     ModelCostProfile,
     RTTBreakdown,
     SplitCostModel,
+    bottleneck_variant,
+    bottleneck_variants,
     rtt_breakdown,
 )
 from repro.core.planner import (  # noqa: F401
@@ -69,6 +73,7 @@ from repro.core.surface import (  # noqa: F401
 from repro.core.sweep import (  # noqa: F401
     DP_BACKENDS,
     BatchedSolverResult,
+    ParetoFrontier,
     Scenario,
     ScenarioGrid,
     SweepResult,
@@ -79,9 +84,12 @@ from repro.core.sweep import (  # noqa: F401
     batched_greedy_search_all_k,
     batched_optimal_dp,
     batched_total_cost,
+    apply_accuracy_floor,
     apply_energy_budget,
     combine_channels,
+    pareto_frontier,
     solve_multi_channel,
+    solve_variant_bank,
     stack_cost_tensors,
     sweep_scalar,
 )
@@ -105,6 +113,7 @@ from repro.core.pallas_dp import (  # noqa: F401
 from repro.core.solvers import (  # noqa: F401
     SOLVERS,
     SolverResult,
+    VariantInstance,
     beam_search,
     brute_force,
     budget_masked,

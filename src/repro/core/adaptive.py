@@ -38,7 +38,7 @@ import numpy as np
 from repro.core import solvers as S
 from repro.core import sweep as SW
 from repro.core.async_replan import SurfaceRebuilder
-from repro.core.latency import LinkProfile, SplitCostModel
+from repro.core.latency import BottleneckVariant, LinkProfile, SplitCostModel
 from repro.core.planner import SplitPlan, _build_plan, plan_split, plans_from_batched
 from repro.core.surface import (  # noqa: F401  (optimize_chunk_size re-exported)
     DegradationSurface,
@@ -118,6 +118,9 @@ class PlanDecision:
     splits: tuple[int, ...]
     predicted_latency_s: float
     reason: str
+    # index into the manager's bottleneck-variant bank (0 = the bank's
+    # first entry, and also the value when no bank is configured)
+    variant: int = 0
 
 
 @dataclass
@@ -202,12 +205,27 @@ class AdaptiveSplitManager:
     # masks over-budget segments to +inf, so decisions minimize latency
     # subject to the budget (see repro.core.sweep.apply_energy_budget)
     energy_budget: float | None = None
+    # optional bottleneck-variant bank: every re-plan (surface, batched,
+    # or scalar) then decides (split, variant) jointly, the adopted
+    # decision records the winning bank index, and all pricing — chunk
+    # tuning, hysteresis, the fast path — runs on the winning variant's
+    # compressed cut bytes + encoder cost
+    variants: Sequence[BottleneckVariant] | None = None
+    # with a bank: mask entries whose accuracy_proxy is below the floor
+    # before every solve (min latency s.t. accuracy >= floor)
+    accuracy_floor: float | None = None
     history: list[PlanDecision] = field(default_factory=list)
 
     def __post_init__(self):
         L = self.cost_model.profile.num_layers
         if not 1 <= self.n_devices <= L:
             raise ValueError(f"n_devices={self.n_devices} out of range for L={L}")
+        if self.variants is not None:
+            self.variants = tuple(self.variants)
+            if not self.variants:
+                raise ValueError("variants bank must not be empty")
+        if self.accuracy_floor is not None and self.variants is None:
+            raise ValueError("accuracy_floor requires a variants bank")
         self.estimators = {name: LinkEstimator(link)
                            for name, link in self.protocols.items()}
         self._step = 0
@@ -220,6 +238,8 @@ class AdaptiveSplitManager:
             if batched in SW.BATCHED_SOLVERS:
                 grid_kwargs = dict(self.surface_grid or {})
                 grid_kwargs.setdefault("energy_budget", self.energy_budget)
+                grid_kwargs.setdefault("variants", self.variants)
+                grid_kwargs.setdefault("accuracy_floor", self.accuracy_floor)
                 self.surface = build_surface(
                     self.cost_model, self.protocols, self.n_devices,
                     solver=batched, **grid_kwargs,
@@ -251,6 +271,8 @@ class AdaptiveSplitManager:
             else:
                 rebuild_kwargs = dict(self.surface_grid or {})
                 rebuild_kwargs.setdefault("energy_budget", self.energy_budget)
+                rebuild_kwargs.setdefault("variants", self.variants)
+                rebuild_kwargs.setdefault("accuracy_floor", self.accuracy_floor)
                 self._rebuilder = SurfaceRebuilder(
                     self.cost_model, self.protocols,
                     solver=self._batched_solver_name(),
@@ -267,7 +289,8 @@ class AdaptiveSplitManager:
             if hit is not None:
                 self.surface_hits += 1
                 self._adopt(hit.protocol, hit.splits, hit.chunk_bytes,
-                            hit.latency_s, "initial [surface]")
+                            hit.latency_s, "initial [surface]",
+                            variant=hit.variant)
         if self.current is None:
             self._replan("initial")
 
@@ -315,11 +338,12 @@ class AdaptiveSplitManager:
             self._fallback_state = None  # back inside: next drift re-solves
         if self.current is None:
             self._adopt(hit.protocol, hit.splits, hit.chunk_bytes,
-                        hit.latency_s, "initial")
+                        hit.latency_s, "initial", variant=hit.variant)
             return
         cur = self.current
         if (hit.protocol == cur.protocol and hit.splits == cur.splits
-                and hit.chunk_bytes == cur.chunk_bytes):
+                and hit.chunk_bytes == cur.chunk_bytes
+                and hit.variant == cur.variant):
             # already on the surface's decision: nothing to adopt (and the
             # interpolated latency may disagree with the exact current-plan
             # estimate mid-cell, which must not re-record the same plan)
@@ -330,7 +354,7 @@ class AdaptiveSplitManager:
             self._adopt(hit.protocol, hit.splits, hit.chunk_bytes,
                         hit.latency_s,
                         f"estimated {cur_lat:.3f}s -> {hit.latency_s:.3f}s "
-                        f"available")
+                        f"available", variant=hit.variant)
 
     def _observe_off_surface(self, states: dict[str, tuple[float, float]]):
         """An estimate left the surface envelope. Synchronous mode: exact
@@ -426,17 +450,19 @@ class AdaptiveSplitManager:
 
     def _observe_resolve(self, reason_suffix: str = ""):
         """The legacy per-observe path: full batched re-solve."""
-        best_name, best_splits, best_chunk, best_lat = self._best_available()
+        best_name, best_splits, best_chunk, best_lat, best_vi = \
+            self._best_available()
         if best_name is None:
             return
         if self.current is None:
-            self._adopt(best_name, best_splits, best_chunk, best_lat, "initial")
+            self._adopt(best_name, best_splits, best_chunk, best_lat,
+                        "initial", variant=best_vi)
             return
         cur_lat = self._current_latency_under_estimates()
         if best_lat < cur_lat * (1 - self.replan_threshold):
             self._adopt(best_name, best_splits, best_chunk, best_lat,
                         f"estimated {cur_lat:.3f}s -> {best_lat:.3f}s "
-                        f"available{reason_suffix}")
+                        f"available{reason_suffix}", variant=best_vi)
 
     # -- internals ---------------------------------------------------------------
     def _batched_solver_name(self) -> str:
@@ -457,25 +483,58 @@ class AdaptiveSplitManager:
     def _batched_plans(self, links, solver: str) -> list[SplitPlan]:
         """One batched solve across all protocols, reusing the
         link-independent device-local tensor (built once per manager —
-        only the transmission vector changes as the estimators drift)."""
+        the bank never touches it: a variant reprices only the cut, so
+        with ``variants`` the scenario axis just grows variant-major,
+        exactly like surface construction, and folds back per link)."""
         local = self._ensure_local_tensor()
         models = [self._model_for(lk) for lk in links]
-        TX = np.stack([m.transmission_cost_vector() for m in models])
+        bank = self.variants
+        if bank is None:
+            node_models = models
+        else:
+            node_models = [replace(m, variant=v) for v in bank for m in models]
+        TX = np.stack([m.transmission_cost_vector() for m in node_models])
+        if self.accuracy_floor is not None:
+            # same TX-row masking as build_surfaces: +inf rows knock the
+            # below-floor variant blocks out on every solve path
+            acc = np.array([v.accuracy_proxy for v in bank])
+            floor_mask = acc < float(self.accuracy_floor)
+            if floor_mask.any():
+                TX = np.where(
+                    np.repeat(floor_mask, len(models))[:, None],
+                    float("inf"), TX)
         C = local[None, :, :, :] + TX[:, None, None, :]
         if self.energy_budget is not None:
             E = np.stack([m.energy_cost_tensor(self.n_devices)
-                          for m in models])
+                          for m in node_models])
             C = SW.apply_energy_budget(C, E, self.energy_budget)
         combine = "max" if self.cost_model.objective == "bottleneck" else "sum"
         res = SW.solve_batched(C, solver=solver, combine=combine)
-        return plans_from_batched(models, res, self.n_devices)
+        if bank is not None and len(bank) > 1:
+            res, _ = SW._fold_variant_axis(res, len(bank), len(models))
+        elif bank is not None:
+            res = replace(res, variant=np.where(
+                res.feasible, 0, -1).astype(np.int64))
+        return plans_from_batched(models, res, self.n_devices,
+                                  variants=bank)
+
+    def _variant_model(self, model: SplitCostModel,
+                       vi: int | None) -> SplitCostModel:
+        """``model`` carrying bank entry ``vi`` (unchanged without a
+        bank or for sentinel/identity indices — the historical object)."""
+        if self.variants is None or vi is None or vi < 0:
+            return model
+        return replace(model, variant=self.variants[vi])
 
     def _best_available(self):
         """Re-plan every protocol in ONE batched tensor pass (the sweep
         engine), then tune each winner's activation chunk size. This is
         the exact path the degradation surface precomputes; at surface
-        grid nodes both produce identical decisions."""
-        best = (None, (), 0, float("inf"))
+        grid nodes both produce identical decisions. With a variant
+        bank each plan arrives on its winning variant's model, so the
+        cut bytes driving chunk tuning are compressed and the priced
+        latency includes the encoder cost."""
+        best = (None, (), 0, float("inf"), 0)
         names = list(self.estimators.keys())
         links = [self.estimators[n].current_profile() for n in names]
         solver = self._batched_solver_name()
@@ -484,7 +543,9 @@ class AdaptiveSplitManager:
         else:  # fall back to the scalar oracle path
             plans = [plan_split(self._model_for(lk), self.n_devices,
                                 solver=self.solver,
-                                energy_budget=self.energy_budget)
+                                energy_budget=self.energy_budget,
+                                variants=self.variants,
+                                accuracy_floor=self.accuracy_floor)
                      for lk in links]
         for name, link, plan in zip(names, links, plans):
             if not plan.splits and self.n_devices > 1:
@@ -492,16 +553,19 @@ class AdaptiveSplitManager:
             cuts = [seg.tx_bytes for seg in plan.segments[:-1]]
             chunk, _ = optimize_chunk_size(link, cuts)
             tuned = replace(link, mtu_bytes=chunk)
-            lat = self._model_for(tuned).end_to_end_s(plan.splits)
+            vi = plan.variant if plan.variant is not None else 0
+            lat = self._variant_model(self._model_for(tuned),
+                                      plan.variant).end_to_end_s(plan.splits)
             if lat < best[3]:
-                best = (name, plan.splits, chunk, lat)
+                best = (name, plan.splits, chunk, lat, max(vi, 0))
         return best
 
     def _current_latency_under_estimates(self) -> float:
         cur = self.current
         link = self.estimators[cur.protocol].current_profile()
         tuned = replace(link, mtu_bytes=cur.chunk_bytes)
-        return self._model_for(tuned).end_to_end_s(cur.splits)
+        return self._variant_model(self._model_for(tuned),
+                                   cur.variant).end_to_end_s(cur.splits)
 
     def _fast_current_latency(self, packet_time_s: float, loss: float) -> float:
         """The current plan's latency under estimator state
@@ -516,13 +580,17 @@ class AdaptiveSplitManager:
         t_ack = max(0.0, packet_time_s - serial - f["t_prop"])
         ptime = (f["chunk"] / (f["rate"] * (1.0 - min(loss, 0.9)))
                  + f["t_prop"] + t_ack)
-        locs, Ks = f["locs"], f["Ks"]
+        locs, Ks, encs = f["locs"], f["Ks"], f["encs"]
         segs = []
         for i, loc in enumerate(locs):
             if i < len(Ks):
                 tx = Ks[i] * ptime
                 if f["include_setup"]:
                     tx += f["setup"]
+                if encs is not None:
+                    # variant encoder cost: added after setup, matching
+                    # SplitCostModel.segment_cost_s float op order
+                    tx += encs[i]
                 segs.append(loc + tx)
             else:
                 segs.append(loc)
@@ -532,22 +600,30 @@ class AdaptiveSplitManager:
 
     def _prime_fast_path(self):
         """Precompute the current plan's latency coefficients: per-device
-        local costs (from the bit-exact local tensor) and per-cut packet
-        counts under the adopted chunk size."""
+        local costs (from the bit-exact local tensor), per-cut packet
+        counts under the adopted chunk size (of the adopted variant's
+        COMPRESSED payload), and the variant's per-cut encoder times
+        (``None`` without an active variant, keeping the historical
+        coefficient set byte-for-byte)."""
         cur = self.current
         base = self.protocols[cur.protocol]
         prof = self.cost_model.profile
+        vmodel = self._variant_model(self.cost_model, cur.variant)
+        v = vmodel._active_variant
         L = prof.num_layers
         local = self._ensure_local_tensor()
         bounds = [0, *cur.splits, L]
         locs = [float(local[i, bounds[i], bounds[i + 1] - 1])
                 for i in range(len(bounds) - 1)]
         Ks = []
+        encs = None if v is None else []
         for b in cur.splits:
-            act = prof.boundary_act_bytes(b)
-            Ks.append(math.ceil(act / cur.chunk_bytes) if act > 0 else 0)
+            payload = vmodel.cut_payload_bytes(b)
+            Ks.append(math.ceil(payload / cur.chunk_bytes) if payload > 0 else 0)
+            if v is not None:
+                encs.append(v.encoder_time_s(prof.boundary_act_bytes(b)))
         self._fast = {
-            "locs": locs, "Ks": Ks, "chunk": cur.chunk_bytes,
+            "locs": locs, "Ks": Ks, "encs": encs, "chunk": cur.chunk_bytes,
             "mtu": base.mtu_bytes, "rate": base.rate_bytes_per_s,
             "t_prop": base.t_prop_s, "setup": base.t_setup_s,
             "feedback": base.t_feedback_s,
@@ -564,26 +640,27 @@ class AdaptiveSplitManager:
         cur = self.current
         link = self.estimators[cur.protocol].current_profile()
         tuned = replace(link, mtu_bytes=cur.chunk_bytes)
-        model = self._model_for(tuned)
+        model = self._variant_model(self._model_for(tuned), cur.variant)
         result = S.SolverResult(
             solver="surface" if self.surface is not None else self.solver,
             splits=cur.splits,
             cost_s=model.end_to_end_s(cur.splits, with_overheads=False),
             wall_time_s=0.0, nodes_expanded=0,
+            variant=None if self.variants is None else cur.variant,
         )
         return _build_plan(model, result, self.n_devices)
 
     def _adopt(self, name, splits: tuple[int, ...], chunk: int, lat: float,
-               reason: str):
+               reason: str, variant: int = 0):
         self.current = PlanDecision(self._step, name, chunk, tuple(splits),
-                                    lat, reason)
+                                    lat, reason, variant=variant)
         self.history.append(self.current)
         self._prime_fast_path()
 
     def _replan(self, reason: str):
-        name, splits, chunk, lat = self._best_available()
+        name, splits, chunk, lat, vi = self._best_available()
         if name is not None:
-            self._adopt(name, splits, chunk, lat, reason)
+            self._adopt(name, splits, chunk, lat, reason, variant=vi)
 
 
 def fleet_managers(
@@ -593,6 +670,8 @@ def fleet_managers(
     solver: str = "beam",
     surface_grid: dict | None = None,
     async_rebuild: object | bool | None = None,
+    variants: Sequence[BottleneckVariant] | None = None,
+    accuracy_floor: float | None = None,
     **manager_kwargs,
 ) -> dict[int, AdaptiveSplitManager]:
     """Adaptive managers for a heterogeneous fleet of deployments — one
@@ -620,7 +699,14 @@ def fleet_managers(
     every manager's drifted scenarios queue on it and each rebuild
     cycle batches all pending fleet sizes into a single multi-size
     ``build_surfaces`` solve (the same all-k pass the initial family
-    build uses) — N drifting managers cost one solve, not N."""
+    build uses) — N drifting managers cost one solve, not N.
+
+    ``variants``/``accuracy_floor`` give the whole fleet one
+    bottleneck-variant bank: the shared family build, the shared
+    rebuilder, and every manager's re-solve path all decide
+    (split, variant) jointly from the same bank (the single-source
+    guarantee — a fleet can never mix banked surfaces with unbanked
+    re-solves)."""
     sizes = tuple(dict.fromkeys(int(n) for n in n_devices))
     batched = _batched_twin(solver)
     if batched not in SW.BATCHED_SOLVERS:
@@ -628,19 +714,24 @@ def fleet_managers(
             f"solver {solver!r} has no batched twin to precompute "
             f"surfaces with; options: beam, optimal_dp, greedy, "
             f"{', '.join(sorted(SW.BATCHED_SOLVERS))}")
+    grid_kwargs = dict(surface_grid or {})
+    grid_kwargs.setdefault("variants", variants)
+    grid_kwargs.setdefault("accuracy_floor", accuracy_floor)
     surfaces = build_surfaces(cost_model, protocols, sizes,
-                              solver=batched, **(surface_grid or {}))
+                              solver=batched, **grid_kwargs)
     rebuilder: object | bool | None = async_rebuild
     if async_rebuild and not isinstance(async_rebuild, SurfaceRebuilder):
         rebuilder = SurfaceRebuilder(
             cost_model, dict(protocols), solver=batched,
             executor=None if async_rebuild is True else async_rebuild,
-            **(surface_grid or {}),
+            **grid_kwargs,
         )
     return {
         n: AdaptiveSplitManager(
             cost_model=cost_model, protocols=dict(protocols), n_devices=n,
             solver=solver, surface=surfaces[n], async_rebuild=rebuilder,
+            variants=grid_kwargs["variants"],
+            accuracy_floor=grid_kwargs["accuracy_floor"],
             **manager_kwargs)
         for n in sizes
     }
@@ -675,10 +766,16 @@ def surface_parity_report(manager: AdaptiveSplitManager) -> list[str]:
                     continue
                 if not plan.splits and manager.n_devices > 1:
                     continue  # infeasible on both sides: nothing to price
+                plan_vi = plan.variant if plan.variant is not None else 0
+                if max(plan_vi, 0) != node.variant:
+                    mismatches.append(f"{name}@({pt:.6g},{lp:g}): variant "
+                                      f"{plan_vi} vs {node.variant}")
+                    continue
                 cuts = [seg.tx_bytes for seg in plan.segments[:-1]]
                 chunk, _ = optimize_chunk_size(link, cuts)
-                lat = manager._model_for(
-                    replace(link, mtu_bytes=chunk)).end_to_end_s(plan.splits)
+                lat = manager._variant_model(
+                    manager._model_for(replace(link, mtu_bytes=chunk)),
+                    plan.variant).end_to_end_s(plan.splits)
                 if chunk != node.chunk_bytes or lat != node.node_latency_s:
                     mismatches.append(
                         f"{name}@({pt:.6g},{lp:g}): chunk/lat ({chunk},{lat}) "

@@ -244,6 +244,8 @@ class SurfaceRebuilder:
         executor=None,
         max_queued_states: int = 8,
         energy_budget: float | None = None,
+        variants=None,
+        accuracy_floor: float | None = None,
     ):
         self.cost_model = cost_model
         self.protocols = dict(protocols)
@@ -252,6 +254,10 @@ class SurfaceRebuilder:
         self.beam_width = beam_width
         self.chunk_candidates = chunk_candidates
         self.energy_budget = energy_budget
+        # bottleneck-variant bank + accuracy floor: rebuilt surfaces keep
+        # deciding (split, variant) jointly, like the surface they replace
+        self.variants = None if variants is None else tuple(variants)
+        self.accuracy_floor = accuracy_floor
         self.pt_scale = tuple(pt_scale)
         self.loss_p = None if loss_p is None else tuple(loss_p)
         self.pt_pad = tuple(pt_pad)
@@ -384,6 +390,8 @@ class SurfaceRebuilder:
             beam_width=self.beam_width,
             chunk_candidates=self.chunk_candidates,
             energy_budget=self.energy_budget,
+            variants=self.variants,
+            accuracy_floor=self.accuracy_floor,
         )
 
     def _resolved_envelopes(

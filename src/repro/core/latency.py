@@ -176,6 +176,120 @@ class ContentionModel:
 
 
 @dataclass(frozen=True)
+class BottleneckVariant:
+    """One bottleneck-compression variant of a model (the COMSPLIT /
+    NAS-for-split-computing axis): a learned encoder at the cut shrinks
+    the activation payload by ``compression_factor`` at the price of
+    extra sensor-side compute (the encoder) and a lower
+    ``accuracy_proxy``. The decision variable of the planners grows from
+    "split point" to "(split point, variant)".
+
+    Semantics at a cut carrying ``nbytes`` of raw activation:
+
+    * the radio moves :meth:`compressed_bytes` ``= ceil(nbytes /
+      compression_factor)`` bytes (packetized per Eq. 7 as usual);
+    * the transmitting device first spends :meth:`encoder_time_s`
+      ``= encoder_t_s + nbytes * encoder_s_per_byte`` running the
+      encoder (charged as latency on the cut and as
+      ``active_power_w * encoder_time`` on the energy channel);
+    * the device-local segment cost is otherwise UNCHANGED — the output
+      buffer still holds the raw activation (the encoder reads it), so
+      the device-local cost tensor stays variant-independent and the
+      fused ``local + TX`` decomposition of the Pallas DP backend
+      survives: compression and encoder time ride entirely in the
+      per-cut transmission vector.
+
+    ``accuracy_proxy`` is a unitless relative-accuracy column (1.0 for
+    the identity variant); it never enters the latency/energy arithmetic
+    and exists for Pareto-frontier emission and accuracy-floor masking
+    (``min latency s.t. accuracy_proxy >= floor``).
+
+    The identity variant (factor 1, no encoder cost) is the degenerate
+    fast path: every consumer treats it exactly like "no variant", so
+    single-variant runs are bit-identical to the historical outputs —
+    the property suite pins this."""
+
+    name: str = "identity"
+    compression_factor: float = 1.0
+    encoder_t_s: float = 0.0
+    encoder_s_per_byte: float = 0.0
+    accuracy_proxy: float = 1.0
+
+    def __post_init__(self):
+        if not self.compression_factor >= 1.0:
+            raise ValueError(
+                f"compression_factor must be >= 1, got {self.compression_factor}")
+        if self.encoder_t_s < 0.0 or self.encoder_s_per_byte < 0.0:
+            raise ValueError("encoder costs must be >= 0")
+        if not self.accuracy_proxy >= 0.0:
+            raise ValueError(
+                f"accuracy_proxy must be >= 0, got {self.accuracy_proxy}")
+
+    @property
+    def is_identity(self) -> bool:
+        """True when this variant changes nothing (the degenerate path)."""
+        return (self.compression_factor == 1.0
+                and self.encoder_t_s == 0.0
+                and self.encoder_s_per_byte == 0.0)
+
+    def compressed_bytes(self, nbytes: int) -> int:
+        """Payload bytes the radio actually moves for ``nbytes`` of raw
+        activation at the cut."""
+        if nbytes <= 0 or self.compression_factor == 1.0:
+            return int(nbytes)
+        return math.ceil(nbytes / self.compression_factor)
+
+    def encoder_time_s(self, nbytes: int) -> float:
+        """Sensor-side encoder latency for ``nbytes`` of raw activation
+        (0 when nothing crosses the cut)."""
+        if nbytes <= 0:
+            return 0.0
+        return self.encoder_t_s + nbytes * self.encoder_s_per_byte
+
+
+#: The degenerate no-op variant (factor 1, free encoder, accuracy 1.0).
+IDENTITY_VARIANT = BottleneckVariant()
+
+
+def bottleneck_variant(
+    compression_factor: float,
+    *,
+    encoder_t_s: float = 0.0,
+    encoder_s_per_byte: float = 0.0,
+    accuracy_drop_per_octave: float = 0.03,
+    name: str | None = None,
+) -> BottleneckVariant:
+    """Build one :class:`BottleneckVariant` from a compression factor.
+
+    The encoder cost and accuracy drop both scale with the bottleneck
+    *depth* ``log2(compression_factor)``: each halving of the payload
+    adds one encoder stage (``encoder_t_s``/``encoder_s_per_byte`` are
+    per-octave rates) and costs ``accuracy_drop_per_octave`` of relative
+    accuracy (floored at 0). A factor of 1 yields the exact
+    :data:`IDENTITY_VARIANT` semantics (zero encoder cost, accuracy
+    1.0)."""
+    if not compression_factor >= 1.0:
+        raise ValueError(
+            f"compression_factor must be >= 1, got {compression_factor}")
+    octaves = math.log2(compression_factor)
+    return BottleneckVariant(
+        name=name or ("identity" if compression_factor == 1.0
+                      else f"cx{compression_factor:g}"),
+        compression_factor=compression_factor,
+        encoder_t_s=encoder_t_s * octaves,
+        encoder_s_per_byte=encoder_s_per_byte * octaves,
+        accuracy_proxy=max(0.0, 1.0 - accuracy_drop_per_octave * octaves),
+    )
+
+
+def bottleneck_variants(
+    compression_factors: Sequence[float], **kwargs
+) -> tuple[BottleneckVariant, ...]:
+    """A variant bank: one :func:`bottleneck_variant` per factor."""
+    return tuple(bottleneck_variant(f, **kwargs) for f in compression_factors)
+
+
+@dataclass(frozen=True)
 class LayerCost:
     """Static per-layer cost record (one node of the sequential chain Eq. 1)."""
 
@@ -308,6 +422,17 @@ class SplitCostModel:
     :attr:`effective_link` — the nominal link with its rate scaled by
     :meth:`ContentionModel.rate_scale`. ``None`` (and a group of size 1)
     is bit-identical to the historical uncontended path.
+
+    ``variant``: optional :class:`BottleneckVariant`. When set, every
+    cut prices the *compressed* payload (airtime at
+    :meth:`BottleneckVariant.compressed_bytes`) plus the sensor-side
+    encoder time; the energy channel adds ``active_power_w *
+    encoder_time`` on the transmitting device and radio airtimes shrink
+    with the payload. Device-local segment costs are untouched (the
+    output buffer holds the raw activation the encoder reads), so
+    :meth:`local_cost_tensor` is variant-independent and the sweep
+    engine's fused ``local + TX`` decomposition survives. ``None`` and
+    the identity variant are bit-identical to the historical path.
     """
 
     profile: ModelCostProfile
@@ -316,6 +441,7 @@ class SplitCostModel:
     objective: str = "sum"
     include_setup: bool = False  # add per-hop link setup into segment costs
     contention: ContentionModel | None = None
+    variant: BottleneckVariant | None = None
 
     def __post_init__(self):
         if self.objective not in ("sum", "bottleneck"):
@@ -330,6 +456,36 @@ class SplitCostModel:
         if self.contention is None:
             return self.link
         return self.contention.apply(self.link)
+
+    @property
+    def _active_variant(self) -> BottleneckVariant | None:
+        """The variant when it changes anything; None for the identity
+        (so every degenerate path takes the exact historical code)."""
+        v = self.variant
+        if v is None or v.is_identity:
+            return None
+        return v
+
+    def cut_payload_bytes(self, b: int) -> int:
+        """Bytes actually crossing the cut after layer ``b`` — the
+        variant-compressed payload (raw boundary bytes without one)."""
+        act = self.profile.boundary_act_bytes(b)
+        v = self._active_variant
+        return act if v is None else v.compressed_bytes(act)
+
+    def cut_cost_s(self, b: int) -> float:
+        """Latency charged at the cut after layer ``b``, excluding
+        per-hop setup: airtime of the (variant-compressed) payload plus
+        the variant's encoder time. 0 outside ``1 <= b < L``."""
+        if not 1 <= b < self.profile.num_layers:
+            return 0.0
+        link = self.effective_link
+        act = self.profile.boundary_act_bytes(b)
+        v = self._active_variant
+        if v is None:
+            return link.transmission_latency_s(act)
+        return (link.transmission_latency_s(v.compressed_bytes(act))
+                + v.encoder_time_s(act))
 
     def device(self, k: int) -> DeviceProfile:
         """Device executing segment k (1-indexed). A single profile may be
@@ -363,9 +519,16 @@ class SplitCostModel:
         tx = 0.0
         if b < L:
             link = self.effective_link
-            tx = link.transmission_latency_s(prof.boundary_act_bytes(b))
+            act = prof.boundary_act_bytes(b)
+            v = self._active_variant
+            if v is None:
+                tx = link.transmission_latency_s(act)
+            else:
+                tx = link.transmission_latency_s(v.compressed_bytes(act))
             if self.include_setup:
                 tx += link.t_setup_s
+            if v is not None:
+                tx += v.encoder_time_s(act)
         return local + tx
 
     # -- energy channel: Joules for CostSegment(a, b, k) --------------------
@@ -395,12 +558,17 @@ class SplitCostModel:
         if local == INF:
             return INF
         link = self.effective_link
+        v = self._active_variant
         e = dev.active_power_w * local
+        if v is not None and b < L:
+            # the transmitting device runs the bottleneck encoder at
+            # compute draw before the radio turns on
+            e = e + dev.active_power_w * v.encoder_time_s(prof.boundary_act_bytes(b))
         e = e + link.tx_power_w * (
-            link.transmission_latency_s(prof.boundary_act_bytes(b)) if b < L else 0.0
+            link.transmission_latency_s(self.cut_payload_bytes(b)) if b < L else 0.0
         )
         e = e + link.rx_power_w * (
-            link.transmission_latency_s(prof.boundary_act_bytes(a - 1)) if a > 1 else 0.0
+            link.transmission_latency_s(self.cut_payload_bytes(a - 1)) if a > 1 else 0.0
         )
         return e
 
@@ -468,20 +636,42 @@ class SplitCostModel:
         seg = self.profile.segment_arrays
         link = self.effective_link
         act = seg.boundary_act_bytes[1:].astype(np.float64)
+        v = self._active_variant
+        if v is not None:
+            # same ceil arithmetic as BottleneckVariant.compressed_bytes,
+            # so packet counts match the scalar path bit-for-bit
+            act = np.where(act > 0, np.ceil(act / v.compression_factor), 0.0)
         packets = np.where(act > 0, np.ceil(act / link.mtu_bytes), 0.0)
         tx = packets * link.packet_time_s()
         tx[-1] = 0.0  # no transmission after the final layer
         return tx
 
+    def _encoder_time_vector(self) -> np.ndarray:
+        """(L,) float64; ``[b-1]`` = variant encoder time for the raw
+        activation leaving layer ``b`` (all zeros without a variant;
+        0 at b = L). Mirrors :meth:`BottleneckVariant.encoder_time_s`."""
+        L = self.profile.num_layers
+        v = self._active_variant
+        if v is None:
+            return np.zeros(L, dtype=np.float64)
+        act = self.profile.segment_arrays.boundary_act_bytes[1:].astype(np.float64)
+        enc = np.where(act > 0, v.encoder_t_s + act * v.encoder_s_per_byte, 0.0)
+        enc[-1] = 0.0
+        return enc
+
     def transmission_cost_vector(self) -> np.ndarray:
         """(L,) float64; ``[b-1]`` = link cost charged when cutting after
         layer ``b`` (0 at b = L). Identical arithmetic to
         :meth:`LinkProfile.transmission_latency_s` (+ setup when
-        ``include_setup``)."""
+        ``include_setup``); with a variant, airtime prices the
+        compressed payload and the encoder time is added last, matching
+        :meth:`segment_cost_s` operation order."""
         tx = self._tx_time_vector()
         if self.include_setup:
             tx = tx + self.effective_link.t_setup_s  # charged on every cut (b < L)
             tx[-1] = 0.0
+        if self._active_variant is not None:
+            tx = tx + self._encoder_time_vector()
         return tx
 
     def local_cost_tensor(self, n_devices: int) -> np.ndarray:
@@ -539,6 +729,11 @@ class SplitCostModel:
         with np.errstate(invalid="ignore"):
             e = np.where(np.isfinite(local), power[:, None, None] * local, INF)
         link = self.effective_link
+        if self._active_variant is not None:
+            # encoder energy on the transmitting device, in the same
+            # position as the scalar path (after P*local, before radio)
+            enc = self._encoder_time_vector()
+            e = e + power[:, None, None] * enc[None, None, :]
         tx_t = self._tx_time_vector()  # [b-1] = airtime of the cut after b
         rx_t = np.zeros(L, dtype=np.float64)
         rx_t[1:] = tx_t[: L - 1]  # [a-1] = airtime of the cut entering at a
@@ -593,7 +788,9 @@ def rtt_breakdown(model: SplitCostModel, splits: Sequence[int]) -> RTTBreakdown:
             )
         )
         if b < L:
-            tx_times.append(link.transmission_latency_s(prof.boundary_act_bytes(b)))
+            # cut_cost_s prices the variant-compressed payload + encoder
+            # (bit-identical to the raw airtime without a variant)
+            tx_times.append(model.cut_cost_s(b))
     return RTTBreakdown(
         setup_s=link.t_setup_s,
         device_s=tuple(dev_times),

@@ -491,7 +491,16 @@ def pallas_fused_optimal_dp(
     share a launch); each subgroup runs one fused kernel pass and the
     tables scatter back into grid order. The bank is small by
     construction — distinct stacks, not scenarios, bound the subgroup
-    count."""
+    count.
+
+    Bottleneck variants need NO kernel change: a variant reprices only
+    the cut (compressed airtime + encoder time), both functions of the
+    boundary layer ``b`` alone, so the sweep engine folds them into the
+    per-scenario ``tx`` rows and the ``local + tx[s, b]`` decomposition
+    above — and hence this kernel — holds verbatim. Joint
+    (split, variant) solves fold the variant axis into the scenario
+    axis upstream (:func:`repro.core.sweep.solve_variant_bank`); this
+    entry only ever sees a flat scenario batch."""
     bank = np.asarray(bank, dtype=np.float64)
     tx = np.asarray(tx, dtype=np.float64)
     if tx.ndim != 2:

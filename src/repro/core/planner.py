@@ -23,6 +23,7 @@ import numpy as np
 from repro.core import solvers as S
 from repro.core import sweep as SW  # no cycle: sweep depends only on latency/solvers
 from repro.core.latency import (
+    BottleneckVariant,
     DeviceProfile,
     LinkProfile,
     ModelCostProfile,
@@ -58,6 +59,11 @@ class SplitPlan:
     objective_cost_s: float  # solver objective (no overheads)
     planner_time_s: float
     nodes_expanded: int
+    # joint (split, variant) solves report the adopted bottleneck
+    # variant: its bank index and accuracy proxy. None / 1.0 for plain
+    # single-variant plans (the historical shape).
+    variant: int | None = None
+    accuracy_proxy: float = 1.0
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -80,11 +86,15 @@ def _build_plan(
                 layer_names=tuple(lc.name for lc in prof.layers[a - 1 : b]),
                 infer_s=prof.segment_infer_s(a, b),
                 param_bytes=prof.segment_param_bytes(a, b),
-                tx_bytes=prof.boundary_act_bytes(b) if b < L else 0,
+                # bytes that actually cross the cut: the model's variant
+                # (if any) compresses the boundary activation, and the
+                # runtime prices hops from exactly this field
+                tx_bytes=model.cut_payload_bytes(b) if b < L else 0,
                 cost_s=model.segment_cost_s(a, b, i + 1),
             )
         )
     total = model.end_to_end_s(result.splits, with_overheads=True) if result.feasible else float("inf")
+    v = model._active_variant
     return SplitPlan(
         model=prof.name,
         solver=result.solver,
@@ -95,6 +105,8 @@ def _build_plan(
         objective_cost_s=result.cost_s,
         planner_time_s=result.wall_time_s,
         nodes_expanded=result.nodes_expanded,
+        variant=result.variant,
+        accuracy_proxy=1.0 if v is None else v.accuracy_proxy,
     )
 
 
@@ -103,6 +115,8 @@ def plan_split(
     n_devices: int,
     solver: str = "beam",
     energy_budget: float | None = None,
+    variants: Sequence[BottleneckVariant] | None = None,
+    accuracy_floor: float | None = None,
     **solver_kwargs,
 ) -> SplitPlan:
     """Solve Eq. 9 for the given cost model and device count.
@@ -120,15 +134,49 @@ def plan_split(
     :func:`repro.core.solvers.budget_masked` (the model's own
     :meth:`SplitCostModel.segment_energy_j` prices them); batched
     solvers mask the stacked tensor the same way
-    (:func:`repro.core.sweep.apply_energy_budget`)."""
+    (:func:`repro.core.sweep.apply_energy_budget`).
+
+    ``variants``: optional bottleneck-variant bank (see
+    :func:`repro.core.profiles.esp32_variant_bank`). The solve then
+    jointly optimizes (split point, variant) — scalar solvers via their
+    ``variants=`` dispatch, batched solvers via
+    :func:`repro.core.sweep.solve_variant_bank` — and the returned
+    plan's ``variant`` / ``accuracy_proxy`` report the adopted variant,
+    with every ``tx_bytes`` priced at its compressed payload.
+    ``accuracy_floor`` (requires ``variants``) masks variants whose
+    ``accuracy_proxy`` falls below the floor: ``min latency s.t.
+    accuracy_proxy >= floor``."""
     L = cost_model.profile.num_layers
     if not 1 <= n_devices <= L:
         raise ValueError(f"n_devices={n_devices} out of range for L={L}")
+    if accuracy_floor is not None and variants is None:
+        raise ValueError("accuracy_floor requires a variants bank")
     if solver in SW.BATCHED_SOLVERS:
         return plan_split_batch([cost_model], n_devices, solver=solver,
                                 energy_budget=energy_budget,
+                                variants=variants,
+                                accuracy_floor=accuracy_floor,
                                 **solver_kwargs)[0]
     fn = S.SOLVERS[solver]
+    combine = "max" if cost_model.objective == "bottleneck" else "sum"
+    if variants is not None:
+        bank_models = [dataclasses.replace(cost_model, variant=v)
+                       for v in variants]
+        insts = [
+            S.VariantInstance(
+                cost_fn=m.cost_segment_fn(),
+                energy_fn=(m.energy_segment_fn()
+                           if energy_budget is not None else None),
+                accuracy_proxy=v.accuracy_proxy,
+            )
+            for m, v in zip(bank_models, variants)
+        ]
+        result = fn(None, L, n_devices, combine=combine,
+                    energy_budget=energy_budget, variants=insts,
+                    accuracy_floor=accuracy_floor, **solver_kwargs)
+        chosen = (cost_model if result.variant is None
+                  else bank_models[result.variant])
+        return _build_plan(chosen, result, n_devices)
     if energy_budget is not None:
         solver_kwargs = dict(solver_kwargs,
                              energy_fn=cost_model.energy_segment_fn(),
@@ -137,7 +185,7 @@ def plan_split(
         cost_model.cost_segment_fn(),
         L,
         n_devices,
-        combine=("max" if cost_model.objective == "bottleneck" else "sum"),
+        combine=combine,
         **solver_kwargs,
     )
     return _build_plan(cost_model, result, n_devices)
@@ -149,6 +197,8 @@ def plan_split_batch(
     solver: str = "batched_dp",
     backend: str = "numpy",
     energy_budget: float | Sequence[float] | None = None,
+    variants: Sequence[BottleneckVariant] | None = None,
+    accuracy_floor: float | None = None,
     **solver_kwargs,
 ) -> list[SplitPlan]:
     """Plan many scenarios in one batched pass over stacked cost tensors.
@@ -176,9 +226,16 @@ def plan_split_batch(
     model's own :meth:`SplitCostModel.energy_cost_tensor`) exceeds the
     budget are masked to +inf before the solve
     (:func:`repro.core.sweep.apply_energy_budget`), so plans minimize
-    latency subject to the budget on every backend."""
+    latency subject to the budget on every backend.
+
+    ``variants`` / ``accuracy_floor``: joint (split, variant) solves —
+    the stacked tensor grows a variant axis and
+    :func:`repro.core.sweep.solve_variant_bank` folds it into the
+    scenario batch; see :func:`plan_split`."""
     if not cost_models:
         return []
+    if accuracy_floor is not None and variants is None:
+        raise ValueError("accuracy_floor requires a variants bank")
     L = cost_models[0].profile.num_layers
     if isinstance(n_devices, int):
         n_list = [n_devices] * len(cost_models)
@@ -198,14 +255,34 @@ def plan_split_batch(
     # per-model export sizes: each cost model's device tuple only has to
     # cover its OWN fleet (smaller fleets get +inf-padded device slices
     # the solvers never read)
-    C = SW.stack_cost_tensors(
-        cost_models, n_devices if isinstance(n_devices, int) else n_list)
-    if energy_budget is not None:
-        E = SW.stack_cost_tensors(
-            cost_models, n_devices if isinstance(n_devices, int) else n_list,
-            channels=("energy",))[0]
-        C = SW.apply_energy_budget(C, E, energy_budget)
+    n_arg = n_devices if isinstance(n_devices, int) else n_list
     ns = None if isinstance(n_devices, int) else np.asarray(n_list, np.int64)
+    if variants is not None:
+        C = SW.stack_cost_tensors(cost_models, n_arg, variants=variants)
+        if energy_budget is not None:
+            # one energy tensor per variant slice (encoder Joules differ),
+            # each masked exactly like the single-variant path
+            C = np.stack([
+                SW.apply_energy_budget(
+                    C[vi],
+                    SW.stack_cost_tensors(
+                        [dataclasses.replace(m, variant=v)
+                         for m in cost_models],
+                        n_arg, channels=("energy",))[0],
+                    energy_budget)
+                for vi, v in enumerate(variants)
+            ])
+        res = SW.solve_variant_bank(
+            C, solver=solver, combine=combine, backend=backend, n_devices=ns,
+            accuracy_proxy=[v.accuracy_proxy for v in variants],
+            accuracy_floor=accuracy_floor, **solver_kwargs)
+        return plans_from_batched(cost_models, res, n_list,
+                                  nodes_expanded=int(np.prod(C.shape[2:])),
+                                  variants=variants)
+    C = SW.stack_cost_tensors(cost_models, n_arg)
+    if energy_budget is not None:
+        E = SW.stack_cost_tensors(cost_models, n_arg, channels=("energy",))[0]
+        C = SW.apply_energy_budget(C, E, energy_budget)
     res = SW.solve_batched(C, solver=solver, combine=combine, backend=backend,
                            n_devices=ns, **solver_kwargs)
     return plans_from_batched(cost_models, res, n_list,
@@ -217,11 +294,15 @@ def plans_from_batched(
     res,  # sweep.BatchedSolverResult
     n_devices: int | Sequence[int],
     nodes_expanded: int = 0,
+    variants: Sequence[BottleneckVariant] | None = None,
 ) -> list[SplitPlan]:
     """Materialize per-scenario :class:`SplitPlan`\\ s from one batched
     solver result (shared by the planner and the adaptive manager).
     ``n_devices``: one fleet size for all scenarios, or one per
-    scenario."""
+    scenario. When the result came from a variant-bank solve
+    (``res.variant`` set) pass the same ``variants`` bank: each plan is
+    then built on its winning variant's cost model, so segment costs
+    and ``tx_bytes`` price the compressed cut."""
     if isinstance(n_devices, int):
         n_list = [n_devices] * len(cost_models)
     else:
@@ -229,12 +310,18 @@ def plans_from_batched(
     wall = res.wall_time_s / max(1, len(cost_models))
     plans = []
     for i, m in enumerate(cost_models):
+        vi = None
+        if res.variant is not None:
+            vi = int(res.variant[i])
+            if vi >= 0 and variants is not None:
+                m = dataclasses.replace(m, variant=variants[vi])
         sr = S.SolverResult(
             solver=res.solver,
             splits=res.splits_tuple(i),
             cost_s=float(res.cost_s[i]),
             wall_time_s=wall,
             nodes_expanded=nodes_expanded,
+            variant=None if vi is None or vi < 0 else vi,
         )
         plans.append(_build_plan(m, sr, n_list[i]))
     return plans

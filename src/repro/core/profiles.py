@@ -36,11 +36,15 @@ from __future__ import annotations
 
 from dataclasses import replace
 
+from typing import Sequence
+
 from repro.core.latency import (
+    BottleneckVariant,
     DeviceProfile,
     LinkProfile,
     ModelCostProfile,
     SplitCostModel,
+    bottleneck_variants,
 )
 
 # NOTE: repro.models.graph is imported lazily inside the builder functions
@@ -193,6 +197,40 @@ def paper_cost_model(
     prof = mobilenet_cost_profile() if model.startswith("mobilenet") else resnet50_cost_profile()
     return SplitCostModel(
         profile=prof, devices=(ESP32,), link=PROTOCOLS[protocol], objective=objective
+    )
+
+
+# ---------------------------------------------------------------------------
+# Bottleneck variant bank (split-computing feature compression)
+# ---------------------------------------------------------------------------
+
+# The split-computing exemplars ship a feature_compression_factor at the
+# cut (×4 in the reference client); ×1 keeps the paper's uncompressed
+# baseline in the bank so every joint solve can still pick it.
+PAPER_COMPRESSION_FACTORS: tuple[float, ...] = (1.0, 2.0, 4.0)
+
+
+def esp32_variant_bank(
+    factors: Sequence[float] = PAPER_COMPRESSION_FACTORS,
+    encoder_flops_per_byte: float = 16.0,
+    accuracy_drop_per_octave: float = 0.03,
+) -> tuple[BottleneckVariant, ...]:
+    """Bottleneck-variant bank priced at the ESP32-S3's calibrated rate.
+
+    Each factor becomes a :class:`repro.core.latency.BottleneckVariant`
+    whose encoder cost is ``encoder_flops_per_byte`` of extra
+    sensor-side work per raw activation byte (a small 1×1-conv
+    bottleneck head), converted to seconds with
+    :func:`esp32_flops_per_s` — so the latency the joint
+    (split, variant) solvers trade against the shrunken payload uses
+    the same device calibration as the per-layer costs. Factor 1.0
+    yields the identity variant (no encoder, accuracy proxy 1.0): the
+    bit-exact uncompressed path."""
+    per_byte = encoder_flops_per_byte / esp32_flops_per_s()
+    return bottleneck_variants(
+        factors,
+        encoder_s_per_byte=per_byte,
+        accuracy_drop_per_octave=accuracy_drop_per_octave,
     )
 
 

@@ -40,6 +40,13 @@ Precision follows the active JAX config like the single-device
 backend: float32 by default (equal-cost tie-breaks may differ from the
 float64 oracle), float64 — with scalar-oracle tie-break parity — when
 ``jax.config.jax_enable_x64`` is on.
+
+Bottleneck-variant banks ride the same partition: a joint
+(split, variant) solve folds the variant axis into the scenario axis
+(:func:`repro.core.sweep.solve_variant_bank` reshapes ``(V, S, N, L,
+L)`` to ``(V*S, N, L, L)`` variant-major) BEFORE dispatch, so the
+shards see an ordinary — just ``V×`` taller — scenario batch and the
+per-scenario independence that justifies the mesh is untouched.
 """
 
 from __future__ import annotations

@@ -40,7 +40,7 @@ import heapq
 import itertools
 import random
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Callable, Sequence
 
 INF = float("inf")
@@ -55,6 +55,7 @@ class SolverResult:
     cost_s: float  # combined segment cost (no setup/feedback overheads)
     wall_time_s: float  # planner processing time (Figs. 3-4 right axes)
     nodes_expanded: int  # segment-cost evaluations (unique, memoized)
+    variant: int | None = None  # winning variant index (None: no variant axis)
 
     @property
     def feasible(self) -> bool:
@@ -99,6 +100,69 @@ def budget_masked(
         return cost_fn(a, b, k)
 
     return fn
+
+
+@dataclass(frozen=True)
+class VariantInstance:
+    """One member of a model-variant bank at the scalar-solver level:
+    the variant's own ``CostSegment`` callable (compressed payload +
+    encoder already priced in), its energy callable (optional; encoder
+    energy included), and its unitless accuracy proxy.
+
+    The solvers stay opaque-callable pure: they never see
+    :class:`~repro.core.latency.BottleneckVariant` objects, only the
+    per-variant cost functions — build instances with
+    ``VariantInstance(replace(model, variant=v).cost_segment_fn(), ...)``
+    or let :func:`repro.core.planner.plan_split` do it."""
+
+    cost_fn: CostFn
+    energy_fn: CostFn | None = None
+    accuracy_proxy: float = 1.0
+
+
+def _as_variant(v) -> VariantInstance:
+    return v if isinstance(v, VariantInstance) else VariantInstance(cost_fn=v)
+
+
+def _best_variant(
+    solver_fn: Callable[..., "SolverResult"],
+    name: str,
+    variants: Sequence["VariantInstance | CostFn"],
+    accuracy_floor: float | None,
+    L: int,
+    N: int,
+    energy_budget: float | None,
+    **solver_kwargs,
+) -> "SolverResult":
+    """(split point, variant) joint optimization: run ``solver_fn`` once
+    per bank member and keep the cheapest, preferring the LOWEST variant
+    index on exact cost ties (the batched engine's first-minimum argmin
+    over the stacked variant axis matches this tie-break bit-for-bit).
+
+    ``accuracy_floor`` masks variants with ``accuracy_proxy < floor``
+    before the solve — the variant-axis mirror of
+    :func:`budget_masked`'s per-segment +inf masking. A bank whose every
+    member is masked (or infeasible) yields the usual infeasible result
+    with ``variant=None``."""
+    if not variants:
+        raise ValueError("variants must name at least one bank member")
+    t0 = time.perf_counter()
+    best: SolverResult | None = None
+    best_idx: int | None = None
+    nodes = 0
+    for idx, entry in enumerate(_as_variant(v) for v in variants):
+        if accuracy_floor is not None and entry.accuracy_proxy < accuracy_floor:
+            continue
+        res = solver_fn(entry.cost_fn, L, N, energy_fn=entry.energy_fn,
+                        energy_budget=energy_budget, **solver_kwargs)
+        nodes += res.nodes_expanded
+        if res.feasible and (best is None or res.cost_s < best.cost_s):
+            best, best_idx = res, idx
+    wall = time.perf_counter() - t0
+    if best is None:
+        return SolverResult(name, (), INF, wall, nodes, variant=None)
+    return replace(best, wall_time_s=wall, nodes_expanded=nodes,
+                   variant=best_idx)
 
 
 def total_energy(energy_fn: CostFn, splits: Sequence[int], L: int) -> float:
@@ -190,8 +254,17 @@ def beam_search(
     *,
     energy_fn: CostFn | None = None,
     energy_budget: float | None = None,
+    variants: Sequence[VariantInstance | CostFn] | None = None,
+    accuracy_floor: float | None = None,
 ) -> SolverResult:
     """Beam Search for split-point optimization (Algorithm 1).
+
+    ``variants`` switches on the (split point, variant) joint decision:
+    the bank's per-variant cost/energy callables supersede
+    ``cost_fn``/``energy_fn`` (pass ``cost_fn=None``) and the result
+    reports the winning bank index in ``SolverResult.variant``;
+    ``accuracy_floor`` masks bank members below it (see
+    :func:`_best_variant`).
 
     Maintains the top-``beam_width`` partial configurations by cumulative
     cost; at iteration k each candidate ``(pos, cost, splits)`` is extended
@@ -215,6 +288,11 @@ def beam_search(
     suffix/(N-k) lower-bounds its max. Without this, max-combine beams
     systematically favor short prefixes (low running max) and miss
     balanced optima."""
+    if variants is not None:
+        return _best_variant(
+            beam_search, "beam", variants, accuracy_floor, L, N,
+            energy_budget, beam_width=beam_width, combine=combine,
+            feasibility_lookahead=feasibility_lookahead, dominance=dominance)
     t0 = time.perf_counter()
     memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     comb = _combine_fn(combine)
@@ -284,9 +362,17 @@ def greedy_search(
     *,
     energy_fn: CostFn | None = None,
     energy_budget: float | None = None,
+    variants: Sequence[VariantInstance | CostFn] | None = None,
+    accuracy_floor: float | None = None,
 ) -> SolverResult:
     """Greedy Search (Algorithm 2): at step k pick the split minimizing the
-    immediate segment cost (Eq. 11)."""
+    immediate segment cost (Eq. 11). ``variants``/``accuracy_floor``:
+    joint (split, variant) decision as in :func:`beam_search`."""
+    if variants is not None:
+        return _best_variant(
+            greedy_search, "greedy", variants, accuracy_floor, L, N,
+            energy_budget, combine=combine,
+            feasibility_lookahead=feasibility_lookahead)
     t0 = time.perf_counter()
     memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     need = _min_devices_suffix(memo, L) if feasibility_lookahead else None
@@ -323,6 +409,8 @@ def first_fit_search(
     *,
     energy_fn: CostFn | None = None,
     energy_budget: float | None = None,
+    variants: Sequence[VariantInstance | CostFn] | None = None,
+    accuracy_floor: float | None = None,
 ) -> SolverResult:
     """First-Fit Search (Algorithm 3): scan left-to-right and accept the
     first split whose segment cost is within the device-k threshold tau_k;
@@ -331,7 +419,15 @@ def first_fit_search(
     When ``thresholds`` is None, tau_k defaults to the single-device
     whole-model cost divided by N (a uniform-share budget). When the whole
     model does not fit one device (cost INF), the budget falls back to the
-    per-device sum of longest-feasible-segment costs."""
+    per-device sum of longest-feasible-segment costs.
+
+    ``variants``/``accuracy_floor``: joint (split, variant) decision as
+    in :func:`beam_search`."""
+    if variants is not None:
+        return _best_variant(
+            first_fit_search, "first_fit", variants, accuracy_floor, L, N,
+            energy_budget, thresholds=thresholds, combine=combine,
+            feasibility_lookahead=feasibility_lookahead)
     t0 = time.perf_counter()
     memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     need = _min_devices_suffix(memo, L) if feasibility_lookahead else None
@@ -386,9 +482,18 @@ def random_fit(
     *,
     energy_fn: CostFn | None = None,
     energy_budget: float | None = None,
+    variants: Sequence[VariantInstance | CostFn] | None = None,
+    accuracy_floor: float | None = None,
 ) -> SolverResult:
     """Random-Fit: draw ``trials`` uniformly random valid configurations and
-    keep the best (the paper's Random-Fit baseline corresponds to trials=1)."""
+    keep the best (the paper's Random-Fit baseline corresponds to trials=1).
+    ``variants``/``accuracy_floor``: joint (split, variant) decision as in
+    :func:`beam_search` (every bank member sees the same draws — a paired
+    comparison)."""
+    if variants is not None:
+        return _best_variant(
+            random_fit, "random_fit", variants, accuracy_floor, L, N,
+            energy_budget, trials=trials, seed=seed, combine=combine)
     t0 = time.perf_counter()
     memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     rng = random.Random(seed)
@@ -410,6 +515,8 @@ def brute_force(
     *,
     energy_fn: CostFn | None = None,
     energy_budget: float | None = None,
+    variants: Sequence[VariantInstance | CostFn] | None = None,
+    accuracy_floor: float | None = None,
 ) -> SolverResult:
     """Brute-Force: enumerate all C(L-1, N-1) configurations (Fig. 4).
 
@@ -419,7 +526,13 @@ def brute_force(
 
     With ``energy_fn``/``energy_budget`` this is the budget-filtered
     enumeration oracle: every configuration containing an over-budget
-    segment totals +inf and can never win."""
+    segment totals +inf and can never win. With ``variants`` it is the
+    full (split, variant) enumeration oracle the batched variant-bank
+    engine is property-tested against."""
+    if variants is not None:
+        return _best_variant(
+            brute_force, "brute_force", variants, accuracy_floor, L, N,
+            energy_budget, combine=combine, max_candidates=max_candidates)
     t0 = time.perf_counter()
     memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     best: tuple[float, tuple[int, ...]] = (INF, ())
@@ -447,6 +560,8 @@ def optimal_dp(
     *,
     energy_fn: CostFn | None = None,
     energy_budget: float | None = None,
+    variants: Sequence[VariantInstance | CostFn] | None = None,
+    accuracy_floor: float | None = None,
 ) -> SolverResult:
     """Exact optimum via dynamic programming (beyond-paper reference).
 
@@ -455,7 +570,14 @@ def optimal_dp(
     ``max`` combine are decomposable. Used to (a) certify Beam Search
     quality in tests and (b) give the TPU planner an exact fallback at
     interactive speeds (the full Brute-Force table of Fig. 4 is
-    exponential; DP is quadratic)."""
+    exponential; DP is quadratic). ``variants``/``accuracy_floor``:
+    joint (split, variant) decision as in :func:`beam_search` — the DP
+    runs once per bank member, exactly optimal per variant, so the
+    banked result is exactly optimal over the joint space."""
+    if variants is not None:
+        return _best_variant(
+            optimal_dp, "optimal_dp", variants, accuracy_floor, L, N,
+            energy_budget, combine=combine)
     t0 = time.perf_counter()
     memo = _Memo(budget_masked(cost_fn, energy_fn, energy_budget))
     comb = _combine_fn(combine)

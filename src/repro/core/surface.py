@@ -46,7 +46,7 @@ from typing import Mapping, Sequence
 import numpy as np
 
 from repro.core import sweep as SW
-from repro.core.latency import LinkProfile, SplitCostModel
+from repro.core.latency import BottleneckVariant, LinkProfile, SplitCostModel
 
 INF = float("inf")
 
@@ -171,6 +171,10 @@ class SurfaceLookup:
     node_latency_s: float  # the nearest node's stored latency
     feasible: bool
     in_envelope: bool
+    # the node's adopted bottleneck variant: its index into the bank the
+    # surface was built with (0 = the bank's first entry, and also the
+    # value on surfaces built without a bank — the single-variant case)
+    variant: int = 0
 
 
 @dataclass(frozen=True)
@@ -186,6 +190,9 @@ class ProtocolSurface:
     latency_s: np.ndarray  # (T, G) float64, +inf where infeasible
     runner_splits: np.ndarray  # (T, G, N-1) int64, -1 where absent
     runner_latency_s: np.ndarray  # (T, G) float64, +inf where absent
+    # per-node winning bottleneck-variant indices into the bank the
+    # surface was built with; None on surfaces built without a bank
+    variant: np.ndarray | None = None  # (T, G) int64
 
     def __post_init__(self):
         # hot-path caches: plain-Python node decisions and latency rows so
@@ -198,12 +205,14 @@ class ProtocolSurface:
                 z = float(self.latency_s[i, j])
                 sp = self.splits[i, j]
                 feas = not (sp.size and (sp < 0).any()) and np.isfinite(z)
+                vi = 0 if self.variant is None else int(self.variant[i, j])
                 nodes[i][j] = SurfaceLookup(
                     protocol=self.protocol,
                     splits=tuple(int(x) for x in sp) if feas else (),
                     chunk_bytes=int(self.chunk_bytes[i, j]),
                     latency_s=z, node_latency_s=z,
                     feasible=feas, in_envelope=True,
+                    variant=max(vi, 0),
                 )
                 lat[i][j] = z
         object.__setattr__(self, "_nodes", nodes)
@@ -456,6 +465,8 @@ def build_surface(
     beam_width: int = 8,
     chunk_candidates: Sequence[int] | None = None,
     energy_budget: float | None = None,
+    variants: Sequence[BottleneckVariant] | None = None,
+    accuracy_floor: float | None = None,
 ) -> DegradationSurface:
     """Precompute a :class:`DegradationSurface` with the sweep engine.
 
@@ -504,6 +515,16 @@ def build_surface(
         to the budget (:func:`repro.core.sweep.apply_energy_budget`).
         The pallas backend falls back to its dense mode when a budget
         is set (the fused kernel prices raw local + TX only).
+      variants: optional bottleneck-variant bank. Every node then
+        decides (split, variant) jointly — the variant axis folds into
+        the node axis (one batched solve still prices everything, fused
+        pallas path included) and each node stores the winning bank
+        index (``SurfaceLookup.variant``), with chunk tuning and
+        latency priced on the winning variant's compressed cuts.
+      accuracy_floor: with ``variants``, masks bank entries whose
+        ``accuracy_proxy`` is below the floor before the solve
+        (:func:`repro.core.sweep.apply_accuracy_floor`) — every node
+        then minimizes latency subject to the accuracy constraint.
 
     Returns the surface for ``n_devices`` (node decisions bit-identical
     to the legacy re-solve at every grid node on the default NumPy
@@ -512,7 +533,8 @@ def build_surface(
         cost_model, protocols, (n_devices,), pt_scale=pt_scale,
         loss_p=loss_p, solver=solver, backend=backend,
         beam_width=beam_width, chunk_candidates=chunk_candidates,
-        energy_budget=energy_budget,
+        energy_budget=energy_budget, variants=variants,
+        accuracy_floor=accuracy_floor,
     )[n_devices]
 
 
@@ -555,6 +577,8 @@ def build_surfaces(
     beam_width: int = 8,
     chunk_candidates: Sequence[int] | None = None,
     energy_budget: float | None = None,
+    variants: Sequence[BottleneckVariant] | None = None,
+    accuracy_floor: float | None = None,
 ) -> dict[int, DegradationSurface]:
     """Precompute surfaces for SEVERAL fleet sizes in one batched solve.
 
@@ -576,7 +600,14 @@ def build_surfaces(
     only — see :func:`build_surface` for the parity caveat; the pallas
     path hands the fused kernel ``local`` + ``TX`` and never ships the
     stacked tensor to the device). Args otherwise as in
-    :func:`build_surface`."""
+    :func:`build_surface`.
+
+    With a ``variants`` bank the node axis grows variant-major —
+    ``TX`` stacks one block of node rows per bank entry, every solver
+    path (fused pallas included) prices the folded batch untouched, and
+    the per-(fleet-size, node) winner is the argmin over the bank
+    (:func:`repro.core.sweep._fold_variant_axis`, the same
+    lowest-index tie-break as every other joint solve)."""
     if solver not in SW.BATCHED_SOLVERS:
         raise ValueError(f"unknown batched solver {solver!r}; "
                          f"options: {sorted(SW.BATCHED_SOLVERS)}")
@@ -591,11 +622,18 @@ def build_surfaces(
     for n in sizes:
         if n < 1:
             raise ValueError(f"fleet size must be >= 1, got {n}")
+    bank = tuple(variants) if variants is not None else None
+    if bank is not None and not bank:
+        raise ValueError("variants bank must not be empty")
+    if accuracy_floor is not None and bank is None:
+        raise ValueError("accuracy_floor requires a variants bank")
     n_max = max(sizes)
     t0 = time.perf_counter()
     combine = "max" if cost_model.objective == "bottleneck" else "sum"
     # link-independent device-local tensor at the largest size; smaller
-    # fleets are prefixes (device k's matrix does not depend on N)
+    # fleets are prefixes (device k's matrix does not depend on N).
+    # Bottleneck variants never touch it — a variant reprices only the
+    # cut, so the bank folds entirely into the TX rows below.
     local = cost_model.local_cost_tensor(n_max)
 
     # node enumeration: protocol-major, then packet time, then loss
@@ -607,18 +645,37 @@ def build_surfaces(
         for pt in pts:
             for lp in losses:
                 links.append(refit_link(base, pt, lp))
+    n_nodes_total = len(links)
 
+    # with a variant bank the node axis grows variant-major: one block
+    # of TX rows per bank entry (folded index v * n_nodes + node)
+    node_models = ([cost_model] if bank is None
+                   else [replace(cost_model, variant=v) for v in bank])
     TX = np.stack([
-        replace(cost_model, link=lk).transmission_cost_vector()
+        replace(m, link=lk).transmission_cost_vector()
+        for m in node_models
         for lk in links
-    ])  # (S, L)
+    ])  # (V * S, L); plain (S, L) without a bank
+    if accuracy_floor is not None:
+        # mask below-floor variants in the TX rows (not just C): +inf
+        # rows make every segment of the variant block infeasible on
+        # EVERY solve path, the fused pallas kernel — which consumes TX
+        # directly — included. Same strict comparison as
+        # :func:`repro.core.sweep.apply_accuracy_floor`.
+        acc = np.array([v.accuracy_proxy for v in bank])
+        floor_mask = acc < float(accuracy_floor)
+        if floor_mask.any():
+            TX = np.where(
+                np.repeat(floor_mask, n_nodes_total)[:, None], INF, TX)
     C = local[None, :, :, :] + TX[:, None, None, :]
     if energy_budget is not None:
-        # per-node energy tensors (each node's own re-fitted link) mask
-        # over-budget segments to +inf; the DP then minimizes latency
-        # subject to the budget on every backend
+        # per-node energy tensors (each node's own re-fitted link, each
+        # variant's own encoder Joules) mask over-budget segments to
+        # +inf; the DP then minimizes latency subject to the budget on
+        # every backend
         E = np.stack([
-            replace(cost_model, link=lk).energy_cost_tensor(n_max)
+            replace(m, link=lk).energy_cost_tensor(n_max)
+            for m in node_models
             for lk in links
         ])
         C = SW.apply_energy_budget(C, E, energy_budget)
@@ -657,10 +714,22 @@ def build_surfaces(
             C, combine=combine, fleet_sizes=sizes, **kwargs)
         solve_time = res_by_n[n_max].wall_time_s
 
+    C_by_n: dict[int, np.ndarray] = {}
+    if bank is not None and len(bank) > 1:
+        # collapse the variant-major fold per fleet size: different
+        # fleet sizes may adopt different variants at the same node, so
+        # each size gets its own winner rows (and the winning variant's
+        # C rows for runner-up portfolio scoring)
+        for n in sizes:
+            folded, win_rows = SW._fold_variant_axis(
+                res_by_n[n], len(bank), n_nodes_total)
+            res_by_n[n] = folded
+            C_by_n[n] = C[win_rows]
+
     assembled = {
         n: _assemble_protocol_surfaces(
-            cost_model, protocols, axes, links, C, res_by_n[n], n,
-            combine, chunk_candidates)
+            cost_model, protocols, axes, links, C_by_n.get(n, C),
+            res_by_n[n], n, combine, chunk_candidates, variants=bank)
         for n in sizes
     }
     # shared family wall: every surface reports the one batched build
@@ -684,18 +753,30 @@ def _assemble_protocol_surfaces(
     n_devices: int,
     combine: str,
     chunk_candidates: Sequence[int] | None,
+    variants: Sequence[BottleneckVariant] | None = None,
 ) -> dict[str, ProtocolSurface]:
     """Per-node pricing for one fleet size: chunk-tune and price each
     node's winning plan (the legacy adoption arithmetic, so node
     decisions stay bit-identical to a re-solve) and pick its runner-up
-    from the protocol's plan portfolio."""
+    from the protocol's plan portfolio. With a ``variants`` bank the
+    node's winning variant model prices everything — chunk tuning sees
+    the compressed cut bytes, latency includes the encoder cost, and
+    the node records the winning bank index."""
+    bank_models = (None if variants is None
+                   else [replace(cost_model, variant=v) for v in variants])
 
-    def tuned_latency(lk: LinkProfile, splits: tuple[int, ...]) -> tuple[int, float]:
-        """Chunk-tune a plan and price it — the legacy adoption arithmetic."""
-        cuts = [cost_model.profile.boundary_act_bytes(b) for b in splits]
+    def node_model(vi: int) -> SplitCostModel:
+        return cost_model if bank_models is None else bank_models[vi]
+
+    def tuned_latency(lk: LinkProfile, splits: tuple[int, ...],
+                      model: SplitCostModel) -> tuple[int, float]:
+        """Chunk-tune a plan and price it — the legacy adoption
+        arithmetic, on the node's winning variant model (compressed cut
+        bytes drive the chunk choice)."""
+        cuts = [model.cut_payload_bytes(b) for b in splits]
         chunk, _ = optimize_chunk_size(lk, cuts, chunk_candidates)
         tuned = replace(lk, mtu_bytes=chunk)
-        lat = replace(cost_model, link=tuned).end_to_end_s(splits)
+        lat = replace(model, link=tuned).end_to_end_s(splits)
         return chunk, lat
 
     surfaces: dict[str, ProtocolSurface] = {}
@@ -711,6 +792,8 @@ def _assemble_protocol_surfaces(
         lats = np.full((T, G), INF)
         run_splits = np.full_like(splits, -1)
         run_lats = np.full((T, G), INF)
+        var_grid = (None if variants is None
+                    else np.zeros((T, G), dtype=np.int64))
 
         # plan portfolio: the distinct feasible plans across this
         # protocol's nodes, scored on every node in one batched pass —
@@ -740,18 +823,27 @@ def _assemble_protocol_surfaces(
                 if not sp and n_devices > 1:
                     continue
                 lk = node_links[g]
-                chunk, lat = tuned_latency(lk, sp)
+                vi = 0
+                if res.variant is not None:
+                    vi = max(int(res.variant[ridx]), 0)
+                if var_grid is not None:
+                    var_grid[i, j] = vi
+                model = node_model(vi)
+                chunk, lat = tuned_latency(lk, sp, model)
                 splits[i, j] = np.asarray(sp, dtype=np.int64)
                 chunks[i, j] = chunk
                 lats[i, j] = lat
                 if port_cost is not None:
                     # runner-up: cheapest portfolio plan that is not the
                     # winner, chunk-tuned and priced like the winner
+                    # (under the node's winning variant model — the
+                    # variant is the node's decision, the runner-up
+                    # only hedges the split)
                     order = np.argsort(port_cost[g], kind="stable")
                     for m in order:
                         alt = portfolio[int(m)]
                         if alt != sp and np.isfinite(port_cost[g, m]):
-                            r_chunk, r_lat = tuned_latency(lk, alt)
+                            r_chunk, r_lat = tuned_latency(lk, alt, model)
                             run_splits[i, j] = np.asarray(alt, dtype=np.int64)
                             run_lats[i, j] = r_lat
                             break
@@ -759,6 +851,7 @@ def _assemble_protocol_surfaces(
             protocol=name, base=base, packet_time_s=pts, loss_p=losses,
             splits=splits, chunk_bytes=chunks, latency_s=lats,
             runner_splits=run_splits, runner_latency_s=run_lats,
+            variant=var_grid,
         )
         s += n_nodes
     return surfaces

@@ -72,11 +72,13 @@ import numpy as np
 
 from repro.core.latency import (
     COST_CHANNELS,
+    BottleneckVariant,
     ContentionModel,
     DeviceProfile,
     LinkProfile,
     ModelCostProfile,
     SplitCostModel,
+    bottleneck_variant,
 )
 from repro.core import solvers as S
 
@@ -85,10 +87,12 @@ INF = float("inf")
 __all__ = [
     "DP_BACKENDS",
     "BatchedSolverResult",
+    "ParetoFrontier",
     "Scenario",
     "ScenarioGrid",
     "SweepResult",
     "SweepRow",
+    "apply_accuracy_floor",
     "apply_energy_budget",
     "batched_beam_search",
     "batched_beam_search_all_k",
@@ -97,7 +101,9 @@ __all__ = [
     "batched_optimal_dp",
     "batched_total_cost",
     "combine_channels",
+    "pareto_frontier",
     "solve_multi_channel",
+    "solve_variant_bank",
     "stack_cost_tensors",
     "sweep",
     "sweep_scalar",
@@ -113,6 +119,7 @@ def stack_cost_tensors(
     models: Sequence[SplitCostModel],
     n_devices: int | Sequence[int],
     channels: Sequence[str] | None = None,
+    variants: Sequence[BottleneckVariant] | None = None,
 ) -> np.ndarray:
     """Stack per-scenario cost tensors into ``(S, N, L, L)``.
 
@@ -129,7 +136,30 @@ def stack_cost_tensors(
     the stacked multi-channel tensor ``C[ch, s, k-1, a-1, b-1]`` of
     shape (len(channels), S, N, L, L); each channel slice is
     bit-identical to the single-channel stack of that channel (the
-    degenerate one-channel case therefore IS the historical tensor)."""
+    degenerate one-channel case therefore IS the historical tensor).
+
+    ``variants``: optional bottleneck-variant bank (see
+    :class:`repro.core.latency.BottleneckVariant`). When given, the
+    result grows a leading variant axis — ``C[v, s, k-1, a-1, b-1]`` of
+    shape (V, S, N, L, L) — where slice ``v`` is the stack of
+    ``replace(m, variant=variants[v])`` tensors, i.e. each variant
+    reprices the cut payload (compressed bytes + encoder time) while
+    the local compute term is shared. Slice 0 of an identity-leading
+    bank is bit-identical to the variant-free stack. Mutually exclusive
+    with ``channels`` (mask/solve one concern at a time; energy budgets
+    under a variant bank stack the energy channel per variant). Feed
+    the result to :func:`solve_variant_bank`."""
+    if channels is not None and variants is not None:
+        raise ValueError("stack_cost_tensors: channels and variants are "
+                         "mutually exclusive; stack channels per variant")
+    if variants is not None:
+        if not variants:
+            raise ValueError("variants bank must not be empty")
+        return np.stack([
+            stack_cost_tensors([replace(m, variant=v) for m in models],
+                               n_devices)
+            for v in variants
+        ], axis=0)
     if isinstance(n_devices, (int, np.integer)):
         n_list = [int(n_devices)] * len(models)
     else:
@@ -299,6 +329,11 @@ class BatchedSolverResult:
     # over channel ch's own combine mode. None on single-channel solves.
     channels: tuple[str, ...] | None = None
     channel_cost_s: np.ndarray | None = None  # (n_channels, S) float64
+    # variant-bank solves (solve_variant_bank) report the winning
+    # bottleneck variant per scenario: variant[s] is the bank index of
+    # the adopted variant (-1 where no variant is feasible). None on
+    # plain single-variant solves.
+    variant: np.ndarray | None = None  # (S,) int64
 
     @property
     def n_scenarios(self) -> int:
@@ -1246,6 +1281,135 @@ def solve_multi_channel(
 
 
 # ---------------------------------------------------------------------------
+# Variant-bank solves (joint split × bottleneck-variant decisions)
+# ---------------------------------------------------------------------------
+
+
+def apply_accuracy_floor(
+    C: np.ndarray,
+    accuracy_proxy: np.ndarray | Sequence[float] | None,
+    accuracy_floor: float | None,
+) -> np.ndarray:
+    """Mask whole variant slices of a stacked variant tensor
+    ``C[v, s, k-1, a-1, b-1]`` to +inf wherever the variant's
+    ``accuracy_proxy`` falls below ``accuracy_floor``.
+
+    This is the accuracy-constrained planning mode — ``min latency
+    s.t. accuracy_proxy >= floor`` — expressed exactly like
+    :func:`apply_energy_budget`: the constraint becomes +inf entries in
+    an ordinary cost tensor every existing backend solves unchanged.
+    ``accuracy_floor=None`` means unconstrained (``C`` is returned
+    untouched — the identical object, keeping the degenerate path
+    bit-exact); the comparison is the same strict inequality the scalar
+    :func:`repro.core.solvers._best_variant` dispatcher uses
+    (``accuracy_proxy < floor`` masks)."""
+    if accuracy_floor is None:
+        return C
+    if accuracy_proxy is None:
+        raise ValueError("accuracy_floor given without accuracy_proxy")
+    acc = np.asarray(accuracy_proxy, dtype=np.float64)
+    if acc.ndim != 1 or acc.shape[0] != C.shape[0]:
+        raise ValueError(
+            f"accuracy_proxy must have one entry per variant "
+            f"({C.shape[0]},); got shape {acc.shape}")
+    mask = acc < float(accuracy_floor)
+    if not mask.any():
+        return C
+    return np.where(mask[:, None, None, None, None], INF, C)
+
+
+def _fold_variant_axis(
+    res: BatchedSolverResult, V: int, Sn: int
+) -> tuple[BatchedSolverResult, np.ndarray]:
+    """Collapse a variant-major folded solve (``V*Sn`` scenarios, index
+    ``v*Sn + s``) back to ``Sn`` scenarios: per-scenario argmin over the
+    ``V`` stacked costs. ``np.argmin`` keeps the FIRST minimum — the
+    lowest variant index on exact ties, matching the scalar
+    ``_best_variant`` strict-``<`` loop. Returns the folded result
+    (``variant`` set, -1 where infeasible) and the winning row indices
+    into the folded scenario axis (callers gather per-node data — e.g.
+    the winning variant's cost-tensor rows — with them)."""
+    cost_vs = res.cost_s.reshape(V, Sn)
+    v_star = np.argmin(cost_vs, axis=0)
+    s_idx = np.arange(Sn)
+    rows = v_star * Sn + s_idx
+    feasible = res.feasible[rows]
+    variant = np.where(feasible, v_star, -1).astype(np.int64)
+    folded = BatchedSolverResult(
+        solver=res.solver,
+        backend=res.backend,
+        n_devices=res.n_devices,
+        splits=res.splits[rows],
+        cost_s=cost_vs[v_star, s_idx],
+        feasible=feasible,
+        wall_time_s=res.wall_time_s,
+        n_devices_s=(None if res.n_devices_s is None
+                     else res.n_devices_s[rows]),
+        variant=variant,
+    )
+    return folded, rows
+
+
+def solve_variant_bank(
+    C: np.ndarray,
+    solver: str = "batched_dp",
+    combine: str = "sum",
+    backend: str = "numpy",
+    n_devices: np.ndarray | Sequence[int] | int | None = None,
+    accuracy_proxy: np.ndarray | Sequence[float] | None = None,
+    accuracy_floor: float | None = None,
+    **solver_kwargs,
+) -> BatchedSolverResult:
+    """Jointly optimize ``(split point, bottleneck variant)`` over a
+    stacked variant tensor ``C[v, s, k-1, a-1, b-1]`` (see
+    :func:`stack_cost_tensors` with ``variants=``).
+
+    The variant axis folds into the scenario axis — the ``(V, S, N, L,
+    L)`` tensor reshapes (C-order, variant-major) to ``(V*S, N, L, L)``
+    and ONE batched solve prices every (variant, scenario) pair; the
+    per-scenario winner is then the argmin over the ``V`` stacked
+    costs. ``np.argmin`` keeps the FIRST minimum, i.e. the
+    lowest-index variant on exact cost ties — the same strict-``<``
+    tie-break the scalar :func:`repro.core.solvers._best_variant` loop
+    applies, so batched and scalar joint solves agree bitwise.
+
+    Degenerate dispatch: ``V == 1`` (after any ``accuracy_floor``
+    masking ``V == 1`` stays one slice) solves ``C[0]`` via
+    :func:`solve_batched` untouched, so single-variant runs are
+    bit-exact vs the historical path on every backend; the property
+    suite pins this for all four ``DP_BACKENDS``.
+
+    ``accuracy_proxy`` (one entry per variant) + ``accuracy_floor``
+    enable accuracy-constrained planning via
+    :func:`apply_accuracy_floor`. The result's ``variant[s]`` is the
+    winning bank index (-1 where no variant is feasible); ``splits``,
+    ``cost_s`` and ``feasible`` describe the winning variant's plan."""
+    C = np.asarray(C, dtype=np.float64)
+    if C.ndim != 5:
+        raise ValueError(f"C must be (n_variants, S, N, L, L), got {C.shape}")
+    if solver_kwargs.get("return_all_k"):
+        raise ValueError("solve_variant_bank does not support return_all_k")
+    V, Sn, N, L, _ = C.shape
+    acc = None
+    if accuracy_proxy is not None:
+        acc = np.asarray(accuracy_proxy, dtype=np.float64)
+    C = apply_accuracy_floor(C, acc, accuracy_floor)
+    if V == 1:
+        res = solve_batched(C[0], solver=solver, combine=combine,
+                            backend=backend, n_devices=n_devices,
+                            **solver_kwargs)
+        variant = np.where(res.feasible, 0, -1).astype(np.int64)
+        return replace(res, variant=variant)
+    ns = _normalize_ns(n_devices, Sn, N) if n_devices is not None else None
+    folded_ns = None if ns is None else np.tile(ns, V)
+    res = solve_batched(C.reshape(V * Sn, N, L, L), solver=solver,
+                        combine=combine, backend=backend,
+                        n_devices=folded_ns, **solver_kwargs)
+    folded, _ = _fold_variant_axis(res, V, Sn)
+    return folded
+
+
+# ---------------------------------------------------------------------------
 # ScenarioGrid — the fleet-sweep API
 # ---------------------------------------------------------------------------
 
@@ -1271,14 +1435,16 @@ class Scenario:
     mix: str | None = None  # device-mix name (None -> grid.devices)
     contention: int = 1  # concurrent transmitters sharing the channel
     energy_budget: float | None = None  # per-device Joule cap
+    compression: float = 1.0  # bottleneck compression factor (1.0 = identity)
 
     def describe(self) -> str:
         loss = "base" if self.loss_p is None else f"p={self.loss_p:g}"
         mix = "" if self.mix is None else f" mix={self.mix}"
         con = "" if self.contention <= 1 else f" tx={self.contention}"
         eb = "" if self.energy_budget is None else f" E<={self.energy_budget:g}J"
+        cx = "" if self.compression == 1.0 else f" cx{self.compression:g}"
         return (f"{self.model}/{self.protocol} N={self.n_devices} "
-                f"{loss} rate×{self.rate_scale:g}{mix}{con}{eb}")
+                f"{loss} rate×{self.rate_scale:g}{mix}{con}{eb}{cx}")
 
 
 @dataclass(frozen=True)
@@ -1309,7 +1475,19 @@ class ScenarioGrid:
     uncontended bit-exact default). ``energy_budgets`` adds a per-device
     Joule-cap axis (``None`` = unconstrained): budgeted scenarios
     minimize latency over the splits whose every segment fits the
-    budget."""
+    budget.
+
+    ``compression_factors`` adds the bottleneck-variant axis: each
+    entry is a compression factor applied at the cut (factor 1.0 is
+    the identity variant — the bit-exact historical path). Non-identity
+    factors build a :class:`repro.core.latency.BottleneckVariant` via
+    :func:`repro.core.latency.bottleneck_variant` with the grid's
+    ``variant_encoder_t_s`` / ``variant_encoder_s_per_byte`` /
+    ``variant_accuracy_drop`` knobs: the cut payload shrinks to
+    ``ceil(bytes / factor)``, sensor-side compute grows by the encoder
+    cost, and the scenario's plan carries the variant's
+    ``accuracy_proxy`` — the latency-vs-accuracy trade
+    :meth:`SweepResult.pareto` extracts frontiers from."""
 
     models: Mapping[str, ModelCostProfile]
     links: Mapping[str, LinkProfile]
@@ -1322,16 +1500,25 @@ class ScenarioGrid:
     contention_groups: tuple[int, ...] = (1,)
     energy_budgets: tuple[float | None, ...] = (None,)
     mac_efficiency: float = 1.0  # shared-channel MAC efficiency (see above)
+    compression_factors: tuple[float, ...] = (1.0,)
+    variant_encoder_t_s: float = 0.0  # fixed encoder latency per cut
+    variant_encoder_s_per_byte: float = 0.0  # linear encoder latency per byte
+    variant_accuracy_drop: float = 0.03  # accuracy-proxy drop per octave
 
     def __post_init__(self):
         if not self.devices and not self.device_mixes:
             raise ValueError("ScenarioGrid requires devices or device_mixes")
         for field_name in ("n_devices", "loss_p", "rate_scale",
-                           "contention_groups", "energy_budgets"):
+                           "contention_groups", "energy_budgets",
+                           "compression_factors"):
             object.__setattr__(self, field_name, tuple(getattr(self, field_name)))
         for g in self.contention_groups:
             if g < 1:
                 raise ValueError(f"contention group must be >= 1, got {g}")
+        for cf in self.compression_factors:
+            if cf < 1.0:
+                raise ValueError(
+                    f"compression factor must be >= 1, got {cf}")
         object.__setattr__(self, "models", dict(self.models))
         object.__setattr__(self, "links", dict(self.links))
         if self.device_mixes is not None:
@@ -1365,14 +1552,15 @@ class ScenarioGrid:
         return (len(self.models) * len(self.links) * len(self.n_devices)
                 * len(self.loss_p) * len(self.rate_scale)
                 * len(self.mix_names) * len(self.contention_groups)
-                * len(self.energy_budgets))
+                * len(self.energy_budgets) * len(self.compression_factors))
 
     def scenarios(self) -> list[Scenario]:
         """Deterministic enumeration order: model-major, then device mix,
         then fleet size, then protocol × loss × rate × contention ×
-        energy budget (the link axes batch densely)."""
+        energy budget × compression (the link axes batch densely)."""
         return [
-            Scenario(m, p, n, lp, rs, mix=mx, contention=cg, energy_budget=eb)
+            Scenario(m, p, n, lp, rs, mix=mx, contention=cg, energy_budget=eb,
+                     compression=cf)
             for m in self.models
             for mx in self.mix_names
             for n in self.n_devices
@@ -1381,6 +1569,7 @@ class ScenarioGrid:
             for rs in self.rate_scale
             for cg in self.contention_groups
             for eb in self.energy_budgets
+            for cf in self.compression_factors
         ]
 
     def link_variant(self, sc: Scenario) -> LinkProfile:
@@ -1417,12 +1606,31 @@ class ScenarioGrid:
             return self.device_mixes[sc.mix]
         return self.devices
 
+    def variant_for(self, sc: Scenario) -> BottleneckVariant | None:
+        """The scenario's bottleneck variant (``None`` for compression
+        factor 1.0 — the bit-exact historical path), built from the
+        grid's encoder/accuracy knobs."""
+        if sc.compression == 1.0:
+            return None
+        return bottleneck_variant(
+            sc.compression,
+            encoder_t_s=self.variant_encoder_t_s,
+            encoder_s_per_byte=self.variant_encoder_s_per_byte,
+            accuracy_drop_per_octave=self.variant_accuracy_drop,
+        )
+
+    def accuracy_for(self, sc: Scenario) -> float:
+        """The scenario's accuracy proxy (1.0 for the identity variant)."""
+        v = self.variant_for(sc)
+        return 1.0 if v is None else v.accuracy_proxy
+
     def cost_model(self, sc: Scenario) -> SplitCostModel:
         """The scalar-oracle :class:`SplitCostModel` for one scenario."""
         return SplitCostModel(
             profile=self.models[sc.model], devices=self.devices_for(sc),
             link=self.link_variant(sc), objective=self.objective,
             contention=self.contention_model(sc),
+            variant=self.variant_for(sc),
         )
 
     def degradation_surface(self, model: str | None = None,
@@ -1466,8 +1674,9 @@ class SweepRow:
     objective_cost_s: float  # solver objective (no setup/feedback)
     total_latency_s: float  # Eq. 8 incl. link setup + feedback overheads
     device_s: float  # summed device-local segment latency
-    transmission_s: float  # summed cut transmission latency
+    transmission_s: float  # summed cut transmission + encoder latency
     solver_wall_s: float  # this scenario's share of the batched solve
+    accuracy_proxy: float = 1.0  # the scenario variant's accuracy proxy
 
     def to_dict(self) -> dict:
         d = dict(self.scenario.__dict__)
@@ -1477,6 +1686,7 @@ class SweepRow:
             total_latency_s=self.total_latency_s,
             device_s=self.device_s, transmission_s=self.transmission_s,
             solver_wall_s=self.solver_wall_s,
+            accuracy_proxy=self.accuracy_proxy,
         )
         return d
 
@@ -1530,37 +1740,146 @@ class SweepResult:
 
     def to_csv(self) -> str:
         cols = ["model", "protocol", "n_devices", "loss_p", "rate_scale",
-                "mix", "contention", "energy_budget", "feasible", "splits",
-                "objective_cost_s", "total_latency_s", "device_s",
-                "transmission_s", "solver_wall_s"]
+                "mix", "contention", "energy_budget", "compression",
+                "feasible", "splits", "objective_cost_s", "total_latency_s",
+                "accuracy_proxy", "device_s", "transmission_s",
+                "solver_wall_s"]
         lines = [",".join(cols)]
         for d in self.to_dicts():
             d["splits"] = "|".join(str(x) for x in d["splits"])
             lines.append(",".join(str(d[c]) for c in cols))
         return "\n".join(lines) + "\n"
 
+    def pareto(
+        self, by: Sequence[str] = ("model", "protocol", "n_devices")
+    ) -> dict[tuple, "ParetoFrontier"]:
+        """Latency-vs-accuracy Pareto frontiers, one per distinct value
+        of the ``by`` scenario fields (default: per model × protocol ×
+        fleet size). Within each group the non-dominated set over
+        ``(total_latency_s, accuracy_proxy)`` is extracted by
+        :func:`pareto_frontier`; rows differing only in compression
+        factor (and any other swept axes not named in ``by``) compete
+        in the same frontier."""
+        by = tuple(by)
+        groups: dict[tuple, list[SweepRow]] = {}
+        for r in self.rows:
+            key = tuple(getattr(r.scenario, k) for k in by)
+            groups.setdefault(key, []).append(r)
+        return {key: ParetoFrontier(by=by, key=key, rows=pareto_frontier(g))
+                for key, g in groups.items()}
+
+
+def pareto_frontier(rows: Sequence[SweepRow]) -> tuple[SweepRow, ...]:
+    """The non-dominated subset of ``rows`` under minimize
+    ``total_latency_s`` / maximize ``accuracy_proxy``.
+
+    Row ``r`` is dominated iff some other row has latency <= and
+    accuracy >= with at least one strict inequality; exact duplicates
+    on both axes all survive (neither dominates the other). Infeasible
+    rows never enter the frontier. The extraction is the O(n^2)
+    pairwise definition verbatim — frontier sizes are small and the
+    semantics stay visibly identical to the brute-force oracle the
+    property suite compares against. Result is sorted by ascending
+    latency (descending accuracy on ties)."""
+    feas = [r for r in rows if r.feasible]
+    front = []
+    for r in feas:
+        dominated = False
+        for o in feas:
+            if (o.total_latency_s <= r.total_latency_s
+                    and o.accuracy_proxy >= r.accuracy_proxy
+                    and (o.total_latency_s < r.total_latency_s
+                         or o.accuracy_proxy > r.accuracy_proxy)):
+                dominated = True
+                break
+        if not dominated:
+            front.append(r)
+    front.sort(key=lambda r: (r.total_latency_s, -r.accuracy_proxy))
+    return tuple(front)
+
+
+@dataclass(frozen=True)
+class ParetoFrontier:
+    """One group's latency-vs-accuracy frontier (see
+    :meth:`SweepResult.pareto`): the non-dominated rows, sorted by
+    ascending latency."""
+
+    by: tuple[str, ...]  # the scenario fields the group was keyed on
+    key: tuple  # this group's values for those fields
+    rows: tuple[SweepRow, ...]  # non-dominated, ascending latency
+
+    @property
+    def n_points(self) -> int:
+        return len(self.rows)
+
+    def to_csv(self) -> str:
+        cols = list(self.by) + ["compression", "accuracy_proxy",
+                                "total_latency_s", "splits"]
+        lines = [",".join(cols)]
+        for r in self.rows:
+            vals = [str(getattr(r.scenario, k)) for k in self.by]
+            vals += [str(r.scenario.compression), str(r.accuracy_proxy),
+                     str(r.total_latency_s),
+                     "|".join(str(x) for x in r.splits)]
+            lines.append(",".join(vals))
+        return "\n".join(lines) + "\n"
+
 
 def _group_tx_vectors(
     grid: ScenarioGrid, profile: ModelCostProfile, group: list[Scenario]
-) -> np.ndarray:
+) -> tuple[np.ndarray, np.ndarray | None, np.ndarray | None]:
     """(S_g, L) transmission-cost vectors, amortizing packet counts per
-    protocol (K depends only on MTU) against per-scenario packet times.
+    (MTU, compression factor) against per-scenario packet times.
     Airtime is priced on each scenario's contention-scaled effective
-    link, matching the scalar oracle's :attr:`SplitCostModel.effective_link`."""
+    link, matching the scalar oracle's :attr:`SplitCostModel.effective_link`;
+    a scenario with a bottleneck variant prices K on the compressed cut
+    bytes and adds the encoder-time vector, matching
+    :meth:`SplitCostModel.transmission_cost_vector` term-for-term.
+
+    Returns ``(TX, AIR, ENC)``. ``TX`` is what the latency tensor adds
+    (airtime + encoder time). ``AIR``/``ENC`` split that into pure
+    airtime and encoder time for the energy tensor, which prices them
+    at different powers (radio vs device); both are ``None`` when no
+    scenario in the group carries a variant — the historical
+    single-array path, bit-exact because identity rows never see a
+    ``+ 0.0``."""
     L = profile.num_layers
-    act = profile.segment_arrays.boundary_act_bytes[1:].astype(np.float64)
-    packets_by_mtu: dict[int, np.ndarray] = {}
+    act_raw = profile.segment_arrays.boundary_act_bytes[1:].astype(np.float64)
+    variants = [grid.variant_for(sc) for sc in group]
+    any_variant = any(v is not None for v in variants)
+    packets_by_key: dict[tuple[int, float], np.ndarray] = {}
+    enc_by_factor: dict[float, np.ndarray] = {}
     out = np.empty((len(group), L))
-    for i, sc in enumerate(group):
+    air_out = np.empty((len(group), L)) if any_variant else None
+    enc_out = np.zeros((len(group), L)) if any_variant else None
+    for i, (sc, v) in enumerate(zip(group, variants)):
         link = grid.effective_link(sc)
-        K = packets_by_mtu.get(link.mtu_bytes)
+        factor = 1.0 if v is None else v.compression_factor
+        K = packets_by_key.get((link.mtu_bytes, factor))
         if K is None:
+            if v is None:
+                act = act_raw
+            else:
+                act = np.where(act_raw > 0,
+                               np.ceil(act_raw / v.compression_factor), 0.0)
             K = np.where(act > 0, np.ceil(act / link.mtu_bytes), 0.0)
-            packets_by_mtu[link.mtu_bytes] = K
+            packets_by_key[(link.mtu_bytes, factor)] = K
         tx = K * link.packet_time_s()
         tx[-1] = 0.0
+        if air_out is not None:
+            air_out[i] = tx
+        if v is not None:
+            enc = enc_by_factor.get(factor)
+            if enc is None:
+                enc = np.where(act_raw > 0,
+                               v.encoder_t_s + act_raw * v.encoder_s_per_byte,
+                               0.0)
+                enc[-1] = 0.0
+                enc_by_factor[factor] = enc
+            enc_out[i] = enc
+            tx = tx + enc
         out[i] = tx
-    return out
+    return out, air_out, enc_out
 
 
 def _group_energy_tensor(
@@ -1569,7 +1888,8 @@ def _group_energy_tensor(
     bank: np.ndarray,
     bank_rows: Mapping[tuple[DeviceProfile, bool], int],
     bank_idx: np.ndarray,
-    TX: np.ndarray,
+    AIR: np.ndarray,
+    ENC: np.ndarray | None = None,
 ) -> np.ndarray:
     """(S_g, N_max, L, L) energy tensor for one sweep group, assembled
     from the SAME profile bank and transmission vectors as the latency
@@ -1577,8 +1897,14 @@ def _group_energy_tensor(
     scenario's own :meth:`SplitCostModel.energy_cost_tensor` (same
     power × airtime products in the same order) for every live device
     slot ``k <= n_s``; filler slots beyond a scenario's fleet size carry
-    bank-row-0 garbage the solvers never read, like the latency tensor."""
-    L = TX.shape[1]
+    bank-row-0 garbage the solvers never read, like the latency tensor.
+
+    ``AIR`` is the pure-airtime vector stack (radio-priced at
+    tx/rx power); ``ENC``, when a scenario carries a bottleneck
+    variant, holds the encoder-time vectors priced at the transmitting
+    device's active power — the same decomposition the scalar
+    :meth:`SplitCostModel.segment_energy_j` applies."""
+    L = AIR.shape[1]
     row_power = np.zeros(len(bank), dtype=np.float64)
     for (dev, _is_first), row in bank_rows.items():
         row_power[row] = dev.active_power_w
@@ -1586,11 +1912,14 @@ def _group_energy_tensor(
         e_bank = np.where(np.isfinite(bank),
                           row_power[:, None, None] * bank, INF)
     E = e_bank[bank_idx]  # (S_g, N_max, L, L)
-    rx_t = np.zeros_like(TX)
-    rx_t[:, 1:] = TX[:, : L - 1]  # [a-1] = airtime of the cut entering at a
+    if ENC is not None:
+        pw = row_power[bank_idx]  # (S_g, N_max) per-slot active power
+        E = E + pw[:, :, None, None] * ENC[:, None, None, :]
+    rx_t = np.zeros_like(AIR)
+    rx_t[:, 1:] = AIR[:, : L - 1]  # [a-1] = airtime of the cut entering at a
     tx_p = np.array([grid.effective_link(sc).tx_power_w for sc in group])
     rx_p = np.array([grid.effective_link(sc).rx_power_w for sc in group])
-    E = E + (tx_p[:, None] * TX)[:, None, None, :]
+    E = E + (tx_p[:, None] * AIR)[:, None, None, :]
     E = E + (rx_p[:, None] * rx_t)[:, None, :, None]
     return E
 
@@ -1694,7 +2023,9 @@ def sweep(
             # device slots beyond a scenario's own fleet size keep row 0
             # filler: the solvers never read them (the per-scenario
             # n_devices vector masks every k > n_s)
-        TX = _group_tx_vectors(grid, profile, group)  # (S_g, L)
+        # TX = airtime + encoder time per scenario (AIR/ENC split them
+        # out for energy pricing; None when the group is all-identity)
+        TX, AIR, ENC = _group_tx_vectors(grid, profile, group)  # (S_g, L)
         bank = np.stack(bank_mats)
         budgets = np.array(
             [INF if sc.energy_budget is None else float(sc.energy_budget)
@@ -1723,7 +2054,8 @@ def sweep(
                 # so every backend — pallas included, in dense mode on
                 # the materialized masked tensor — solves unchanged
                 E = _group_energy_tensor(grid, group, bank, bank_rows,
-                                         bank_idx, TX)
+                                         bank_idx,
+                                         AIR if AIR is not None else TX, ENC)
                 C = apply_energy_budget(C, E, budgets)
             build_time += time.perf_counter() - t0
 
@@ -1763,6 +2095,7 @@ def sweep(
                     objective_cost_s=obj, total_latency_s=total,
                     device_s=device_s, transmission_s=tx_total,
                     solver_wall_s=per_scn_wall,
+                    accuracy_proxy=grid.accuracy_for(sc),
                 )
             else:
                 rows[idx] = SweepRow(
@@ -1770,6 +2103,7 @@ def sweep(
                     objective_cost_s=INF, total_latency_s=INF,
                     device_s=INF, transmission_s=INF,
                     solver_wall_s=per_scn_wall,
+                    accuracy_proxy=grid.accuracy_for(sc),
                 )
     ordered = tuple(rows[i] for i in range(len(order)))
     return SweepResult(rows=ordered, solver=solver, backend=backend,
@@ -1806,10 +2140,9 @@ def sweep_scalar(grid: ScenarioGrid, solver: str = "optimal_dp") -> SweepResult:
         if feasible:
             link = grid.effective_link(sc)
             bounds = [0, *res.splits, L]
-            tx_total = sum(
-                link.transmission_latency_s(m.profile.boundary_act_bytes(b))
-                for b in bounds[1:-1]
-            )
+            # cut_cost_s = compressed airtime + encoder time (identical
+            # to the bare airtime for identity-variant scenarios)
+            tx_total = sum(m.cut_cost_s(b) for b in bounds[1:-1])
             obj = res.cost_s
             seg_sum = S.total_cost(fn, res.splits, L, "sum")
             device_s = seg_sum - tx_total
@@ -1819,12 +2152,14 @@ def sweep_scalar(grid: ScenarioGrid, solver: str = "optimal_dp") -> SweepResult:
                 total_latency_s=obj + link.t_setup_s + link.t_feedback_s,
                 device_s=device_s, transmission_s=tx_total,
                 solver_wall_s=res.wall_time_s,
+                accuracy_proxy=grid.accuracy_for(sc),
             ))
         else:
             rows.append(SweepRow(
                 scenario=sc, splits=res.splits, feasible=False,
                 objective_cost_s=INF, total_latency_s=INF, device_s=INF,
                 transmission_s=INF, solver_wall_s=res.wall_time_s,
+                accuracy_proxy=grid.accuracy_for(sc),
             ))
     return SweepResult(rows=tuple(rows), solver=solver, backend="scalar",
                        solve_time_s=solve_time, build_time_s=build_time)

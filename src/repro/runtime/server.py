@@ -69,9 +69,14 @@ class Request:
 class SplitLatencyMeter:
     """Accumulates modeled transmission latency for inter-segment hops.
 
-    ``bytes_per_token``: what actually crosses a cut per decode step — one
-    (B, 1, d_model) activation row (the plan's ``tx_bytes`` is the
-    full-sequence prefill activation).
+    ``bytes_per_token``: the RAW bytes a decode step produces at a cut —
+    one (B, 1, d_model) activation row (the plan's ``tx_bytes`` is the
+    full-sequence prefill activation). What is actually PRICED per hop
+    is single-sourced from the adopted plan: when the plan carries a
+    bottleneck variant (``plan.variant`` into the manager's bank), the
+    per-token payload is the variant-compressed byte count, and a
+    mid-stream replan onto a different variant reprices the remaining
+    hops immediately (the plan swap carries the new compression).
 
     Replan hook: when ``manager`` (an
     :class:`~repro.core.adaptive.AdaptiveSplitManager`) and ``protocol``
@@ -123,6 +128,31 @@ class SplitLatencyMeter:
         self.replans += 1
         return True
 
+    def _plan_variant(self):
+        """The adopted plan's bottleneck variant, resolved through the
+        manager's bank (None for plain plans or meters without a
+        banked manager)."""
+        vi = getattr(self.plan, "variant", None)  # plans are duck-typed
+        if vi is None or vi < 0:
+            return None
+        bank = getattr(self.manager, "variants", None)
+        if bank is None:
+            return None
+        return bank[vi]
+
+    def _hop_bytes(self, seg) -> int:
+        """Bytes priced for one hop, single-sourced from the adopted
+        plan: prefill pricing reads ``seg.tx_bytes`` (already
+        variant-compressed by the planner); per-token pricing compresses
+        ``bytes_per_token`` with the plan's adopted variant. A replan
+        that switches variants changes this on the very next hop."""
+        if not self.bytes_per_token:
+            return seg.tx_bytes
+        v = self._plan_variant()
+        if v is None:
+            return self.bytes_per_token
+        return v.compressed_bytes(self.bytes_per_token)
+
     def on_token(self):
         if self.plan is None or self.link is None:
             return
@@ -134,7 +164,7 @@ class SplitLatencyMeter:
         while self.plan is not None and hop < len(self.plan.segments) - 1:
             seg = self.plan.segments[hop]
             hop += 1
-            nbytes = self.bytes_per_token or seg.tx_bytes
+            nbytes = self._hop_bytes(seg)
             hop_s = self.link.transmission_latency_s(nbytes)
             self.hop_seconds += hop_s
             self.hops += 1

@@ -47,6 +47,7 @@ def good_sweep():
     _set(r, "pallas.node_identical_to_jax", False)  # informational
     _set(r, "pallas.n_tie_divergences", 33)
     _set(r, "multichannel.speedup_x", 90.0)
+    _set(r, "frontier.speedup_x", 90.0)
     return r
 
 
@@ -174,6 +175,50 @@ class TestCheckSweepMultichannel:
         assert mc["degenerate_bit_exact"] is True
         assert mc["budget_respected"] is True
         assert mc["n_budgeted"] > 0
+
+
+class TestCheckSweepFrontier:
+    """Doctored frontier sections must each fail the gate."""
+
+    def test_missing_frontier_section_fails(self):
+        r = good_sweep()
+        del r["frontier"]
+        fails = CB.check_sweep(r, good_sweep(), 3.0)
+        assert any("frontier.speedup_x" in f for f in fails)
+        assert any("frontier.parity_ok" in f for f in fails)
+        assert any("frontier.frontier_matches_bruteforce" in f
+                   for f in fails)
+
+    def test_regressed_frontier_ratio_fails(self):
+        base = good_sweep()
+        r = good_sweep()
+        _set(r, "frontier.speedup_x", 90.0 / 2)  # within 3x: noise
+        assert CB.check_sweep(r, base, 3.0) == []
+        _set(r, "frontier.speedup_x", 90.0 / 4)  # beyond 3x: collapse
+        fails = CB.check_sweep(r, base, 3.0)
+        assert any("frontier.speedup_x" in f and "collapsed" in f
+                   for f in fails)
+
+    @pytest.mark.parametrize("flag", ["frontier.parity_ok",
+                                      "frontier.loop_identical",
+                                      "frontier.frontier_matches_bruteforce",
+                                      "frontier.identity_on_every_frontier"])
+    def test_false_frontier_flag_fails(self, flag):
+        r = good_sweep()
+        _set(r, flag, False)
+        fails = CB.check_sweep(r, good_sweep(), 3.0)
+        assert any(flag in f for f in fails)
+
+    def test_committed_baseline_has_frontier_section(self):
+        with open(ROOT / "BENCH_sweep.json") as f:
+            rep = json.load(f)
+        fr = rep["frontier"]
+        assert fr["parity_ok"] is True
+        assert fr["loop_identical"] is True
+        assert fr["frontier_matches_bruteforce"] is True
+        assert fr["identity_on_every_frontier"] is True
+        assert fr["n_frontiers"] > 0
+        assert fr["max_frontier_points"] >= 2  # a real trade-off exists
 
 
 class TestCheckSurface:

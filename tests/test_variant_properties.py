@@ -1,0 +1,397 @@
+"""Variant-bank property suite (bottleneck compression axis).
+
+Four families of properties pin the (split point, variant) contract:
+
+* **Degenerate single-variant bit-exactness** — ``solve_variant_bank``
+  with a one-entry bank must return bit-identical (``==`` on splits AND
+  costs) results to ``solve_batched`` on the raw tensor, for every
+  batched solver, both combine modes, per-scenario fleet-size vectors,
+  and every DP backend (numpy / jax / sharded / pallas).
+* **Joint-oracle parity** — the folded variant-axis solve must match
+  the scalar joint oracle (``optimal_dp(variants=...)``, which runs the
+  exact DP once per bank member and keeps the cheapest with the
+  lowest-index tie-break) on every random draw up to V=3, L=8, N=4:
+  same splits, same cost bitwise, same winning variant index.
+* **Accuracy-floor masking** — ``accuracy_floor`` must reproduce the
+  oracle restricted to ``accuracy_proxy >= floor`` (strict ``<``
+  masking), and a floor masking the whole bank yields the usual
+  infeasible result with variant ``-1``.
+* **Pareto frontier == brute force** — :func:`repro.core.sweep.
+  pareto_frontier` must equal an independently written O(n^2)
+  non-dominated filter on random row sets (ties both survive,
+  infeasible rows never enter), and scaling every accuracy proxy by a
+  positive constant is metamorphic: the frontier row identity set and
+  order are invariant.
+
+Plus the runtime regression for the serving meter: a mid-stream replan
+that switches bottleneck variants must reprice subsequent hops at the
+NEW variant's compressed payload (the payload is single-sourced from
+the adopted plan, never from a stale static byte count).
+
+Strategy arguments are keyword-bound in every ``@given`` (the vendored
+minihypothesis shim binds positional strategies to the RIGHTMOST
+parameters; keyword binding is explicit and reorder-proof).
+"""
+
+import math
+from dataclasses import dataclass, replace
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import solvers as S
+from repro.core import sweep as SW
+from repro.core.latency import bottleneck_variant, bottleneck_variants
+from repro.core.profiles import ESP32, PROTOCOLS, paper_cost_model
+
+INF = float("inf")
+
+
+def tensor_cost_fn(T, L):
+    """Scalar cost fn reading dense ``T[k-1, a-1, b-1]`` (the oracle's
+    view of the exact same numbers the batched solver sees)."""
+
+    def fn(a, b, k):
+        if not (1 <= a <= b <= L) or k < 1 or k > T.shape[0]:
+            return INF
+        return float(T[k - 1, a - 1, b - 1])
+
+    return fn
+
+
+def joint_oracle(C, L, N, acc=None, floor=None, combine="sum"):
+    """Scalar (split, variant) oracle for one scenario's (V, N, L, L)
+    stack: the exact DP per bank member with lowest-index tie-break."""
+    insts = [
+        S.VariantInstance(
+            cost_fn=tensor_cost_fn(C[v], L),
+            accuracy_proxy=1.0 if acc is None else float(acc[v]),
+        )
+        for v in range(C.shape[0])
+    ]
+    return S.optimal_dp(None, L, N, combine=combine,
+                        variants=insts, accuracy_floor=floor)
+
+
+@st.composite
+def variant_tensors(draw, max_V=3, max_L=8, max_N=4, max_scenarios=3):
+    """Random (V, S, N, L, L) stacked variant tensors with sprinkled
+    infeasibility (mirroring mem-limit masking) plus random accuracy
+    proxies per variant."""
+    V = draw(st.integers(1, max_V))
+    L = draw(st.integers(3, max_L))
+    N = draw(st.integers(1, min(max_N, L)))
+    Sn = draw(st.integers(1, max_scenarios))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    C = rng.uniform(0.01, 100.0, size=(V, Sn, N, L, L))
+    tril = np.tril_indices(L, -1)
+    C[:, :, :, tril[0], tril[1]] = INF
+    mask = rng.rand(V, Sn, N, L, L) < 0.1
+    C = np.where(mask, INF, C)
+    acc = rng.uniform(0.5, 1.0, size=V)
+    return C, acc, V, Sn, N, L, seed
+
+
+class TestDegenerateSingleVariant:
+    """A one-entry bank must be the identity over solve_batched."""
+
+    @given(data=st.data())
+    @settings(max_examples=25)
+    def test_numpy_all_solvers_all_combines(self, data):
+        C, acc, V, Sn, N, L, seed = data.draw(variant_tensors(max_V=1))
+        rng = np.random.RandomState(seed + 1)
+        ns = rng.randint(1, N + 1, size=Sn).astype(np.int64)
+        solver = data.draw(st.sampled_from(sorted(SW.BATCHED_SOLVERS)))
+        combine = data.draw(st.sampled_from(("sum", "max")))
+        use_ns = data.draw(st.booleans())
+        kw = {"n_devices": ns} if use_ns else {}
+        ref = SW.solve_batched(C[0], solver=solver, combine=combine, **kw)
+        got = SW.solve_variant_bank(C, solver=solver, combine=combine, **kw)
+        assert np.array_equal(got.splits, ref.splits)
+        assert np.array_equal(got.cost_s, ref.cost_s)  # bit-exact, == not allclose
+        assert np.array_equal(got.feasible, ref.feasible)
+        assert got.variant is not None
+        assert np.array_equal(got.variant,
+                              np.where(ref.feasible, 0, -1))
+
+    @pytest.mark.parametrize("backend", ["numpy", "jax", "sharded", "pallas"])
+    @pytest.mark.parametrize("combine", ["sum", "max"])
+    def test_every_backend_both_combines(self, backend, combine):
+        rng = np.random.RandomState(11)
+        Sn, N, L = 5, 3, 9
+        C = rng.uniform(0.01, 100.0, size=(1, Sn, N, L, L))
+        tril = np.tril_indices(L, -1)
+        C[:, :, :, tril[0], tril[1]] = INF
+        ns = rng.randint(1, N + 1, size=Sn).astype(np.int64)
+        for kw in ({}, {"n_devices": ns}):
+            ref = SW.solve_batched(C[0], combine=combine, backend=backend,
+                                   **kw)
+            got = SW.solve_variant_bank(C, combine=combine, backend=backend,
+                                        **kw)
+            assert np.array_equal(got.splits, ref.splits)
+            assert np.array_equal(got.cost_s, ref.cost_s)
+            assert np.array_equal(got.feasible, ref.feasible)
+
+
+class TestJointOracleParity:
+    """Folded variant solve == scalar joint oracle, bitwise."""
+
+    @given(data=st.data())
+    @settings(max_examples=25)
+    def test_matches_scalar_joint_oracle(self, data):
+        C, acc, V, Sn, N, L, seed = data.draw(variant_tensors())
+        combine = data.draw(st.sampled_from(("sum", "max")))
+        res = SW.solve_variant_bank(C, combine=combine)
+        for s in range(Sn):
+            oracle = joint_oracle(C[:, s], L, N, combine=combine)
+            assert bool(res.feasible[s]) == oracle.feasible
+            if not oracle.feasible:
+                assert int(res.variant[s]) == -1
+                continue
+            assert res.cost_s[s] == oracle.cost_s  # zero regret, bitwise
+            assert int(res.variant[s]) == oracle.variant
+            assert tuple(int(x) for x in res.splits[s][:N - 1]) \
+                == oracle.splits
+
+    @given(data=st.data())
+    @settings(max_examples=15)
+    def test_scalar_solvers_agree_on_the_joint_space(self, data):
+        """brute_force(variants=...) and optimal_dp(variants=...) are
+        both exact over the joint space — they must agree exactly."""
+        C, acc, V, Sn, N, L, seed = data.draw(
+            variant_tensors(max_L=7, max_scenarios=1))
+        insts = [S.VariantInstance(cost_fn=tensor_cost_fn(C[v, 0], L))
+                 for v in range(V)]
+        dp = S.optimal_dp(None, L, N, variants=insts)
+        bf = S.brute_force(None, L, N, variants=insts)
+        assert dp.cost_s == bf.cost_s
+        assert dp.splits == bf.splits
+        assert dp.variant == bf.variant
+
+    @given(data=st.data())
+    @settings(max_examples=15)
+    def test_per_scenario_fleet_sizes_through_the_fold(self, data):
+        C, acc, V, Sn, N, L, seed = data.draw(variant_tensors())
+        rng = np.random.RandomState(seed + 2)
+        ns = rng.randint(1, N + 1, size=Sn).astype(np.int64)
+        res = SW.solve_variant_bank(C, n_devices=ns)
+        for s in range(Sn):
+            n = int(ns[s])
+            oracle = joint_oracle(C[:, s, :n], L, n)
+            assert bool(res.feasible[s]) == oracle.feasible
+            if oracle.feasible:
+                assert res.cost_s[s] == oracle.cost_s
+                assert int(res.variant[s]) == oracle.variant
+
+
+class TestAccuracyFloorMasking:
+    """accuracy_floor == oracle restricted to acc >= floor."""
+
+    @given(data=st.data())
+    @settings(max_examples=25)
+    def test_matches_floor_restricted_oracle(self, data):
+        C, acc, V, Sn, N, L, seed = data.draw(variant_tensors())
+        # floors spanning none-masked .. all-masked
+        floor = data.draw(st.sampled_from(
+            (0.0, float(np.min(acc)), float(np.median(acc)),
+             float(np.max(acc)), 1.5)))
+        res = SW.solve_variant_bank(C, accuracy_proxy=acc,
+                                    accuracy_floor=floor)
+        for s in range(Sn):
+            oracle = joint_oracle(C[:, s], L, N, acc=acc, floor=floor)
+            assert bool(res.feasible[s]) == oracle.feasible
+            if not oracle.feasible:
+                assert int(res.variant[s]) == -1
+                continue
+            assert res.cost_s[s] == oracle.cost_s
+            assert int(res.variant[s]) == oracle.variant
+            assert acc[int(res.variant[s])] >= floor
+
+    def test_none_floor_returns_identical_tensor(self):
+        rng = np.random.RandomState(3)
+        C = rng.uniform(0.1, 1.0, size=(2, 2, 2, 4, 4))
+        out = SW.apply_accuracy_floor(C, np.array([1.0, 0.9]), None)
+        assert out is C  # the degenerate path hands back the SAME object
+
+    def test_floor_without_proxy_raises(self):
+        C = np.zeros((2, 1, 1, 3, 3))
+        with pytest.raises(ValueError):
+            SW.solve_variant_bank(C, accuracy_floor=0.9)
+
+
+@dataclass(frozen=True)
+class _Scenario:
+    model: str = "m"
+    protocol: str = "p"
+    n_devices: int = 2
+
+
+@dataclass(frozen=True)
+class _Row:
+    """Minimal row satisfying the pareto_frontier contract."""
+
+    total_latency_s: float
+    accuracy_proxy: float
+    feasible: bool = True
+    scenario: _Scenario = _Scenario()
+    splits: tuple = ()
+
+
+def brute_force_frontier(rows):
+    """Independent O(n^2) non-dominated filter (the textbook
+    definition, written separately from the implementation)."""
+    feas = [r for r in rows if r.feasible]
+    out = []
+    for r in feas:
+        if not any(
+            (o.total_latency_s <= r.total_latency_s
+             and o.accuracy_proxy >= r.accuracy_proxy
+             and (o.total_latency_s, o.accuracy_proxy)
+             != (r.total_latency_s, r.accuracy_proxy))
+            for o in feas
+        ):
+            out.append(r)
+    return sorted(out, key=lambda r: (r.total_latency_s, -r.accuracy_proxy))
+
+
+@st.composite
+def row_sets(draw, max_rows=12):
+    n = draw(st.integers(0, max_rows))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.RandomState(seed)
+    # quantized values so exact ties actually occur
+    lats = rng.choice([0.5, 1.0, 1.5, 2.0, 3.0], size=n)
+    accs = rng.choice([0.90, 0.94, 0.97, 1.0], size=n)
+    feas = rng.rand(n) > 0.15
+    return [
+        _Row(total_latency_s=float(lats[i]), accuracy_proxy=float(accs[i]),
+             feasible=bool(feas[i]))
+        for i in range(n)
+    ]
+
+
+class TestParetoOracle:
+    """pareto_frontier == brute-force non-dominated oracle."""
+
+    @given(rows=row_sets())
+    @settings(max_examples=50)
+    def test_matches_brute_force(self, rows):
+        got = SW.pareto_frontier(rows)
+        want = brute_force_frontier(rows)
+        assert list(got) == want
+
+    @given(rows=row_sets())
+    @settings(max_examples=25)
+    def test_accuracy_scaling_is_metamorphic(self, rows):
+        """Scaling every accuracy proxy by a positive constant changes
+        no dominance relation: the frontier keeps the same rows (by
+        original index) in the same order."""
+        base = SW.pareto_frontier(rows)
+        for factor in (0.5, 2.0, 100.0):
+            scaled = [replace(r, accuracy_proxy=r.accuracy_proxy * factor)
+                      for r in rows]
+            got = SW.pareto_frontier(scaled)
+            assert [scaled.index(g) for g in got] \
+                == [rows.index(b) for b in base]
+
+    def test_exact_ties_all_survive(self):
+        a = _Row(1.0, 0.9)
+        b = _Row(1.0, 0.9)
+        c = _Row(2.0, 0.9)  # dominated by a/b
+        assert list(SW.pareto_frontier([a, b, c])) == [a, b]
+
+    def test_infeasible_rows_never_enter(self):
+        a = _Row(1.0, 0.9)
+        ghost = _Row(0.1, 1.0, feasible=False)
+        assert list(SW.pareto_frontier([a, ghost])) == [a]
+
+
+class TestSweepFrontierEndToEnd:
+    """SweepResult.pareto on a real compression-axis sweep."""
+
+    def test_frontier_groups_and_oracle(self):
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        grid = SW.ScenarioGrid(
+            models={"mobilenet_v2": m.profile},
+            links={"esp_now": PROTOCOLS["esp_now"]},
+            n_devices=(2, 3),
+            devices=(ESP32,),
+            compression_factors=(1.0, 2.0, 4.0),
+        )
+        res = SW.sweep(grid)
+        fronts = res.pareto()
+        assert set(fronts) == {("mobilenet_v2", "esp_now", 2),
+                               ("mobilenet_v2", "esp_now", 3)}
+        for key, front in fronts.items():
+            group = [r for r in res.rows
+                     if (r.scenario.model, r.scenario.protocol,
+                         r.scenario.n_devices) == key]
+            assert list(front.rows) == brute_force_frontier(group)
+            assert front.n_points >= 1
+            # ascending latency, and accuracy strictly decreasing along
+            # it (a true trade-off frontier)
+            lats = [r.total_latency_s for r in front.rows]
+            assert lats == sorted(lats)
+            csv = front.to_csv()
+            assert csv.splitlines()[0].startswith("model,protocol,n_devices")
+
+
+class TestMeterVariantSwitch:
+    """Serving-meter regression: a mid-stream replan that switches
+    bottleneck variants reprices the remaining hops at the NEW
+    variant's compressed payload."""
+
+    def _manager(self, bank):
+        from repro.core.adaptive import AdaptiveSplitManager
+
+        m = paper_cost_model("mobilenet_v2", "esp_now")
+        return AdaptiveSplitManager(
+            cost_model=m, protocols={"esp_now": PROTOCOLS["esp_now"]},
+            n_devices=3, solver="optimal_dp", surface=None,
+            variants=bank, replan_threshold=0.05,
+        )
+
+    def test_hop_bytes_follow_the_adopted_variant(self):
+        from repro.runtime.server import SplitLatencyMeter
+
+        # a bank where compression must buy a HUGE encoder latency:
+        # identity wins at the base link, cx4 wins once the link
+        # degrades enough for airtime to dominate the encoder cost
+        bank = (bottleneck_variant(1.0),
+                bottleneck_variant(4.0, encoder_t_s=0.05))
+        mgr = self._manager(bank)
+        assert mgr.current.variant == 0  # encoder too costly at base link
+        meter = SplitLatencyMeter(
+            plan=mgr.current_plan(), link=PROTOCOLS["esp_now"],
+            bytes_per_token=1024, manager=mgr, protocol="esp_now",
+        )
+        seg0 = meter.plan.segments[0]
+        assert meter._hop_bytes(seg0) == 1024  # identity: raw payload
+        before = meter.link.transmission_latency_s(meter._hop_bytes(seg0))
+
+        # degrade the link until the re-solve flips to the compressed
+        # variant; the meter must follow through its own observe path
+        switched = False
+        for _ in range(200):
+            if meter.observe_hop(1024, 2.0) and mgr.current.variant == 1:
+                switched = True
+                break
+        assert switched, "replan never switched variants"
+        assert meter.plan.variant == 1
+        seg0 = meter.plan.segments[0]
+        assert meter._hop_bytes(seg0) == 256  # ceil(1024 / 4)
+        after = meter.link.transmission_latency_s(meter._hop_bytes(seg0))
+        assert after < before  # the hop really got cheaper to transmit
+
+    def test_plan_tx_bytes_are_compressed_end_to_end(self):
+        bank = bottleneck_variants((1.0, 2.0, 4.0), encoder_s_per_byte=2e-9)
+        mgr = self._manager(bank)
+        plan = mgr.current_plan()
+        assert plan.variant == mgr.current.variant
+        if plan.variant and plan.variant > 0:
+            raw = mgr.cost_model.profile.boundary_act_bytes(plan.splits[0])
+            assert plan.segments[0].tx_bytes == math.ceil(
+                raw / bank[plan.variant].compression_factor)

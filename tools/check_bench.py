@@ -58,6 +58,12 @@ SWEEP_KEYS = (
     "multichannel.batched_wall_s", "multichannel.scalar_wall_s",
     "multichannel.speedup_x", "multichannel.parity_ok",
     "multichannel.degenerate_bit_exact", "multichannel.budget_respected",
+    "frontier.n_scenarios", "frontier.compression_factors",
+    "frontier.batched_wall_s", "frontier.per_variant_loop_wall_s",
+    "frontier.speedup_x", "frontier.parity_ok", "frontier.loop_identical",
+    "frontier.n_frontiers", "frontier.max_frontier_points",
+    "frontier.frontier_matches_bruteforce",
+    "frontier.identity_on_every_frontier",
 )
 SWEEP_FLAGS = (
     "sharded.node_identical_to_jax",
@@ -66,10 +72,15 @@ SWEEP_FLAGS = (
     "multichannel.parity_ok",
     "multichannel.degenerate_bit_exact",
     "multichannel.budget_respected",
+    "frontier.parity_ok",
+    "frontier.loop_identical",
+    "frontier.frontier_matches_bruteforce",
+    "frontier.identity_on_every_frontier",
 )
 SWEEP_RATIOS = (
     ("speedup_x", "higher"),
     ("multichannel.speedup_x", "higher"),
+    ("frontier.speedup_x", "higher"),
 )
 
 SURFACE_KEYS = (
