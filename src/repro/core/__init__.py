@@ -3,6 +3,11 @@
 Public API (documented in ``docs/api.md``; layer map in
 ``docs/architecture.md``):
   latency    — Eq. 4-8 cost model (LinkProfile / DeviceProfile / SplitCostModel)
+  spec       — the planner tier: PlanSpec (one serializable planning
+               request; exact JSON round-trip), PlannerService (spec ->
+               batched engines; every kwarg entry point routes through
+               it), MeshSpec (single/multi-host shard mesh seam),
+               build_surfaces_from_spec (process-pool rebuild worker)
   solvers    — beam / greedy / first_fit / random_fit / brute_force / optimal_dp
   planner    — plan_split (IoT), plan_pipeline (TPU PP), compare_solvers,
                plan_split_batch (vectorized fleet planning, heterogeneous
@@ -44,6 +49,17 @@ from repro.core.latency import (  # noqa: F401
     bottleneck_variant,
     bottleneck_variants,
     rtt_breakdown,
+)
+# NOTE: `repro.core.spec` sits below every layer it orchestrates (it
+# imports only latency at module scope; the engines load lazily inside
+# PlannerService), so it comes right after latency here.
+from repro.core.spec import (  # noqa: F401
+    MeshSpec,
+    PlanSpec,
+    PlannerService,
+    ScenarioRef,
+    SurfaceAxes,
+    build_surfaces_from_spec,
 )
 from repro.core.planner import (  # noqa: F401
     SegmentPlan,
@@ -97,6 +113,7 @@ from repro.core.sweep import (  # noqa: F401
 # imports sweep, so it must come after it here). Importing these names
 # is cheap — JAX loads lazily, on the first sharded solve.
 from repro.core.shard import (  # noqa: F401
+    mesh_from_spec,
     scenario_shards,
     sharded_dp_tables,
     sharded_optimal_dp,

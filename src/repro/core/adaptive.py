@@ -236,14 +236,10 @@ class AdaptiveSplitManager:
         if self.surface == "auto":
             batched = self._batched_solver_name()
             if batched in SW.BATCHED_SOLVERS:
-                grid_kwargs = dict(self.surface_grid or {})
-                grid_kwargs.setdefault("energy_budget", self.energy_budget)
-                grid_kwargs.setdefault("variants", self.variants)
-                grid_kwargs.setdefault("accuracy_floor", self.accuracy_floor)
-                self.surface = build_surface(
-                    self.cost_model, self.protocols, self.n_devices,
-                    solver=batched, **grid_kwargs,
-                )
+                from repro.core.spec import PlannerService
+
+                self.surface = PlannerService().build_surfaces(
+                    self.surface_spec())[self.n_devices]
             else:
                 # scalar-only solvers (first_fit, random_fit, ...) have no
                 # batched twin to precompute with: keep the legacy
@@ -293,6 +289,27 @@ class AdaptiveSplitManager:
                             variant=hit.variant)
         if self.current is None:
             self._replan("initial")
+
+    def surface_spec(self):
+        """The :class:`~repro.core.spec.PlanSpec` this manager's
+        ``surface="auto"`` build resolves to: the ``surface_grid`` axes
+        (defaulted like :func:`~repro.core.surface.build_surface`) plus
+        the manager's energy budget, variant bank and accuracy floor.
+        ``PlannerService().build_surfaces(spec)[self.n_devices]`` is
+        exactly the surface the constructor adopts — the serializable
+        form of this manager's planning request."""
+        from repro.core.spec import surfaces_spec
+        from repro.core.surface import DEFAULT_LOSS_GRID, DEFAULT_PT_SCALES
+
+        grid = dict(self.surface_grid or {})
+        grid.setdefault("energy_budget", self.energy_budget)
+        grid.setdefault("variants", self.variants)
+        grid.setdefault("accuracy_floor", self.accuracy_floor)
+        grid.setdefault("pt_scale", DEFAULT_PT_SCALES)
+        grid.setdefault("loss_p", DEFAULT_LOSS_GRID)
+        return surfaces_spec(
+            self.cost_model, self.protocols, (self.n_devices,),
+            solver=self._batched_solver_name(), **grid)
 
     @staticmethod
     def _is_rebuilder_like(obj: object) -> bool:

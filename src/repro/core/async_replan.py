@@ -37,21 +37,43 @@ This module makes rebuilds *asynchronous* (stale-while-revalidate):
   ``run_all()``, so "while a rebuild is in flight" is an exact program
   state, not a race. The default executor is a single worker thread.
 
+* **Out-of-process rebuilds** — pass a
+  ``concurrent.futures.ProcessPoolExecutor`` as ``executor`` and the
+  build leaves the serving process entirely: the request is resolved
+  to a serializable :class:`~repro.core.spec.PlanSpec`
+  (:meth:`SurfaceRebuilder.spec_for`) that pickles to the worker,
+  which runs :func:`repro.core.spec.build_surfaces_from_spec` — the
+  SAME planner-tier call every in-process build makes — and ships the
+  surface family back. Generation/swap adoption semantics are
+  identical to the thread path (the done-callback publishes under the
+  same lock), so process-built surfaces are node-identical to their
+  in-process twins.
+
+The executor contract (:class:`RebuildExecutor`): ``submit()`` is
+REQUIRED, ``shutdown()`` is OPTIONAL — :class:`ManualExecutor` has
+none, and :meth:`SurfaceRebuilder.shutdown` must not assume one.
+A dead executor (e.g. an already-terminated process pool) makes
+``submit`` raise; the rebuilder stashes that error and re-raises it
+from the next ``poll()`` like any failed build — the serving loop
+keeps answering from the stale surface either way.
+
 Thread model: ``request()``/``poll()`` are called from the serving
 thread and take a small lock only on state transitions (a fast
 lock-free precheck keeps the steady-state poll at one attribute read);
 the build job runs on the executor and publishes results under the
-same lock. Build errors are stashed and re-raised from the next
-``poll()`` so a failing rebuild surfaces in the serving loop instead
-of dying silently on a worker thread.
+same lock. The lock is REENTRANT because a process-pool done-callback
+can fire inline on the submitting thread (future already finished)
+while ``_launch_locked`` still holds it. Build errors are stashed and
+re-raised from the next ``poll()`` so a failing rebuild surfaces in
+the serving loop instead of dying silently on a worker.
 """
 
 from __future__ import annotations
 
 import threading
-from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import ProcessPoolExecutor, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Callable, Mapping, Sequence
+from typing import Callable, Mapping, Protocol, Sequence
 
 from repro.core.latency import LinkProfile, SplitCostModel
 from repro.core.surface import (
@@ -60,11 +82,11 @@ from repro.core.surface import (
     LOSS_CLAMP,
     DegradationSurface,
     _resolve_axes,
-    build_surfaces,
 )
 
 __all__ = [
     "ManualExecutor",
+    "RebuildExecutor",
     "RebuildFanout",
     "RebuildHandle",
     "RebuildRequest",
@@ -73,6 +95,21 @@ __all__ = [
 ]
 
 _StateMap = Mapping[str, tuple[float, float]]
+
+
+class RebuildExecutor(Protocol):
+    """What :class:`SurfaceRebuilder` requires of an ``executor``.
+
+    ``submit(fn, *args)`` is the WHOLE required surface — thread pools,
+    process pools, and :class:`ManualExecutor` all provide it. Anything
+    else is optional: ``shutdown()`` in particular is NOT part of the
+    contract (:class:`ManualExecutor` has none), so the rebuilder's own
+    :meth:`~SurfaceRebuilder.shutdown` probes for it and tolerates
+    executors that are already terminated. ``submit`` may raise (dead
+    pool); the rebuilder treats that as a failed build."""
+
+    def submit(self, fn: Callable, /, *args):  # pragma: no cover - protocol
+        ...
 
 
 class ManualExecutor:
@@ -220,9 +257,15 @@ class SurfaceRebuilder:
       the atomic swap-on-ready. Returns ``None`` on the (fast,
       lock-free) common path.
 
-    ``executor`` needs only ``submit(fn)``: the default is a
-    single-worker thread pool; pass a :class:`ManualExecutor` for
-    deterministic tests. Constructor kwargs mirror
+    ``executor`` needs only ``submit(fn)`` (see :class:`RebuildExecutor`
+    — ``shutdown()`` is optional and probed for, never assumed): the
+    default is a single-worker thread pool; pass a
+    :class:`ManualExecutor` for deterministic tests, or a
+    ``ProcessPoolExecutor`` to move builds out of the serving process —
+    the request then travels as a pickled
+    :class:`~repro.core.spec.PlanSpec` (:meth:`spec_for`) and the
+    worker runs :func:`~repro.core.spec.build_surfaces_from_spec`.
+    Constructor kwargs mirror
     :func:`~repro.core.surface.build_surfaces` (``pt_scale``/``loss_p``
     are the BASE axes every rebuild extends; ``backend`` etc. pass
     through), so an adopted surface is node-identical to the same
@@ -265,7 +308,10 @@ class SurfaceRebuilder:
         self._executor = executor
         self._own_executor = False
         self._closed = False
-        self._lock = threading.Lock()
+        # REENTRANT: a process-pool done-callback runs inline on the
+        # submitting thread when the future already finished, i.e.
+        # while _launch_locked still holds this lock
+        self._lock = threading.RLock()
         self.max_queued_states = max_queued_states
         # per fleet size: a bounded LIST of drifted state maps (one per
         # distinct requester this cycle) — a single merged dict lost all
@@ -368,22 +414,37 @@ class SurfaceRebuilder:
         """Stop rebuilding, TERMINALLY: no further build ever launches
         (queued requests stay queued; completed results remain
         adoptable). Waits for and releases the internally created
-        executor; injected executors are left to their owner. Idempotent
-        — also the completion barrier deterministic thread tests use."""
+        executor; injected executors are left to their owner. The
+        executor contract makes ``shutdown`` optional
+        (:class:`RebuildExecutor`), so this probes for it and tolerates
+        executors that are already terminated — e.g. a process pool
+        whose workers died. Idempotent — also the completion barrier
+        deterministic thread tests use."""
         with self._lock:
             self._closed = True
-        if self._own_executor and self._executor is not None:
-            self._executor.shutdown(wait=True)
-            self._executor = None
+            if not self._own_executor:
+                return
+            ex, self._executor = self._executor, None
             self._own_executor = False
+        stop = getattr(ex, "shutdown", None)
+        if stop is None:
+            return
+        try:
+            stop(wait=True)
+        except Exception:  # already-terminated/broken pool: nothing to stop
+            pass
 
     # -- build machinery ---------------------------------------------------
-    def build_sync(self, req: RebuildRequest) -> dict[int, DegradationSurface]:
-        """The EXACT ``build_surfaces`` call a request resolves to —
-        shared by the background job and by parity checks, so an
-        async-adopted surface is node-identical to this synchronous
-        value by construction."""
-        return build_surfaces(
+    def spec_for(self, req: RebuildRequest):
+        """The serializable :class:`~repro.core.spec.PlanSpec` a request
+        resolves to — the rebuilder config plus the request's
+        re-centered axes. This is the value that crosses the process
+        boundary in pool mode, and
+        :func:`~repro.core.spec.build_surfaces_from_spec` on it is the
+        EXACT call every in-process build makes too."""
+        from repro.core.spec import surfaces_spec
+
+        return surfaces_spec(
             self.cost_model, self.protocols, req.sizes,
             pt_scale=req.pt_scale, loss_p=req.loss_p,
             solver=self.solver, backend=self.backend,
@@ -393,6 +454,15 @@ class SurfaceRebuilder:
             variants=self.variants,
             accuracy_floor=self.accuracy_floor,
         )
+
+    def build_sync(self, req: RebuildRequest) -> dict[int, DegradationSurface]:
+        """The EXACT planner-tier call a request resolves to — shared by
+        the background job (thread AND process mode) and by parity
+        checks, so an async-adopted surface is node-identical to this
+        synchronous value by construction."""
+        from repro.core.spec import build_surfaces_from_spec
+
+        return build_surfaces_from_spec(self.spec_for(req))
 
     def _resolved_envelopes(
         self, pt_scale: tuple[float, ...], loss_p: tuple[float | None, ...],
@@ -429,23 +499,64 @@ class SurfaceRebuilder:
             self._executor = ThreadPoolExecutor(
                 max_workers=1, thread_name_prefix="surface-rebuild")
             self._own_executor = True
-        self._executor.submit(lambda: self._run_build(req))
+        try:
+            if isinstance(self._executor, ProcessPoolExecutor):
+                # lambdas (and bound methods over a live rebuilder)
+                # don't pickle: ship the spec JSON to the module-level
+                # worker and publish from the done-callback in THIS
+                # process. The callback may run inline (RLock).
+                from repro.core.spec import build_surfaces_from_spec
+
+                fut = self._executor.submit(
+                    build_surfaces_from_spec, self.spec_for(req).to_json())
+                fut.add_done_callback(
+                    lambda f, req=req: self._finish_future(req, f))
+            else:
+                self._executor.submit(lambda: self._run_build(req))
+        except BaseException as e:  # noqa: BLE001 - dead/broken pool
+            # submit on a terminated pool raises in the SERVING thread;
+            # surface it like any failed build instead of crashing the
+            # poll that launched us (the serving loop keeps the stale
+            # surface)
+            self._fail_locked(e)
 
     def _run_build(self, req: RebuildRequest) -> None:
         try:
             surfaces = self.build_sync(req)
         except BaseException as e:  # noqa: BLE001 - surfaced via poll()
             with self._lock:
-                self._error = e
-                self._inflight = None
-                self._maybe_actionable = True
+                self._fail_locked(e)
             return
         with self._lock:
-            for n, surf in surfaces.items():
-                self._results[n] = (req.generation, surf)
-            self._inflight = None
-            self.builds_completed += 1
-            self._maybe_actionable = True
+            self._publish_locked(req, surfaces)
+
+    def _finish_future(self, req: RebuildRequest, fut) -> None:
+        """Done-callback for process-pool builds: publish the shipped
+        surfaces (or the worker's exception) with the same
+        generation/swap semantics as :meth:`_run_build`."""
+        try:
+            surfaces = fut.result()
+        except BaseException as e:  # noqa: BLE001 - surfaced via poll()
+            with self._lock:
+                self._fail_locked(e)
+            return
+        with self._lock:
+            self._publish_locked(req, surfaces)
+
+    def _fail_locked(self, err: BaseException) -> None:
+        self._error = err
+        self._inflight = None
+        self._maybe_actionable = True
+
+    def _publish_locked(
+        self, req: RebuildRequest,
+        surfaces: Mapping[int, DegradationSurface],
+    ) -> None:
+        for n, surf in surfaces.items():
+            self._results[n] = (req.generation, surf)
+        self._inflight = None
+        self.builds_completed += 1
+        self._maybe_actionable = True
 
     def _refresh_actionable_locked(self) -> None:
         self._maybe_actionable = (

@@ -58,8 +58,10 @@ from typing import Sequence
 import numpy as np
 
 from repro.core import sweep as SW
+from repro.core.spec import MeshSpec
 
 __all__ = [
+    "mesh_from_spec",
     "scenario_shards",
     "sharded_dp_tables",
     "sharded_optimal_dp",
@@ -92,13 +94,91 @@ def _pad_to_multiple(S: int, n_shards: int) -> int:
     return (-S) % n_shards
 
 
+# jax.distributed.initialize is once-per-process; flipped the first time
+# a distributed MeshSpec resolves so repeat solves don't re-initialize.
+_DISTRIBUTED_READY = False
+
+
+def _ensure_distributed(mesh_spec: MeshSpec) -> None:
+    """Bring up ``jax.distributed`` from a ``kind="distributed"`` spec.
+
+    A spec with ``coordinator=None`` asserts the environment already
+    initialized the runtime (e.g. a multi-host launcher did it before
+    importing us); otherwise the spec's coordinator/process fields are
+    the ``jax.distributed.initialize`` arguments. Idempotent."""
+    global _DISTRIBUTED_READY
+    if _DISTRIBUTED_READY:
+        return
+    if mesh_spec.coordinator is not None:
+        import jax
+
+        jax.distributed.initialize(
+            coordinator_address=mesh_spec.coordinator,
+            num_processes=mesh_spec.num_processes,
+            process_id=mesh_spec.process_id,
+        )
+    _DISTRIBUTED_READY = True
+
+
+def _resolve_shards(mesh_spec: MeshSpec | None, n_shards: int | None) -> int:
+    """Shard count for a solve: explicit ``n_shards`` wins, then the
+    spec's ``n_shards``, then every device the spec's mesh can see
+    (local devices for ``kind="local"``/no spec, the GLOBAL device list
+    for ``kind="distributed"``)."""
+    if mesh_spec is None or mesh_spec.kind == "local":
+        want = n_shards if n_shards is not None else (
+            None if mesh_spec is None else mesh_spec.n_shards)
+        return scenario_shards(want)
+    _ensure_distributed(mesh_spec)
+    import jax
+
+    avail = len(jax.devices())
+    want = n_shards if n_shards is not None else mesh_spec.n_shards
+    if want is None:
+        return avail
+    if not 1 <= want <= avail:
+        raise ValueError(
+            f"n_shards={want} out of range [1, {avail}] "
+            f"(global JAX devices: {avail})")
+    return int(want)
+
+
+def mesh_from_spec(mesh_spec: MeshSpec | None = None,
+                   n_shards: int | None = None):
+    """The 1-D scenario mesh a :class:`~repro.core.spec.MeshSpec`
+    describes — THE multi-host seam.
+
+    ``None`` or ``kind="local"`` builds exactly the historical mesh
+    (the first ``n_shards`` LOCAL devices), so the single-host default
+    is node-identical to the pre-spec sharded path by construction.
+    ``kind="distributed"`` initializes ``jax.distributed`` from the
+    spec (:func:`_ensure_distributed`) and spans the GLOBAL device
+    list — scenario-axis partitioning already pads to any mesh, so
+    multi-host is a device-list swap, not a new kernel."""
+    import jax
+    from jax.sharding import Mesh
+
+    axis = "s" if mesh_spec is None else mesh_spec.axis
+    if mesh_spec is None or mesh_spec.kind == "local":
+        devices = jax.local_devices()
+    else:
+        _ensure_distributed(mesh_spec)
+        devices = jax.devices()
+    if n_shards is not None:
+        devices = devices[:n_shards]
+    return Mesh(np.array(devices), (axis,))
+
+
 @functools.lru_cache(maxsize=None)
 def _sharded_dp_solver(combine: str, n_shards: int, kernel: str = "jax",
-                       block_s: int = 0, interpret: bool = False):
+                       block_s: int = 0, interpret: bool = False,
+                       mesh_spec: MeshSpec | None = None):
     """Jitted ``shard_map`` wrapper over the shared DP kernel for one
-    (combine, shard-count, kernel) triple. Cached like the single-device
-    solver (:func:`repro.core.sweep._dp_jax_solver`): repeat same-shape
-    calls reuse the compiled executable, no retrace.
+    (combine, shard-count, kernel, mesh) tuple. Cached like the
+    single-device solver (:func:`repro.core.sweep._dp_jax_solver`):
+    repeat same-shape calls reuse the compiled executable, no retrace
+    (:class:`~repro.core.spec.MeshSpec` is frozen/hashable, so it keys
+    the cache like any other compile-relevant knob).
 
     ``kernel="jax"`` maps the vmapped ``lax.scan`` kernel;
     ``kernel="pallas"`` maps the dense-mode Pallas kernel
@@ -112,7 +192,6 @@ def _sharded_dp_solver(combine: str, n_shards: int, kernel: str = "jax",
         from jax import shard_map
     except ImportError:  # jax 0.4/0.5 (this container pins 0.4.37)
         from jax.experimental.shard_map import shard_map
-    from jax.sharding import Mesh
     from jax.sharding import PartitionSpec as P
 
     rep_kwargs = {}
@@ -128,14 +207,12 @@ def _sharded_dp_solver(combine: str, n_shards: int, kernel: str = "jax",
     else:
         raise ValueError(f"unknown shard kernel {kernel!r}; "
                          f"options: ['jax', 'pallas']")
-    # local_devices, matching scenario_shards()'s local_device_count
-    # validation — on a future multi-host mesh the global jax.devices()
-    # would include non-addressable devices
-    mesh = Mesh(np.array(jax.local_devices()[:n_shards]), ("s",))
+    mesh = mesh_from_spec(mesh_spec, n_shards)
+    axis = "s" if mesh_spec is None else mesh_spec.axis
     sharded = shard_map(
         fn, mesh=mesh,
-        in_specs=(P("s"), P("s")),
-        out_specs=(P("s"), P("s"), P("s")),
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis)),
         **rep_kwargs,
     )
     return jax.jit(sharded)
@@ -149,6 +226,7 @@ def sharded_dp_tables(
     kernel: str = "jax",
     block_s: int | None = None,
     interpret: bool | None = None,
+    mesh_spec: MeshSpec | None = None,
 ):
     """(dp_per_k, parents) DP tables with the scenario axis sharded.
 
@@ -166,9 +244,14 @@ def sharded_dp_tables(
     bit-identical — :mod:`repro.core.pallas_dp`): inputs are +inf-padded
     to the lane tile in ``L`` and replica-padded so every shard holds a
     whole number of scenario blocks; ``block_s``/``interpret`` are the
-    pallas knobs (``None`` = the pallas defaults)."""
+    pallas knobs (``None`` = the pallas defaults).
+
+    ``mesh_spec`` (a :class:`~repro.core.spec.MeshSpec`) names the
+    device mesh: ``None``/local specs keep the historical local mesh
+    (node-identical by construction — :func:`mesh_from_spec`);
+    ``kind="distributed"`` spans the global multi-host device list."""
     Sn, N, L, _ = C.shape
-    shards = scenario_shards(n_shards)
+    shards = _resolve_shards(mesh_spec, n_shards)
     ns_arr = np.full(Sn, N, dtype=np.int64) if ns is None \
         else np.asarray(ns, dtype=np.int64)
     if kernel == "pallas":
@@ -190,7 +273,8 @@ def sharded_dp_tables(
         nsp = PD._pad_ns_column(ns_arr, Sn, Sp)
         import jax.numpy as jnp
 
-        solver = _sharded_dp_solver(combine, shards, "pallas", bs, itp)
+        solver = _sharded_dp_solver(combine, shards, "pallas", bs, itp,
+                                    mesh_spec=mesh_spec)
         dp0, dps, args = solver(jnp.asarray(Cp, dtype=dtype),
                                 jnp.asarray(nsp))
         dp0 = np.asarray(dp0)[:Sn, :L]
@@ -203,7 +287,8 @@ def sharded_dp_tables(
         ns_arr = np.concatenate([ns_arr, np.repeat(ns_arr[-1:], pad)])
     import jax.numpy as jnp
 
-    solver = _sharded_dp_solver(combine, shards, kernel)
+    solver = _sharded_dp_solver(combine, shards, kernel,
+                                mesh_spec=mesh_spec)
     dp0, dps, args = solver(jnp.asarray(C), jnp.asarray(ns_arr))
     dp0, dps, args = np.asarray(dp0), np.asarray(dps), np.asarray(args)
     if pad:
@@ -218,6 +303,7 @@ def sharded_optimal_dp(
     n_devices: np.ndarray | Sequence[int] | int | None = None,
     n_shards: int | None = None,
     kernel: str = "jax",
+    mesh_spec: MeshSpec | None = None,
 ):
     """Exact split DP with the scenario axis sharded over local devices.
 
@@ -235,6 +321,7 @@ def sharded_optimal_dp(
     Sn, N, L, ns = SW._validate_dp_inputs(C, return_all_k, n_devices)
     t0 = time.perf_counter()
     dp_per_k, parents = sharded_dp_tables(C, combine, ns=ns,
-                                          n_shards=n_shards, kernel=kernel)
+                                          n_shards=n_shards, kernel=kernel,
+                                          mesh_spec=mesh_spec)
     return SW._results_from_dp_tables(dp_per_k, parents, L, N, Sn,
                                       "sharded", ns, return_all_k, t0)

@@ -50,7 +50,8 @@ from typing import Mapping, Sequence
 from repro.core.adaptive import AdaptiveSplitManager, _batched_twin
 from repro.core.async_replan import RebuildFanout, SurfaceRebuilder
 from repro.core.latency import LinkProfile, SplitCostModel
-from repro.core.surface import build_surfaces
+from repro.core.spec import PlannerService, surfaces_spec
+from repro.core.surface import DEFAULT_LOSS_GRID, DEFAULT_PT_SCALES
 from repro.runtime.server import SplitLatencyMeter
 from repro.runtime.stats import (
     FleetSnapshot,
@@ -150,10 +151,19 @@ class FleetGateway:
         self.manager_kwargs = manager_kwargs
         self._clock = clock
         batched = _batched_twin(solver)
-        # the WHOLE per-size surface family in one batched solve
-        self.surfaces = build_surfaces(
+        # the WHOLE per-size surface family in one batched solve; the
+        # request is kept as a serializable PlanSpec (``plan_spec``) —
+        # the same object a process-pool rebuild would ship — and the
+        # family is resolved from it
+        grid = dict(self.surface_grid)
+        grid.setdefault("pt_scale", DEFAULT_PT_SCALES)
+        grid.setdefault("loss_p", DEFAULT_LOSS_GRID)
+        if "mesh_spec" in grid:  # build_surfaces spells the knob mesh_spec
+            grid["mesh"] = grid.pop("mesh_spec")
+        self.plan_spec = surfaces_spec(
             cost_model, self.protocols, self.fleet_sizes,
-            solver=batched, **self.surface_grid)
+            solver=batched, **grid)
+        self.surfaces = PlannerService().build_surfaces(self.plan_spec)
         self.rebuilder = SurfaceRebuilder(
             cost_model, self.protocols, solver=batched,
             executor=executor, **self.surface_grid)

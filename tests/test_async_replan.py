@@ -605,3 +605,91 @@ class TestBoundedQueuedStates:
         # both requesters' ratios survive (x the 1.0 pad factor)
         assert any(abs(s - 10.0) < 1e-9 for s in req.pt_scale)
         assert any(abs(s - 30.0) < 1e-9 for s in req.pt_scale)
+
+
+class TestExecutorContract:
+    """The executor protocol: submit() is required, shutdown() is
+    optional, and a dead executor is a failed build — never a crash in
+    the serving thread or in close()."""
+
+    def _rb(self, executor):
+        return SurfaceRebuilder(paper_cost_model("mobilenet_v2", "esp_now"),
+                                dict(PROTOCOLS), executor=executor, **GRID)
+
+    def test_dead_process_pool_surfaces_error_not_crash(self):
+        """Regression: submitting to an already-terminated
+        ProcessPoolExecutor raised out of poll() and left _inflight
+        wedged. The submit failure must surface like any failed build
+        (stashed, re-raised once) and leave the rebuilder serviceable."""
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+
+        pool = ProcessPoolExecutor(max_workers=1,
+                                   mp_context=mp.get_context("spawn"))
+        pool.shutdown(wait=True)  # dead before the rebuilder ever submits
+        rb = self._rb(pool)
+        pt = ESP_NOW.packet_time_s()
+        assert rb.request(2, {"esp_now": (10 * pt, 0.0)}) == "queued"
+        with pytest.raises(RuntimeError,
+                           match="async surface rebuild failed"):
+            rb.poll(2)  # launches: submit raises, error is stashed
+            rb.poll(2)  # stashed error re-raised here at the latest
+        assert rb.inflight() is None  # not wedged on the failed launch
+        # still serviceable: errors re-raise once, then polls are clean
+        assert rb.poll(2) is None
+        # and shutdown() tolerates the dead injected pool (and is
+        # idempotent)
+        rb.shutdown()
+        rb.shutdown()
+
+    def test_shutdown_tolerates_executor_without_shutdown(self):
+        """ManualExecutor has no shutdown() — the contract says that is
+        fine, including after the rebuilder created nothing itself."""
+        rb = self._rb(ManualExecutor())
+        pt = ESP_NOW.packet_time_s()
+        rb.request(2, {"esp_now": (10 * pt, 0.0)})
+        rb.shutdown()
+        rb.shutdown()
+
+    def test_shutdown_tolerates_broken_own_executor(self):
+        """Even the internally created executor is closed defensively:
+        a shutdown() that raises must not escape close()."""
+        class _ExplodingExecutor:
+            def submit(self, fn):  # pragma: no cover - never launched
+                raise AssertionError("not used")
+
+            def shutdown(self, wait=True):
+                raise OSError("pool already reaped")
+
+        rb = self._rb(None)
+        rb._executor = _ExplodingExecutor()
+        rb._own_executor = True
+        rb.shutdown()  # must swallow the OSError
+        assert rb._executor is None
+
+    def test_process_pool_build_adopts_and_matches_sync(self):
+        """Live process pool: the pickled-spec build path publishes with
+        the same generation/swap semantics and the adopted surface is
+        node-identical to the synchronous build."""
+        import time as _time
+        import multiprocessing as mp
+        from concurrent.futures import ProcessPoolExecutor
+
+        pool = ProcessPoolExecutor(max_workers=1,
+                                   mp_context=mp.get_context("spawn"))
+        rb = self._rb(pool)
+        try:
+            pt = ESP_NOW.packet_time_s()
+            rb.request(2, {"esp_now": (10 * pt, 0.01)})
+            got = None
+            deadline = _time.monotonic() + 120.0
+            while got is None and _time.monotonic() < deadline:
+                got = rb.poll(2)
+                if got is None:
+                    _time.sleep(0.05)
+            assert got is not None, "process-pool rebuild never adopted"
+            assert rb.builds_completed == 1 and rb.inflight() is None
+            _assert_node_identical(got, rb.build_sync(rb.last_request)[2])
+        finally:
+            rb.shutdown()
+            pool.shutdown(wait=True)

@@ -269,6 +269,41 @@ class TestCheckGateway:
                    for f in fails)
 
 
+def good_planner():
+    r = {}
+    for key in CB.PLANNER_KEYS:
+        _set(r, key, 1.0)
+    for key in CB.PLANNER_FLAGS:
+        _set(r, key, True)
+    _set(r, "benchmark", "planner_scale")
+    _set(r, "mode", "smoke")
+    _set(r, "solve.n_scenarios", 2000)
+    return r
+
+
+class TestCheckPlanner:
+    def test_good_report_is_green(self):
+        assert CB.check_planner(good_planner(), good_planner(), 3.0) == []
+
+    def test_tripped_flag_fails(self):
+        for flag in CB.PLANNER_FLAGS:
+            r = good_planner()
+            _set(r, flag, False)
+            fails = CB.check_planner(r, good_planner(), 3.0)
+            assert any(flag in f for f in fails), flag
+
+    def test_missing_rebuild_section_fails(self):
+        r = good_planner()
+        del r["rebuild"]
+        fails = CB.check_planner(r, good_planner(), 3.0)
+        assert any("rebuild.pool_parity_ok" in f for f in fails)
+
+    def test_no_ratio_gate_by_design(self):
+        # spawn cost varies >3x across hosts: the planner gate is
+        # schema + flags only
+        assert CB.PLANNER_RATIOS == ()
+
+
 class TestCommittedBaselines:
     """The committed full-run reports must pass as their own candidates
     — the exact invocation the CI bench-smoke job makes, so a schema
@@ -288,6 +323,11 @@ class TestCommittedBaselines:
         with open(ROOT / "BENCH_gateway.json") as f:
             rep = json.load(f)
         assert CB.check_gateway(rep, copy.deepcopy(rep), 3.0) == []
+
+    def test_bench_planner_json_green(self):
+        with open(ROOT / "BENCH_planner.json") as f:
+            rep = json.load(f)
+        assert CB.check_planner(rep, copy.deepcopy(rep), 3.0) == []
 
 
 class TestCli:

@@ -125,6 +125,28 @@ GATEWAY_FLAGS = (
 # collapse toward 1/drifted means per-session solves are back.
 GATEWAY_RATIOS = (("storm.coalesce_per_drifted", "higher"),)
 
+PLANNER_KEYS = (
+    "benchmark", "mode",
+    "solve.n_scenarios", "solve.wall_s", "solve.scenarios_per_sec",
+    "solve.us_per_scenario",
+    "serialization.spec_bytes", "serialization.roundtrip_us",
+    "serialization.overhead_pct_of_solve", "serialization.roundtrip_exact",
+    "parity.spec_path_identical",
+    "rebuild.in_process_wall_s", "rebuild.process_pool_wall_s",
+    "rebuild.pool_parity_ok", "rebuild.zero_stale_adoptions",
+)
+PLANNER_FLAGS = (
+    "serialization.roundtrip_exact",
+    "parity.spec_path_identical",
+    "rebuild.pool_parity_ok",
+    "rebuild.zero_stale_adoptions",
+)
+# deliberately empty: the planner report's only dimensionless ratio
+# (pool_over_inprocess_x) is dominated by worker spawn + import, which
+# varies far more than 3x across hosts. The planner gate is schema +
+# correctness flags; throughput lives in the artifact for humans.
+PLANNER_RATIOS = ()
+
 
 def _get(report: dict, dotted: str):
     """(found, value) for a dotted key path into a nested report."""
@@ -205,6 +227,12 @@ def check_gateway(candidate: dict, baseline: dict | None,
                         GATEWAY_RATIOS, max_ratio, "gateway")
 
 
+def check_planner(candidate: dict, baseline: dict | None,
+                  max_ratio: float) -> list[str]:
+    return check_report(candidate, baseline, PLANNER_KEYS, PLANNER_FLAGS,
+                        PLANNER_RATIOS, max_ratio, "planner")
+
+
 def _load(path: str) -> dict:
     with open(path) as f:
         return json.load(f)
@@ -224,12 +252,16 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--gateway-baseline",
                     default=str(ROOT / "BENCH_gateway.json"),
                     help="committed gateway baseline")
+    ap.add_argument("--planner", help="candidate planner-tier report")
+    ap.add_argument("--planner-baseline",
+                    default=str(ROOT / "BENCH_planner.json"),
+                    help="committed planner-tier baseline")
     ap.add_argument("--max-ratio", type=float, default=3.0,
                     help="tolerated ratio-metric drift vs baseline")
     args = ap.parse_args(argv)
-    if not args.sweep and not args.surface and not args.gateway:
-        ap.error("nothing to check: pass --sweep, --surface and/or "
-                 "--gateway")
+    if not (args.sweep or args.surface or args.gateway or args.planner):
+        ap.error("nothing to check: pass --sweep, --surface, --gateway "
+                 "and/or --planner")
     if args.max_ratio < 1.0:
         ap.error(f"--max-ratio must be >= 1.0, got {args.max_ratio}")
 
@@ -249,6 +281,11 @@ def main(argv: list[str] | None = None) -> int:
                                   _load(args.gateway_baseline),
                                   args.max_ratio)
         checked.append(f"gateway ({args.gateway} vs {args.gateway_baseline})")
+    if args.planner:
+        failures += check_planner(_load(args.planner),
+                                  _load(args.planner_baseline),
+                                  args.max_ratio)
+        checked.append(f"planner ({args.planner} vs {args.planner_baseline})")
 
     if failures:
         print("bench regression detected:", file=sys.stderr)
